@@ -1,0 +1,101 @@
+"""Dry-run sweep driver: run every (arch × shape × mesh) cell in its own
+subprocess (the XLA 512-device flag must be set before jax init, and a
+failing cell must not kill the sweep).  Results append to a JSONL file.
+
+Usage:
+    PYTHONPATH=src python benchmarks/dryrun_sweep.py \
+        --out results/dryrun.jsonl [--only lm|gnn|recsys|tc] [--mesh pod]
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def list_cells():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--list"],
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        capture_output=True,
+        text=True,
+    )
+    return [l.strip() for l in out.stdout.splitlines() if l.strip()]
+
+
+FAMILY = {
+    "chatglm3-6b": "lm", "qwen2-0.5b": "lm", "qwen1.5-110b": "lm",
+    "grok-1-314b": "lm", "deepseek-v3-671b": "lm",
+    "nequip": "gnn", "graphcast": "gnn", "gat-cora": "gnn",
+    "equiformer-v2": "gnn", "dlrm-mlperf": "recsys",
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--skip-done", action="store_true", default=True)
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if os.path.exists(args.out):
+        for line in open(args.out):
+            try:
+                r = json.loads(line)
+                if r.get("status") == "ok":
+                    done.add(r["name"])
+            except json.JSONDecodeError:
+                pass
+
+    cells = list_cells()
+    todo = []
+    for c in cells:
+        arch, shape, mesh = c.split(":")
+        fam = FAMILY.get(arch, "tc")
+        if args.only and fam != args.only:
+            continue
+        if args.mesh and mesh != args.mesh:
+            continue
+        if c in done:
+            continue
+        todo.append(c)
+
+    print(f"{len(todo)} cells to run ({len(done)} already done)")
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+    for i, cell in enumerate(todo):
+        t0 = time.time()
+        try:
+            proc = subprocess.run(
+                [
+                    sys.executable, "-m", "repro.launch.dryrun",
+                    "--cell", cell, "--out", args.out,
+                ],
+                env=env,
+                capture_output=True,
+                text=True,
+                timeout=args.timeout,
+            )
+            status = "ok" if proc.returncode == 0 else "error"
+            if status == "error":
+                sys.stderr.write(proc.stdout[-500:] + proc.stderr[-500:])
+        except subprocess.TimeoutExpired:
+            status = "timeout"
+            with open(args.out, "a") as f:
+                f.write(
+                    json.dumps({"name": cell, "status": "timeout"}) + "\n"
+                )
+        dt = time.time() - t0
+        print(
+            f"[{i+1}/{len(todo)}] {cell}: {status} ({dt:.0f}s)", flush=True
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Paper Fig. 1: parallel efficiency (q0^2·T_q0 / p·T_p) for ppt/tct."""
+from __future__ import annotations
+
+import sys
+
+from .common import csv_row
+from .table2_scaling import run as run_table2
+
+
+def main(quick=False):
+    rows = run_table2(quick=quick)
+    p0, t0_ppt, t0_tct = (
+        rows[0]["ranks"],
+        rows[0]["ppt"],
+        rows[0]["tct"],
+    )
+    out = []
+    for r in rows:
+        p = r["ranks"]
+        eff_ppt = (p0 * t0_ppt) / (p * r["ppt"])
+        eff_tct = (p0 * t0_tct) / (p * r["tct"])
+        out.append((p, eff_ppt, eff_tct))
+        print(
+            csv_row(
+                f"fig1/ranks{p}",
+                0.0,
+                f"eff_ppt={eff_ppt:.3f};eff_tct={eff_tct:.3f}",
+            )
+        )
+    return out
+
+
+if __name__ == "__main__":
+    main("--quick" in sys.argv)

@@ -1,0 +1,37 @@
+"""Paper Fig. 2: operation rate (kOps/s) of the tct phase across ranks.
+
+"Ops" = the paper's probe count — we use the plan's exact per-device probe
+work (sum over shifts of min-fragment lengths) divided by measured tct
+wall time."""
+from __future__ import annotations
+
+import sys
+
+from .common import csv_row, run_tc_subprocess
+
+
+def main(quick=False):
+    from repro.core import build_plan, preprocess, rmat
+
+    scale = 11 if quick else 13
+    g, _ = preprocess(rmat(scale, 16))
+    grids = (1, 2) if quick else (1, 2, 3, 4)
+    out = []
+    for q in grids:
+        plan = build_plan(g, q)
+        ops = float(plan.stats.probe_work_per_device_shift.sum())
+        r = run_tc_subprocess(f"rmat:{scale}", q)
+        rate = ops / max(r["tct_seconds"], 1e-9) / 1e3
+        out.append((q * q, rate))
+        print(
+            csv_row(
+                f"fig2/ranks{q*q}",
+                r["tct_seconds"] * 1e6,
+                f"kops_per_s={rate:.0f}",
+            )
+        )
+    return out
+
+
+if __name__ == "__main__":
+    main("--quick" in sys.argv)

@@ -1,0 +1,51 @@
+"""Kernel microbenchmark: tc_tile popcount vs MXU vs jnp ref (interpret
+mode timing on CPU is directional only; the BlockSpec/VMEM structure is
+what the TPU target consumes)."""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from .common import csv_row, timeit
+
+
+def main(quick=False):
+    from repro.kernels.tc_tile.ops import tile_pair_count
+    from repro.kernels.tc_tile.ref import tile_triple_counts_ref
+
+    nt, ntr = (4, 8) if quick else (16, 64)
+    ka, kb, km = jax.random.split(jax.random.key(0), 3)
+    A = jax.random.bits(ka, (nt, 128, 4), dtype=jnp.uint32)
+    B = jax.random.bits(kb, (nt, 128, 4), dtype=jnp.uint32)
+    M = jax.random.bits(km, (nt, 128, 4), dtype=jnp.uint32)
+    trips = jnp.concatenate(
+        [
+            jax.random.randint(jax.random.key(1), (ntr, 3), 0, nt),
+            jnp.ones((ntr, 1), jnp.int32),
+        ],
+        axis=1,
+    ).astype(jnp.int32)
+
+    rows = []
+    for mode in ("popcount", "mxu"):
+        t = timeit(
+            lambda: tile_pair_count(
+                trips, A, B, M, mode=mode, interpret=True
+            ).block_until_ready()
+        )
+        rows.append((f"kernels/tc_tile_{mode}", t * 1e6))
+    t = timeit(
+        lambda: jnp.sum(
+            tile_triple_counts_ref(trips, A, B, M)
+        ).block_until_ready()
+    )
+    rows.append(("kernels/tc_tile_ref", t * 1e6))
+    for name, us in rows:
+        print(csv_row(name, us, f"triples={ntr}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main("--quick" in sys.argv)

@@ -1,0 +1,87 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun.jsonl (run after benchmarks/dryrun_sweep.py)."""
+import json
+import sys
+
+
+def fmt_t(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}µs"
+
+
+def fmt_b(x):
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x/div:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def main(path="results/dryrun.jsonl"):
+    rows = {}
+    for line in open(path):
+        r = json.loads(line)
+        if r.get("status") == "ok":
+            rows[r["name"]] = r
+
+    def emit(names, title):
+        print(f"\n### {title}\n")
+        print(
+            "| cell | mesh | t_compute | t_memory | t_collective |"
+            " bottleneck | useful_frac | HBM/device |"
+        )
+        print("|---|---|---|---|---|---|---|---|")
+        for n in names:
+            r = rows.get(n)
+            if not r:
+                print(f"| {n} | — | missing | | | | | |")
+                continue
+            mem = r.get("memory_per_device") or {}
+            hbm = (
+                mem.get("args", 0)
+                + mem.get("outputs", 0)
+                + mem.get("temps", 0)
+                - mem.get("aliased", 0)
+            )
+            print(
+                f"| {n.rsplit(':',1)[0]} | {r['mesh']} |"
+                f" {fmt_t(r['t_compute'])} | {fmt_t(r['t_memory'])} |"
+                f" {fmt_t(r['t_collective'])} | {r['bottleneck']} |"
+                f" {r.get('useful_fraction', 0):.3f} | {fmt_b(hbm)} |"
+            )
+
+    lm = ["chatglm3-6b", "qwen2-0.5b", "qwen1.5-110b", "grok-1-314b",
+          "deepseek-v3-671b"]
+    lm_shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    gnn = ["nequip", "graphcast", "gat-cora", "equiformer-v2"]
+    gnn_shapes = ["full_graph_sm", "minibatch_lg", "ogb_products", "molecule"]
+    rec_shapes = ["train_batch", "serve_p99", "serve_bulk", "retrieval_cand"]
+    tc = ["tc-twitter", "tc-friendster", "tc-g500-s26", "tc-g500-s27",
+          "tc-g500-s28", "tc-g500-s29"]
+
+    for mesh in ("pod", "multipod"):
+        emit(
+            [f"{a}:{s}:{mesh}" for a in lm for s in lm_shapes],
+            f"LM family — {mesh} ({256 if mesh=='pod' else 512} chips)",
+        )
+        emit(
+            [f"{a}:{s}:{mesh}" for a in gnn for s in gnn_shapes],
+            f"GNN family — {mesh}",
+        )
+        emit(
+            [f"dlrm-mlperf:{s}:{mesh}" for s in rec_shapes],
+            f"recsys — {mesh}",
+        )
+    emit(
+        [f"{g}:{s}:{'multipod' if s=='cannon25d' else 'pod'}"
+         for g in tc
+         for s in ("cannon", "cannonopt", "cannon2l", "cannon25d", "oned")],
+        "Triangle counting — paper graphs (2D Cannon / +H1b blob-compress /"
+        " +H1a bucketed / 2.5D multi-pod / 1D baseline)",
+    )
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

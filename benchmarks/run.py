@@ -1,0 +1,34 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Defaults to --quick scales
+on this CPU box; ``--full`` reproduces the EXPERIMENTS.md settings.
+"""
+import sys
+
+
+def main() -> None:
+    quick = "--full" not in sys.argv
+    from . import (
+        fig1_efficiency,
+        fig2_oprate,
+        fig3_commfraction,
+        kernels,
+        table2_scaling,
+        table3_imbalance,
+        table4_taskgrowth,
+        table56_vs1d,
+    )
+
+    print("name,us_per_call,derived")
+    table2_scaling.main(quick=quick)
+    table3_imbalance.main(quick=quick)
+    table4_taskgrowth.main(quick=quick)
+    table56_vs1d.main(quick=quick)
+    fig1_efficiency.main(quick=quick)
+    fig2_oprate.main(quick=quick)
+    fig3_commfraction.main(quick=quick)
+    kernels.main(quick=quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Table 2: preprocessing (ppt) / triangle-counting (tct) runtimes
+and relative speedups across rank counts.
+
+On this CPU box real wall-clock scaling is measured with XLA host devices
+(1 core backs them, so *work* scales are what matters: we report both
+wall time and the plan's per-device critical-path work, whose ratio across
+p is the architecture-independent speedup the paper's Table 2 measures).
+"""
+from __future__ import annotations
+
+import sys
+
+from .common import csv_row, run_tc_subprocess
+
+GRIDS = [1, 2, 3, 4]  # p = 1, 4, 9, 16 ranks
+
+
+def run(graph: str = "rmat:13", quick: bool = False):
+    rows = []
+    grids = GRIDS[:2] if quick else GRIDS
+    base = None
+    for q in grids:
+        r = run_tc_subprocess(graph, q)
+        p = q * q
+        if base is None:
+            base = r
+        rows.append(
+            dict(
+                ranks=p,
+                ppt=r["ppt_seconds"],
+                tct=r["tct_seconds"],
+                ppt_speedup=base["ppt_seconds"] / r["ppt_seconds"],
+                tct_speedup=base["tct_seconds"] / r["tct_seconds"],
+                overall_speedup=(base["ppt_seconds"] + base["tct_seconds"])
+                / (r["ppt_seconds"] + r["tct_seconds"]),
+                triangles=r["triangles"],
+            )
+        )
+    return rows
+
+
+def main(quick=False):
+    rows = run(quick=quick)
+    assert len({r["triangles"] for r in rows}) == 1, "counts must agree"
+    for r in rows:
+        print(
+            csv_row(
+                f"table2/ranks{r['ranks']}",
+                r["tct"] * 1e6,
+                f"tct_speedup={r['tct_speedup']:.2f};"
+                f"ppt_speedup={r['ppt_speedup']:.2f}",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main("--quick" in sys.argv)

@@ -1,0 +1,48 @@
+"""Fault-tolerance demo: kill the Cannon loop mid-run, resume from the
+shift-level checkpoint, and still produce the exact count.
+
+    PYTHONPATH=src python examples/fault_tolerance.py
+"""
+import os
+import shutil
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CKPT = "/tmp/repro_tc_ft_demo"
+
+
+def run(extra, ndev=4):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    cmd = [
+        sys.executable, "-m", "repro.launch.tc_run",
+        "--graph", "rmat:11,8", "--grid", "2",
+        "--ckpt-dir", CKPT, "--verify", *extra,
+    ]
+    return subprocess.run(cmd, env=env, capture_output=True, text=True)
+
+
+def main():
+    shutil.rmtree(CKPT, ignore_errors=True)
+
+    print("run 1: failure injected at shift 1 (restores mid-loop) ...")
+    p = run(["--fail-at-shift", "1"])
+    print(p.stdout)
+    assert p.returncode == 0, p.stderr[-500:]
+
+    print("run 2: fresh run, then resume-from-checkpoint replay ...")
+    shutil.rmtree(CKPT, ignore_errors=True)
+    p = run([])
+    assert p.returncode == 0, p.stderr[-500:]
+    # resume again: checkpoint holds the final state; re-running verifies
+    # restore path end-to-end (it resumes at shift q and just re-verifies)
+    p = run([])
+    print(p.stdout)
+    assert p.returncode == 0, p.stderr[-500:]
+    print("fault-tolerance demo passed ✓")
+
+
+if __name__ == "__main__":
+    main()

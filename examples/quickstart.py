@@ -1,0 +1,37 @@
+"""Quickstart: count triangles with the paper's 2D algorithm.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs the full pipeline (degree-order preprocess -> 2D-cyclic plan ->
+Cannon schedule) on a generated Graph500 RMAT graph and verifies against
+the exact host oracle.  On one device the grid degenerates to 1x1 but the
+code path is identical to the 256-chip production mesh.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import count_triangles, rmat, triangle_count_oracle
+
+
+def main():
+    g = rmat(scale=12, edge_factor=16, seed=7)
+    print(f"graph: {g.name}  n={g.n}  m={g.m}")
+
+    res = count_triangles(g, q=1, schedule="cannon", method="search")
+    print(f"triangles           : {res.triangles}")
+    print(f"preprocess seconds  : {res.preprocess_seconds:.3f}")
+    print(f"count seconds       : {res.count_seconds:.3f}")
+
+    expected = triangle_count_oracle(g)
+    assert res.triangles == expected, (res.triangles, expected)
+    print(f"verified against host oracle: {expected} ✓")
+
+    # the ⟨i,j,k⟩ probe direction (paper §3) gives the same count
+    res2 = count_triangles(g, q=1, probe_shorter=False)
+    assert res2.triangles == expected
+    print("⟨j,i,k⟩ and ⟨i,j,k⟩ enumeration agree ✓")
+
+
+if __name__ == "__main__":
+    main()

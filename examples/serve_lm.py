@@ -1,0 +1,57 @@
+"""Serve a small LM with batched requests: prefill + KV-cached greedy
+decode through the production serving path (per the paper's kind, the
+primary end-to-end driver is distributed_tc.py; this exercises deliverable
+(b)'s serving scenario on the LM family).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.steps import build_lm_decode_step
+from repro.models.transformer import init_kv_cache, lm_init
+
+
+def main():
+    cfg = get_config("qwen2-0.5b-smoke")  # reduced dims, same architecture
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
+    )
+    params = lm_init(jax.random.key(0), cfg)
+    decode, _ = build_lm_decode_step(cfg, mesh)
+
+    batch, max_len, gen = 8, 64, 24
+    cache = init_kv_cache(cfg, batch, max_len)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(1, cfg.vocab, size=(batch, 8)).astype(np.int32)
+
+    # prefill via repeated decode (teacher-forcing the prompt tokens)
+    cache_len = jnp.zeros((batch,), jnp.int32)
+    tok = jnp.asarray(prompts[:, 0])
+    for i in range(1, prompts.shape[1]):
+        _, cache = decode(params, cache, tok, cache_len)
+        cache_len = cache_len + 1
+        tok = jnp.asarray(prompts[:, i])
+
+    # timed batched greedy decode
+    outs = []
+    t0 = time.perf_counter()
+    for _ in range(gen):
+        tok, cache = decode(params, cache, tok, cache_len)
+        cache_len = cache_len + 1
+        outs.append(np.asarray(tok))
+    dt = time.perf_counter() - t0
+    toks = np.stack(outs, 1)
+    print(f"generated {batch}x{gen} tokens in {dt:.2f}s "
+          f"({batch*gen/dt:.0f} tok/s on CPU)")
+    print("sample:", toks[0][:12])
+    assert np.all(toks < cfg.vocab) and np.all(toks >= 0)
+    print("ok ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Train a GAT on a synthetic Cora-like citation graph to convergence,
+with checkpoints and restart-safe data state.
+
+    PYTHONPATH=src python examples/train_gnn.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.ckpt import CheckpointManager
+from repro.models.gnn_steps import build_gnn_train_step, gnn_init, gnn_loss
+
+
+def synthetic_cora(rng, n=600, classes=7, d=64, intra=0.02, inter=0.002):
+    """Stochastic block model + class-correlated features."""
+    labels = rng.integers(0, classes, n)
+    same = labels[:, None] == labels[None, :]
+    p = np.where(same, intra, inter)
+    adj = rng.random((n, n)) < p
+    adj = np.triu(adj, 1)
+    src, dst = np.nonzero(adj | adj.T)
+    # self loops
+    src = np.concatenate([src, np.arange(n)])
+    dst = np.concatenate([dst, np.arange(n)])
+    feats = 0.5 * rng.normal(size=(n, d))
+    feats[:, :classes] += 2.5 * np.eye(classes)[labels]
+    return feats, labels, src, dst
+
+
+def main():
+    rng = np.random.default_rng(0)
+    cfg = get_config("gat-cora")  # the real 2-layer 8-head config
+    feats, labels, src, dst = synthetic_cora(rng)
+    n, d = feats.shape
+    train_mask = (rng.random(n) < 0.6).astype(np.float32)
+
+    batch = dict(
+        feats=jnp.asarray(feats, jnp.float32),
+        edge_src=jnp.asarray(src, jnp.int32),
+        edge_dst=jnp.asarray(dst, jnp.int32),
+        labels=jnp.asarray(labels, jnp.int32),
+        label_mask=jnp.asarray(train_mask),
+    )
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
+    )
+    params = gnn_init(jax.random.key(0), cfg, d)
+    build, info = build_gnn_train_step(cfg, mesh, d)
+    fn = build(jax.eval_shape(lambda: batch))
+    opt = info["opt_init"](params)
+    mgr = CheckpointManager("/tmp/repro_gat_ckpt", keep=2, async_save=False)
+
+    loss0 = float(gnn_loss(params, cfg, batch)[0])
+    for step in range(200):
+        params, opt, m = fn(params, opt, batch, step)
+        if step % 50 == 0:
+            print(f"step {step:4d}  loss {float(m['loss']):.4f}")
+            mgr.save(step, {"params": params}, extra={"next_step": step + 1})
+
+    from repro.models.gnn.gat import gat_apply
+
+    logits = gat_apply(params, cfg, batch["feats"], batch["edge_src"], batch["edge_dst"])
+    pred = np.asarray(jnp.argmax(logits, -1))
+    test = train_mask < 0.5
+    acc = float((pred[test] == labels[test]).mean())
+    print(f"held-out accuracy: {acc:.3f} (loss {loss0:.3f} -> {float(m['loss']):.3f})")
+    assert acc > 0.7, "GAT failed to learn the SBM task"
+    print("ok ✓")
+
+
+if __name__ == "__main__":
+    main()

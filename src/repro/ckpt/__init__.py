@@ -1,0 +1,18 @@
+"""Fault-tolerant checkpointing (no orbax on this box — built from scratch).
+
+* atomic writes: tmp file + fsync + rename, manifest with content hashes;
+* keep-last-k rotation + an async writer thread (training never blocks on
+  serialization);
+* restore onto a *different* mesh: arrays are saved as global numpy with
+  their PartitionSpec recorded; on load they are re-sharded for whatever
+  mesh the (possibly re-planned, elastic) job now runs — Cannon state can
+  resume as SUMMA state on a rectangular grid after device loss;
+* TC shift-level resume: (shift index, per-device partial counts) lets a
+  restarted job skip completed Cannon shifts.
+"""
+from .checkpoint import (  # noqa: F401
+    load_checkpoint,
+    save_checkpoint,
+    latest_step,
+)
+from .manager import CheckpointManager  # noqa: F401

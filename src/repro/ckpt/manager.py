@@ -1,0 +1,88 @@
+"""Checkpoint manager: rotation + async writer thread."""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+from typing import Optional
+
+from .checkpoint import latest_step, load_checkpoint, save_checkpoint
+
+__all__ = ["CheckpointManager"]
+
+
+class CheckpointManager:
+    """keep-last-k rotation with an optional background writer.
+
+    The async path snapshots device arrays to host (blocking only on the
+    transfer), then serializes + fsyncs on a worker thread so the train
+    loop overlaps the write with the next steps.
+    """
+
+    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._q: "queue.Queue" = queue.Queue(maxsize=2)
+        self._worker: Optional[threading.Thread] = None
+        self._errors = []
+        if async_save:
+            self._worker = threading.Thread(target=self._run, daemon=True)
+            self._worker.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree, extra = item
+            try:
+                save_checkpoint(self.directory, step, tree, extra=extra)
+                self._rotate()
+            except Exception as e:  # noqa: BLE001
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def save(self, step: int, tree, *, extra=None):
+        if self.async_save:
+            import jax
+            import numpy as np
+
+            host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+            self._q.put((step, host_tree, extra))
+        else:
+            save_checkpoint(self.directory, step, tree, extra=extra)
+            self._rotate()
+
+    def wait(self):
+        if self.async_save:
+            self._q.join()
+        if self._errors:
+            raise self._errors[0]
+
+    def _rotate(self):
+        steps = sorted(
+            int(f[len("step_") : -len(".json")])
+            for f in os.listdir(self.directory)
+            if f.startswith("step_") and f.endswith(".json")
+        )
+        for s in steps[: -self.keep]:
+            for suffix in (".json", ".npz"):
+                p = os.path.join(self.directory, f"step_{s:010d}{suffix}")
+                if os.path.exists(p):
+                    os.remove(p)
+
+    def restore_latest(self, like, *, mesh=None, specs=None):
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None, None
+        tree, extra = load_checkpoint(
+            self.directory, step, like, mesh=mesh, specs=specs
+        )
+        return step, tree, extra
+
+    def close(self):
+        if self.async_save and self._worker is not None:
+            self._q.put(None)
+            self._worker.join(timeout=10)

@@ -1,0 +1,33 @@
+"""Architecture + graph configs with a name registry (``--arch <id>``)."""
+from .base import (  # noqa: F401
+    GNN_SHAPES,
+    LM_SHAPES,
+    RECSYS_SHAPES,
+    GNNConfig,
+    LMConfig,
+    RecsysConfig,
+    TCGraphConfig,
+    get_config,
+)
+
+ASSIGNED_ARCHS = [
+    "chatglm3-6b",
+    "qwen2-0.5b",
+    "qwen1.5-110b",
+    "grok-1-314b",
+    "deepseek-v3-671b",
+    "nequip",
+    "graphcast",
+    "gat-cora",
+    "equiformer-v2",
+    "dlrm-mlperf",
+]
+
+TC_GRAPHS = [
+    "tc-twitter",
+    "tc-friendster",
+    "tc-g500-s26",
+    "tc-g500-s27",
+    "tc-g500-s28",
+    "tc-g500-s29",
+]

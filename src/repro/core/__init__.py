@@ -1,0 +1,15 @@
+"""Core: the paper's 2D distributed triangle-counting algorithm.
+
+Public surface:
+
+* :func:`count_triangles` — full pipeline (preprocess -> plan -> schedule).
+* :class:`Graph`, generators (:func:`rmat`, :func:`erdos_renyi`, ...).
+* :func:`build_plan` / :func:`analytic_plan` — host planner.
+* schedules: :mod:`.cannon` (paper), :mod:`.summa` (rectangular/elastic),
+  :mod:`.onedim` (1D-decomposition baseline the paper compares against).
+"""
+from .api import TCResult, count_triangles, make_grid_mesh  # noqa: F401
+from .graph import Graph, triangle_count_oracle  # noqa: F401
+from .generators import erdos_renyi, named_graph, rmat  # noqa: F401
+from .plan import TCPlan, analytic_plan, build_plan  # noqa: F401
+from .preprocess import degree_order, preprocess  # noqa: F401

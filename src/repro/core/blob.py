@@ -1,0 +1,40 @@
+"""Single-buffer ("blob") packing for shift communication.
+
+The paper eliminates MPI (de)serialization cost by storing each block's
+arrays inside one contiguous allocation and sending that blob.  The JAX
+analogue: concatenate all per-block arrays into one flat int32 buffer so a
+shift is exactly **one** ``ppermute`` per operand instead of one per array.
+Offsets are static (plan maxima), so packing/unpacking are free reshapes in
+XLA (fused with the collective).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["pack_blob", "unpack_blob", "blob_layout"]
+
+
+def blob_layout(shapes: Sequence[Tuple[int, ...]]):
+    """Static (offset, size, shape) triples for a list of array shapes."""
+    layout = []
+    off = 0
+    for shp in shapes:
+        size = 1
+        for d in shp:
+            size *= d
+        layout.append((off, size, tuple(shp)))
+        off += size
+    return layout, off
+
+
+def pack_blob(arrays):
+    """Flatten + concatenate int32 arrays into one buffer."""
+    return jnp.concatenate([a.reshape(-1) for a in arrays])
+
+
+def unpack_blob(blob, layout):
+    return [
+        blob[off : off + size].reshape(shape) for off, size, shape in layout
+    ]

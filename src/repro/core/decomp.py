@@ -1,0 +1,110 @@
+"""2D cyclic decomposition of the upper-triangular adjacency matrix.
+
+The processor grid is ``r x c`` (square ``q x q`` for Cannon; SUMMA accepts
+rectangular).  Following the paper, matrix entry ``(i, j)`` belongs to block
+``(i % r, j % c)`` with *transformed* (local) index ``(i // r, j // c)`` —
+"the adjacency list of a vertex v_i is accessed using the transformed index
+v_i ÷ √p in the per-processor CSR representation".
+
+Because L = Uᵀ, a single cyclic decomposition of U provides everything:
+
+* the task (mask) block of device ``(x, y)`` is ``U_{x,y}``;
+* the Cannon "A" operand at shift ``s`` is ``U_{x, (x+y+s) % q}`` (rows i,
+  columns k);
+* the Cannon "B" operand is ``L_{(x+y+s) % q, y} = (U_{y, (x+y+s) % q})ᵀ`` —
+  i.e. the *same* block family, read as rows-j-by-columns-k.  The device
+  therefore intersects rows of two U blocks sharing their column range,
+  which is exactly Eq. (6) of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from .graph import Graph
+
+__all__ = ["BlockCSR", "cyclic_blocks", "block_of", "local_index"]
+
+
+def block_of(i: np.ndarray, j: np.ndarray, r: int, c: int):
+    return i % r, j % c
+
+
+def local_index(i: np.ndarray, j: np.ndarray, r: int, c: int):
+    return i // r, j // c
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockCSR:
+    """One cyclic block of U in CSR form with a doubly-compressed row list.
+
+    ``active_rows`` lists local rows with non-empty adjacency fragments —
+    the paper's doubly-sparse traversal structure; everything else loops
+    only over these.
+    """
+
+    bx: int
+    by: int
+    n_rows: int  # local rows = ceil(n / r)
+    n_cols: int  # local cols = ceil(n / c)
+    indptr: np.ndarray  # (n_rows + 1,) int64
+    indices: np.ndarray  # (nnz,) int64 local column ids, sorted per row
+    active_rows: np.ndarray  # (n_active,) int64
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    def max_row_len(self) -> int:
+        if self.n_rows == 0:
+            return 0
+        return int(np.max(np.diff(self.indptr), initial=0))
+
+
+def cyclic_blocks(graph: Graph, r: int, c: int) -> List[List[BlockCSR]]:
+    """Decompose U(graph) into an ``r x c`` grid of cyclic blocks.
+
+    Assumes the graph is already degree-ordered (the decomposition is valid
+    regardless; balance relies on the ordering).  Returns ``blocks[x][y]``.
+    """
+    n = graph.n
+    rows_loc = -(-n // r)
+    cols_loc = -(-n // c)
+    i = graph.edges[:, 0]
+    j = graph.edges[:, 1]
+    bx, by = block_of(i, j, r, c)
+    li, lj = local_index(i, j, r, c)
+
+    # bucket edges by block id, then build each block's CSR in one pass
+    bid = bx * c + by
+    order = np.lexsort((lj, li, bid))
+    bid_s, li_s, lj_s = bid[order], li[order], lj[order]
+    boundaries = np.searchsorted(bid_s, np.arange(r * c + 1))
+
+    out: List[List[BlockCSR]] = []
+    for x in range(r):
+        row_blocks = []
+        for y in range(c):
+            b = x * c + y
+            lo, hi = boundaries[b], boundaries[b + 1]
+            rows = li_s[lo:hi]
+            cols = lj_s[lo:hi]
+            counts = np.bincount(rows, minlength=rows_loc)
+            indptr = np.zeros(rows_loc + 1, dtype=np.int64)
+            np.cumsum(counts, out=indptr[1:])
+            active = np.nonzero(counts)[0]
+            row_blocks.append(
+                BlockCSR(
+                    bx=x,
+                    by=y,
+                    n_rows=rows_loc,
+                    n_cols=cols_loc,
+                    indptr=indptr,
+                    indices=cols.astype(np.int64),
+                    active_rows=active.astype(np.int64),
+                )
+            )
+        out.append(row_blocks)
+    return out

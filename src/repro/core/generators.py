@@ -1,0 +1,95 @@
+"""Graph generators: Graph500 RMAT, Erdős–Rényi, and small named graphs.
+
+The paper evaluates on twitter/friendster (real) and graph500 RMAT scales
+26–29 (synthetic, generated in memory "prior to calling the triangle
+counting routine" — we follow the same pattern).  The RMAT generator here is
+fully vectorized numpy and deterministic given a seed, so benchmarks and
+tests can regenerate identical graphs.
+
+Graph500 RMAT parameters: (a, b, c, d) = (0.57, 0.19, 0.19, 0.05),
+edge factor 16 (directed edge samples; after dedup/symmetrization the
+undirected edge count is lower, as in the reference generator).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from .graph import Graph
+
+__all__ = ["rmat", "erdos_renyi", "named_graph", "GRAPH500_PARAMS"]
+
+GRAPH500_PARAMS = (0.57, 0.19, 0.19, 0.05)
+
+
+def rmat(
+    scale: int,
+    edge_factor: int = 16,
+    params=GRAPH500_PARAMS,
+    seed: int = 0,
+    name: Optional[str] = None,
+) -> Graph:
+    """Graph500-style RMAT graph with ``n = 2**scale`` vertices.
+
+    Each of ``edge_factor * n`` directed edge samples picks one quadrant
+    per bit level; samples are then symmetrized/deduplicated into a simple
+    undirected graph (exactly what the paper does with the graph500
+    generator output).
+    """
+    n = 1 << scale
+    m_samples = edge_factor * n
+    a, b, c, d = params
+    rng = np.random.default_rng(seed)
+
+    src = np.zeros(m_samples, dtype=np.int64)
+    dst = np.zeros(m_samples, dtype=np.int64)
+    # Per level: choose quadrant with probs (a, b, c, d);
+    # bit_i of src += quadrant in {2, 3}; bit_i of dst += quadrant in {1, 3}.
+    # Graph500 also perturbs probabilities per level by +-10%; we keep the
+    # canonical fixed probabilities for reproducibility.
+    for level in range(scale):
+        u = rng.random(m_samples)
+        quad = (u >= a).astype(np.int64) + (u >= a + b) + (u >= a + b + c)
+        src |= (quad >> 1) << level
+        dst |= (quad & 1) << level
+    return Graph.from_edges(n, src, dst, name=name or f"rmat-s{scale}")
+
+
+def erdos_renyi(n: int, avg_degree: float, seed: int = 0, name=None) -> Graph:
+    """G(n, m) random graph with ~``avg_degree * n / 2`` undirected edges."""
+    rng = np.random.default_rng(seed)
+    m = int(avg_degree * n / 2)
+    src = rng.integers(0, n, size=2 * m)  # oversample to survive dedup
+    dst = rng.integers(0, n, size=2 * m)
+    g = Graph.from_edges(n, src, dst, name=name or f"er-{n}")
+    if g.m > m:
+        g = Graph(n=n, edges=g.edges[:m], name=g.name)
+    return g
+
+
+def named_graph(which: str) -> Graph:
+    """Small graphs with known triangle counts for unit tests."""
+    if which == "triangle":
+        return Graph.from_edges(3, [0, 1, 2], [1, 2, 0], name="triangle")
+    if which == "k4":
+        src, dst = zip(*[(i, j) for i in range(4) for j in range(i + 1, 4)])
+        return Graph.from_edges(4, src, dst, name="k4")
+    if which == "k10":
+        src, dst = zip(*[(i, j) for i in range(10) for j in range(i + 1, 10)])
+        return Graph.from_edges(10, src, dst, name="k10")
+    if which == "path":
+        return Graph.from_edges(5, [0, 1, 2, 3], [1, 2, 3, 4], name="path")
+    if which == "star":
+        return Graph.from_edges(8, [0] * 7, list(range(1, 8)), name="star")
+    if which == "karate":
+        import networkx as nx
+
+        g = nx.karate_club_graph()
+        src, dst = zip(*g.edges())
+        return Graph.from_edges(g.number_of_nodes(), src, dst, name="karate")
+    if which == "bull":
+        return Graph.from_edges(
+            5, [0, 0, 1, 1, 2], [1, 2, 2, 3, 4], name="bull"
+        )
+    raise ValueError(f"unknown graph {which!r}")

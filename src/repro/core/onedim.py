@@ -1,0 +1,207 @@
+"""1D-decomposition baseline (the class of algorithms the paper beats).
+
+Representative of Arifuzzaman et al.'s space-efficient variant and Kanewala
+et al.'s blocked 1D approach: vertices are 1D-cyclically partitioned over
+all ``p`` devices, each device stores only its own rows of U, and the row
+blocks rotate around a ring for ``p`` steps; a task ``(i, j)`` is counted
+at the step when ``owner(j)``'s block arrives.
+
+Per-device communication volume is ``(p-1)/p * nnz(U)`` (the whole matrix
+passes through every device) versus the 2D algorithm's
+``2 * nnz(U) * (√p-1)/p`` — the ``~√p/2`` communication advantage the paper
+claims for the 2D decomposition, which the roofline comparison in
+EXPERIMENTS.md quantifies from the compiled HLO of both.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from . import count as count_mod
+from .blob import blob_layout, pack_blob, unpack_blob
+from .graph import Graph
+
+INT = np.int32
+
+__all__ = ["OneDPlan", "build_oned_plan", "build_oned_fn"]
+
+
+@dataclasses.dataclass
+class OneDPlan:
+    n: int
+    m: int
+    p: int
+    nb: int  # local rows = ceil(n / p)
+    nnz_pad: int  # padded nnz per device
+    gmax: int  # padded tasks per (device, owner-of-j) group
+    dmax: int  # max U row length (FULL rows — 1D keeps whole adjacency)
+    chunk: int
+
+    indptr: np.ndarray  # (p, nb + 1)
+    indices: np.ndarray  # (p, nnz_pad)  LOCAL k ids (k // p) of sorted rows
+    # tasks grouped by owner(j): device d, group o holds tasks whose j%p==o
+    t_i: np.ndarray  # (p, p, gmax) local i
+    t_j: np.ndarray  # (p, p, gmax) local j (= j // p)
+    t_cnt: np.ndarray  # (p, p)
+
+    def device_arrays(self) -> Dict[str, np.ndarray]:
+        return dict(
+            indptr=self.indptr,
+            indices=self.indices,
+            t_i=self.t_i,
+            t_j=self.t_j,
+            t_cnt=self.t_cnt,
+        )
+
+    def shape_structs(self):
+        import jax
+
+        return {
+            k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+            for k, v in self.device_arrays().items()
+        }
+
+
+def build_oned_plan(graph: Graph, p: int, *, chunk: int = 512) -> OneDPlan:
+    """1D-cyclic row partition + owner-grouped task lists.
+
+    Adjacency columns are stored as (owner, local) pairs sorted by global
+    id; since the probe compares k values between two rows, we keep global
+    k ids (int32) — both fragments live in the same global column space.
+    """
+    n, m = graph.n, graph.m
+    nb = -(-n // p)
+    i = graph.edges[:, 0]
+    j = graph.edges[:, 1]
+    own = i % p
+
+    # per-device CSR over local rows, global sorted cols
+    indptr = np.zeros((p, nb + 1), dtype=INT)
+    nnz_dev = np.bincount(own, minlength=p)
+    nnz_pad = max(1, int(nnz_dev.max()))
+    indices = np.full((p, nnz_pad), n + 1, dtype=INT)
+    order = np.lexsort((j, i))
+    i_s, j_s = i[order], j[order]
+    own_s = i_s % p
+    for d in range(p):
+        sel = own_s == d
+        li = i_s[sel] // p
+        cols = j_s[sel]
+        counts = np.bincount(li, minlength=nb)
+        np.cumsum(counts, out=indptr[d, 1:])
+        indices[d, : cols.shape[0]] = cols.astype(INT)
+
+    # task groups: device d = i%p, group o = j%p
+    gcnt = np.zeros((p, p), dtype=np.int64)
+    np.add.at(gcnt, (i % p, j % p), 1)
+    gmax = max(1, int(gcnt.max()))
+    t_i = np.zeros((p, p, gmax), dtype=INT)
+    t_j = np.zeros((p, p, gmax), dtype=INT)
+    t_cnt = np.zeros((p, p), dtype=INT)
+    fill = np.zeros((p, p), dtype=np.int64)
+    for ii, jj in zip(i, j):
+        d, o = int(ii % p), int(jj % p)
+        k = fill[d, o]
+        t_i[d, o, k] = ii // p
+        t_j[d, o, k] = jj // p
+        fill[d, o] += 1
+    t_cnt[:, :] = fill.astype(INT)
+
+    u = graph.upper_csr()
+    dmax = max(1, int(np.max(np.diff(u.indptr), initial=0)))
+    return OneDPlan(
+        n=n,
+        m=m,
+        p=p,
+        nb=nb,
+        nnz_pad=nnz_pad,
+        gmax=gmax,
+        dmax=dmax,
+        chunk=min(chunk, gmax),
+        indptr=indptr,
+        indices=indices,
+        t_i=t_i,
+        t_j=t_j,
+        t_cnt=t_cnt,
+    )
+
+
+def build_oned_fn(
+    plan: OneDPlan,
+    mesh,
+    *,
+    axis: str = None,
+    count_dtype=jnp.int32,
+    probe_shorter: bool = True,
+):
+    """Ring algorithm over a 1D view of the mesh.
+
+    For multi-axis meshes the ring runs over the *last* axis only if it
+    covers all devices; otherwise callers should pass a flat 1D mesh (the
+    baseline is evaluated on its own flat mesh — it exists for comparison,
+    not production).
+    """
+    p = plan.p
+    if axis is None:
+        sizes = {a: mesh.shape[a] for a in mesh.axis_names}
+        flat = [a for a in mesh.axis_names if sizes[a] == p]
+        assert flat, f"no single mesh axis of size {p}; pass a flat mesh"
+        axis = flat[0]
+    sentinel = plan.n + 1
+
+    def spmd(indptr, indices, t_i, t_j, t_cnt):
+        sq = lambda a: a.reshape(a.shape[1:])
+        own_ptr, own_idx = sq(indptr), sq(indices)
+        ti, tj, cnt = sq(t_i), sq(t_j), sq(t_cnt)
+        d = jax.lax.axis_index(axis)
+        layout, _ = blob_layout([own_ptr.shape, own_idx.shape])
+
+        def step(carry, t):
+            blob = carry
+            nxt = jax.lax.ppermute(
+                blob, axis, perm=[(s, (s - 1) % p) for s in range(p)]
+            )
+            b_ptr, b_idx = unpack_blob(blob, layout)
+            o = (d + t) % p
+            cc = count_mod.count_pair_search(
+                own_ptr,
+                own_idx,
+                b_ptr,
+                b_idx,
+                jnp.take(ti, o, axis=0),
+                jnp.take(tj, o, axis=0),
+                jnp.take(cnt, o, axis=0),
+                dpad=plan.dmax,
+                chunk=plan.chunk,
+                probe_shorter=probe_shorter,
+                count_dtype=count_dtype,
+                sentinel=sentinel,
+            )
+            return nxt, cc
+
+        _, per = jax.lax.scan(
+            step, pack_blob([own_ptr, own_idx]), jnp.arange(p)
+        )
+        return jax.lax.psum(jnp.sum(per, dtype=count_dtype), axis)
+
+    fn = jax.jit(
+        jax.shard_map(
+            spmd,
+            mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
+            out_specs=P(),
+            check_vma=False,
+        )
+    )
+    ordered = ["indptr", "indices", "t_i", "t_j", "t_cnt"]
+
+    def call(**arrays):
+        return fn(*(arrays[k] for k in ordered))
+
+    call.lower = lambda **arrays: fn.lower(*(arrays[k] for k in ordered))
+    return call

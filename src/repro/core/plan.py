@@ -1,0 +1,369 @@
+"""Host-side execution plan for the 2D (Cannon/SUMMA/2.5D) algorithm.
+
+The planner turns a degree-ordered :class:`~repro.core.graph.Graph` into
+fixed-shape, device-ready numpy arrays, stacked over the processor grid so
+that ``shard_map`` with ``P(row_axis, col_axis)`` hands each device exactly
+its blocks:
+
+* ``a_*``  — Cannon "A" operand, pre-skewed: device ``(x, y)`` starts with
+  block ``U_{x, (x+y) % q}``  (rows *i*, columns *k*);
+* ``b_*``  — Cannon "B" operand, pre-skewed: device ``(x, y)`` starts with
+  block ``U_{y, (x+y) % q}``  (rows *j*, columns *k*; this is
+  ``L_{(x+y)%q, y}`` stored transposed — see DESIGN.md §2);
+* ``m_*``  — the static task list: nonzeros ``(i, j)`` of ``U_{x, y}``.
+
+All ragged structures are padded to plan-wide maxima (XLA needs static
+shapes); the padding fractions are part of the plan report because they are
+*measured overhead* of the TPU adaptation (DESIGN.md §10.4).
+
+The pre-skew implements Cannon's initial alignment at data-distribution
+time (the paper performs it as its first communication step; in an SPMD
+framework the initial placement is free — we simply *feed* the aligned
+blocks).  ``skew=0`` (SUMMA placement) is also available.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .decomp import BlockCSR, cyclic_blocks
+from .graph import Graph
+
+__all__ = ["TCPlan", "build_plan", "analytic_plan", "PlanStats"]
+
+INT = np.int32
+
+
+def _pad_to(x: np.ndarray, size: int, fill) -> np.ndarray:
+    out = np.full((size,), fill, dtype=x.dtype)
+    out[: x.shape[0]] = x
+    return out
+
+
+@dataclasses.dataclass
+class PlanStats:
+    """Balance statistics (paper Tables 3/4 analogues), host-computed."""
+
+    tasks_per_device: np.ndarray  # (q, q) int64 — nonzero tasks owned
+    nnz_per_block: np.ndarray  # (q, q) int64
+    probe_work_per_device_shift: np.ndarray  # (q, q, q) int64
+    task_imbalance: float  # max/avg of tasks_per_device
+    probe_imbalance: float  # max/avg of per-shift probe work
+    intersection_tasks_total: int  # paper Table 4 metric
+    padding_fraction_indices: float
+    padding_fraction_tasks: float
+
+
+@dataclasses.dataclass
+class TCPlan:
+    """Device-ready arrays + metadata for one grid factorization."""
+
+    n: int
+    m: int
+    q: int  # square grid dimension (Cannon); SUMMA reuses q x q here
+    nb: int  # local rows/cols per block = ceil(n / q)
+    nnz_pad: int  # padded nnz per block
+    tmax: int  # padded tasks per device
+    dmax: int  # max adjacency-fragment length over all blocks
+    chunk: int  # tasks per searchsorted chunk
+
+    # stacked [q, q, ...] arrays; *_indptr (q,q,nb+1), *_indices (q,q,nnz_pad)
+    a_indptr: np.ndarray
+    a_indices: np.ndarray
+    b_indptr: np.ndarray
+    b_indices: np.ndarray
+    m_ti: np.ndarray  # (q, q, tmax) task row (local i)
+    m_tj: np.ndarray  # (q, q, tmax) task row of B (local j)
+    m_cnt: np.ndarray  # (q, q) valid task count
+
+    stats: Optional[PlanStats] = None
+    # canonical (un-skewed) blocks kept for SUMMA / 1D comparisons
+    blocks: Optional[List[List[BlockCSR]]] = None
+
+    # ------------------------------------------------------------------
+    def device_arrays(self) -> Dict[str, np.ndarray]:
+        return dict(
+            a_indptr=self.a_indptr,
+            a_indices=self.a_indices,
+            b_indptr=self.b_indptr,
+            b_indices=self.b_indices,
+            m_ti=self.m_ti,
+            m_tj=self.m_tj,
+            m_cnt=self.m_cnt,
+        )
+
+    def shape_structs(self):
+        """jax.ShapeDtypeStruct stand-ins for every device array.
+
+        For analytic (shape-only) plans this reflects the *padded* sizes
+        without ever allocating them.
+        """
+        import jax
+
+        shape_only = getattr(self, "_shape_only", None)
+        if shape_only is not None:
+            return {
+                k: jax.ShapeDtypeStruct(shape, dtype)
+                for k, (shape, dtype) in shape_only.items()
+            }
+        return {
+            k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+            for k, v in self.device_arrays().items()
+        }
+
+    def dense_blocks(self) -> Dict[str, np.ndarray]:
+        """Materialize dense block operands (oracle path, small n only)."""
+        q, nb = self.q, self.nb
+        a = np.zeros((q, q, nb, nb), dtype=np.float32)
+        b = np.zeros((q, q, nb, nb), dtype=np.float32)
+        msk = np.zeros((q, q, nb, nb), dtype=np.float32)
+        for x in range(q):
+            for y in range(q):
+                for name, arr in (("a", a), ("b", b)):
+                    indptr = getattr(self, f"{name}_indptr")[x, y]
+                    indices = getattr(self, f"{name}_indices")[x, y]
+                    for r in range(nb):
+                        lo, hi = indptr[r], indptr[r + 1]
+                        cols = indices[lo:hi]
+                        arr[x, y, r, cols] = 1.0
+                cnt = self.m_cnt[x, y]
+                msk[x, y, self.m_ti[x, y, :cnt], self.m_tj[x, y, :cnt]] = 1.0
+        return dict(a_dense=a, b_dense=b, m_dense=msk)
+
+
+def _stack_blocks(
+    blocks: List[List[BlockCSR]],
+    placement,  # (x, y) -> BlockCSR
+    q: int,
+    nb: int,
+    nnz_pad: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    indptr = np.zeros((q, q, nb + 1), dtype=INT)
+    indices = np.zeros((q, q, nnz_pad), dtype=INT)
+    for x in range(q):
+        for y in range(q):
+            blk = placement(x, y)
+            indptr[x, y] = blk.indptr.astype(INT)
+            indices[x, y, : blk.nnz] = blk.indices.astype(INT)
+            indices[x, y, blk.nnz :] = nb  # sentinel beyond any local col
+    return indptr, indices
+
+
+def build_plan(
+    graph: Graph,
+    q: int,
+    *,
+    skew: bool = True,
+    chunk: int = 512,
+    with_stats: bool = True,
+    keep_blocks: bool = True,
+) -> TCPlan:
+    """Plan the 2D-cyclic execution of a *degree-ordered* graph on q x q.
+
+    ``skew=True`` applies Cannon's initial alignment at placement time;
+    ``skew=False`` yields the canonical placement used by SUMMA (A at
+    ``(x, y) -> U_{x,y}``, B at ``(x, y) -> U_{y,x}``).
+    """
+    n, m = graph.n, graph.m
+    nb = -(-n // q)
+    blocks = cyclic_blocks(graph, q, q)
+
+    nnz_pad = max(1, max(blocks[x][y].nnz for x in range(q) for y in range(q)))
+    tmax = nnz_pad  # tasks per device == nnz of its mask block
+
+    if skew:
+        a_place = lambda x, y: blocks[x][(x + y) % q]
+        b_place = lambda x, y: blocks[y][(x + y) % q]
+    else:
+        a_place = lambda x, y: blocks[x][y]
+        b_place = lambda x, y: blocks[y][x]
+
+    a_indptr, a_indices = _stack_blocks(blocks, a_place, q, nb, nnz_pad)
+    b_indptr, b_indices = _stack_blocks(blocks, b_place, q, nb, nnz_pad)
+
+    m_ti = np.zeros((q, q, tmax), dtype=INT)
+    m_tj = np.full((q, q, tmax), 0, dtype=INT)
+    m_cnt = np.zeros((q, q), dtype=INT)
+    for x in range(q):
+        for y in range(q):
+            blk = blocks[x][y]
+            # expand CSR -> COO (ti = local i in grid-row x, tj = local j in
+            # grid-row y of the B operand; j's *local* index is j // q which
+            # is exactly the stored column's block-local row id)
+            rows = np.repeat(
+                np.arange(blk.n_rows, dtype=INT), np.diff(blk.indptr)
+            )
+            cols = blk.indices.astype(INT)
+            m_ti[x, y, : rows.shape[0]] = rows
+            m_tj[x, y, : cols.shape[0]] = cols
+            m_cnt[x, y] = rows.shape[0]
+
+    dmax = max(1, max(blocks[x][y].max_row_len() for x in range(q) for y in range(q)))
+
+    stats = None
+    if with_stats:
+        tasks = np.array(
+            [[blocks[x][y].nnz for y in range(q)] for x in range(q)],
+            dtype=np.int64,
+        )
+        # probe work per (x, y, shift): for each task (i, j) with both
+        # fragments non-empty, the map-based intersection is "performed"
+        # (paper Table 4 counts these tasks; we also weight by min-fragment
+        # length for the imbalance measure of Table 3).
+        probe = np.zeros((q, q, q), dtype=np.int64)
+        itasks = 0
+        rowlen = {
+            (x, y): np.diff(blocks[x][y].indptr) for x in range(q) for y in range(q)
+        }
+        for x in range(q):
+            for y in range(q):
+                blk = blocks[x][y]
+                rows = np.repeat(np.arange(blk.n_rows), np.diff(blk.indptr))
+                cols = blk.indices
+                for s in range(q):
+                    z = (x + y + s) % q
+                    la = rowlen[(x, z)][rows]
+                    lb = rowlen[(y, z)][cols]
+                    both = (la > 0) & (lb > 0)
+                    itasks += int(both.sum())
+                    probe[x, y, s] = int(np.minimum(la, lb)[both].sum())
+        tot_idx = q * q * nnz_pad
+        stats = PlanStats(
+            tasks_per_device=tasks,
+            nnz_per_block=tasks.copy(),
+            probe_work_per_device_shift=probe,
+            task_imbalance=float(tasks.max() / max(1.0, tasks.mean())),
+            probe_imbalance=float(
+                probe.sum(axis=2).max() / max(1.0, probe.sum(axis=2).mean())
+            ),
+            intersection_tasks_total=itasks,
+            padding_fraction_indices=float(1.0 - m / max(1, tot_idx)),
+            padding_fraction_tasks=float(1.0 - m / max(1, q * q * tmax)),
+        )
+
+    return TCPlan(
+        n=n,
+        m=m,
+        q=q,
+        nb=nb,
+        nnz_pad=nnz_pad,
+        tmax=tmax,
+        dmax=dmax,
+        chunk=min(chunk, tmax),
+        a_indptr=a_indptr,
+        a_indices=a_indices,
+        b_indptr=b_indptr,
+        b_indices=b_indices,
+        m_ti=m_ti,
+        m_tj=m_tj,
+        m_cnt=m_cnt,
+        stats=stats,
+        blocks=blocks if keep_blocks else None,
+    )
+
+
+def bucketize_plan(plan: TCPlan, d_small: int = 32) -> TCPlan:
+    """§Perf H1a: statically reorder each device's tasks into long|short.
+
+    A task is *long* iff under ANY Cannon pairing its probe needs padding
+    beyond ``d_small`` (max over shifts of min-fragment length).  The
+    planner reorders (m_ti, m_tj) so long tasks come first and records the
+    per-plan maximum long-count; the two-level count path then runs long
+    chunks at ``dmax`` and the rest at ``d_small``, eliminating the
+    ``dmax / avg_len`` padded-probe waste on power-law graphs.
+    Returns a new plan with ``n_long``/``d_small`` attributes set.
+    """
+    assert plan.blocks is not None
+    q = plan.q
+    rowlen = {
+        (x, y): np.diff(plan.blocks[x][y].indptr)
+        for x in range(q)
+        for y in range(q)
+    }
+    m_ti = plan.m_ti.copy()
+    m_tj = plan.m_tj.copy()
+    n_long_max = 0
+    waste_before = 0
+    waste_after = 0
+    for x in range(q):
+        for y in range(q):
+            cnt = int(plan.m_cnt[x, y])
+            ti = plan.m_ti[x, y, :cnt]
+            tj = plan.m_tj[x, y, :cnt]
+            # probe side is the A fragment (row i); keys side is searched
+            # globally and needs no padding (count_pair_search_global)
+            need = np.zeros(cnt, dtype=np.int64)
+            for z in range(q):
+                need = np.maximum(need, rowlen[(x, z)][ti])
+            long_mask = need > d_small
+            order = np.argsort(~long_mask, kind="stable")  # long first
+            m_ti[x, y, :cnt] = ti[order]
+            m_tj[x, y, :cnt] = tj[order]
+            n_long = int(long_mask.sum())
+            n_long_max = max(n_long_max, n_long)
+            waste_before += cnt * plan.dmax
+            waste_after += n_long * plan.dmax + (cnt - n_long) * d_small
+    new = dataclasses.replace(plan, m_ti=m_ti, m_tj=m_tj)
+    new.n_long = n_long_max  # type: ignore[attr-defined]
+    new.d_small = d_small  # type: ignore[attr-defined]
+    new.bucket_stats = dict(  # type: ignore[attr-defined]
+        padded_probe_before=float(waste_before * q),  # x shifts
+        padded_probe_after=float(waste_after * q),
+        reduction=float(waste_before / max(1, waste_after)),
+    )
+    return new
+
+
+def analytic_plan(
+    n: int,
+    m: int,
+    q: int,
+    *,
+    dmax_block: int,
+    nnz_slack: float = 1.25,
+    chunk: int = 512,
+    name: str = "analytic",
+) -> TCPlan:
+    """Shape-only plan for dry runs on graphs too large to materialize.
+
+    Uses the paper's balance argument (cyclic distribution => per-block nnz
+    ~ m / p with small slack; Table 3 measured <= 6% imbalance, we budget
+    ``nnz_slack``) to size the padded arrays.  Arrays are allocated as
+    zero-filled placeholders only if requested via ``device_arrays``; dry
+    runs should use :meth:`TCPlan.shape_structs` (no allocation).
+    """
+    nb = -(-n // q)
+    nnz_pad = max(1, int(np.ceil(m / (q * q) * nnz_slack)))
+    tmax = nnz_pad
+    empty = np.zeros((q, q, 0), dtype=INT)
+    plan = TCPlan(
+        n=n,
+        m=m,
+        q=q,
+        nb=nb,
+        nnz_pad=nnz_pad,
+        tmax=tmax,
+        dmax=max(1, dmax_block),
+        chunk=min(chunk, tmax),
+        a_indptr=empty,
+        a_indices=empty,
+        b_indptr=empty,
+        b_indices=empty,
+        m_ti=empty,
+        m_tj=empty,
+        m_cnt=np.zeros((q, q), dtype=INT),
+        stats=None,
+        blocks=None,
+    )
+    plan._shape_only = dict(  # type: ignore[attr-defined]
+        a_indptr=((q, q, nb + 1), INT),
+        a_indices=((q, q, nnz_pad), INT),
+        b_indptr=((q, q, nb + 1), INT),
+        b_indices=((q, q, nnz_pad), INT),
+        m_ti=((q, q, tmax), INT),
+        m_tj=((q, q, tmax), INT),
+        m_cnt=((q, q), INT),
+    )
+    return plan

@@ -1,0 +1,230 @@
+"""SUMMA-schedule triangle counting on rectangular ``r x c`` grids.
+
+The paper notes (§8) that the algorithm "can be easily extended to deal
+with rectangular processor grids using the SUMMA algorithm" — this module
+is that extension, and it is also the framework's *elasticity* mechanism:
+after device loss, any ``r x c`` factorization of the surviving devices can
+be replanned (Cannon requires a square grid).
+
+Formulation: tasks (i, j) live on device ``(i % r, j % c)``; the reduction
+index k is classed by ``k % c`` into ``c`` panels.  Step ``z``:
+
+* panel ``A_{x,z}``  (rows i%r==x, cols k%c==z)  is broadcast along grid
+  row ``x`` from its owner ``(x, z)``;
+* panel ``B_{y,z}``  (rows j%c==y, cols k%c==z)  is broadcast along grid
+  column ``y`` from its owner ``(z % r, y)`` (each device stores
+  ``ceil(c/r)`` B panels).
+
+Broadcasts are expressed as masked ``psum`` (a one-hot contribution per
+step).  On real hardware XLA lowers this to an all-reduce; a dedicated
+collective-broadcast would move strictly fewer bytes — we account for this
+honestly in the roofline (see EXPERIMENTS.md §Roofline notes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from . import count as count_mod
+from .decomp import cyclic_blocks
+from .graph import Graph
+
+INT = np.int32
+
+__all__ = ["SummaPlan", "build_summa_plan", "build_summa_fn"]
+
+
+@dataclasses.dataclass
+class SummaPlan:
+    n: int
+    m: int
+    r: int
+    c: int
+    nb_r: int  # local rows of A / mask = ceil(n / r)
+    nb_c: int  # local rows of B and local k-cols = ceil(n / c)
+    npan: int  # B panels per device = ceil(c / r)
+    a_nnz_pad: int
+    b_nnz_pad: int
+    tmax: int
+    dmax: int
+    chunk: int
+
+    a_indptr: np.ndarray  # (r, c, nb_r + 1)
+    a_indices: np.ndarray  # (r, c, a_nnz_pad)
+    b_indptr: np.ndarray  # (r, c, npan, nb_c + 1)
+    b_indices: np.ndarray  # (r, c, npan, b_nnz_pad)
+    m_ti: np.ndarray  # (r, c, tmax)
+    m_tj: np.ndarray  # (r, c, tmax)
+    m_cnt: np.ndarray  # (r, c)
+
+    def device_arrays(self) -> Dict[str, np.ndarray]:
+        return dict(
+            a_indptr=self.a_indptr,
+            a_indices=self.a_indices,
+            b_indptr=self.b_indptr,
+            b_indices=self.b_indices,
+            m_ti=self.m_ti,
+            m_tj=self.m_tj,
+            m_cnt=self.m_cnt,
+        )
+
+    def shape_structs(self):
+        import jax
+
+        return {
+            k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+            for k, v in self.device_arrays().items()
+        }
+
+
+def build_summa_plan(graph: Graph, r: int, c: int, *, chunk: int = 512) -> SummaPlan:
+    n, m = graph.n, graph.m
+    nb_r = -(-n // r)
+    nb_c = -(-n // c)
+    npan = -(-c // r)
+
+    ablocks = cyclic_blocks(graph, r, c)  # A and mask
+    bblocks = cyclic_blocks(graph, c, c)  # B (rows j%c, cols k%c)
+
+    a_nnz_pad = max(1, max(ablocks[x][y].nnz for x in range(r) for y in range(c)))
+    b_nnz_pad = max(1, max(bblocks[y][k].nnz for y in range(c) for k in range(c)))
+    tmax = a_nnz_pad
+
+    a_indptr = np.zeros((r, c, nb_r + 1), dtype=INT)
+    a_indices = np.full((r, c, a_nnz_pad), nb_c, dtype=INT)
+    m_ti = np.zeros((r, c, tmax), dtype=INT)
+    m_tj = np.zeros((r, c, tmax), dtype=INT)
+    m_cnt = np.zeros((r, c), dtype=INT)
+    for x in range(r):
+        for y in range(c):
+            blk = ablocks[x][y]
+            a_indptr[x, y] = blk.indptr.astype(INT)
+            a_indices[x, y, : blk.nnz] = blk.indices.astype(INT)
+            rows = np.repeat(np.arange(blk.n_rows, dtype=INT), np.diff(blk.indptr))
+            m_ti[x, y, : rows.shape[0]] = rows
+            m_tj[x, y, : blk.nnz] = blk.indices.astype(INT)
+            m_cnt[x, y] = blk.nnz
+
+    b_indptr = np.zeros((r, c, npan, nb_c + 1), dtype=INT)
+    b_indices = np.full((r, c, npan, b_nnz_pad), nb_c, dtype=INT)
+    for y in range(c):
+        for kc in range(c):
+            x, slot = kc % r, kc // r
+            blk = bblocks[y][kc]
+            b_indptr[x, y, slot] = blk.indptr.astype(INT)
+            b_indices[x, y, slot, : blk.nnz] = blk.indices.astype(INT)
+
+    dmax = max(
+        1,
+        max(ablocks[x][y].max_row_len() for x in range(r) for y in range(c)),
+        max(bblocks[y][k].max_row_len() for y in range(c) for k in range(c)),
+    )
+    return SummaPlan(
+        n=n,
+        m=m,
+        r=r,
+        c=c,
+        nb_r=nb_r,
+        nb_c=nb_c,
+        npan=npan,
+        a_nnz_pad=a_nnz_pad,
+        b_nnz_pad=b_nnz_pad,
+        tmax=tmax,
+        dmax=dmax,
+        chunk=min(chunk, tmax),
+        a_indptr=a_indptr,
+        a_indices=a_indices,
+        b_indptr=b_indptr,
+        b_indices=b_indices,
+        m_ti=m_ti,
+        m_tj=m_tj,
+        m_cnt=m_cnt,
+    )
+
+
+def build_summa_fn(
+    plan: SummaPlan,
+    mesh,
+    *,
+    row_axis: str = "data",
+    col_axis: str = "model",
+    probe_shorter: bool = True,
+    count_dtype=jnp.int32,
+    reduce_global: bool = True,
+):
+    r, c = plan.r, plan.c
+    sentinel = plan.nb_c + 1
+
+    def spmd(a_indptr, a_indices, b_indptr, b_indices, m_ti, m_tj, m_cnt):
+        sq = lambda a: a.reshape(a.shape[2:])
+        a_ptr, a_idx = sq(a_indptr), sq(a_indices)
+        b_ptr, b_idx = sq(b_indptr), sq(b_indices)  # (npan, ...)
+        ti, tj, cnt = sq(m_ti), sq(m_tj), sq(m_cnt)
+        my_col = jax.lax.axis_index(col_axis)
+        my_row = jax.lax.axis_index(row_axis)
+
+        def step(acc, z):
+            # one-hot broadcast of the A panel along the grid row
+            owna = (my_col == z % c).astype(a_ptr.dtype)
+            pa_ptr = jax.lax.psum(a_ptr * owna, col_axis)
+            pa_idx = jax.lax.psum(a_idx * owna, col_axis)
+            # one-hot broadcast of the B panel along the grid column
+            slot = z // r
+            ownb = (my_row == z % r).astype(b_ptr.dtype)
+            pb_ptr = jax.lax.psum(b_ptr[slot] * ownb, row_axis)
+            pb_idx = jax.lax.psum(b_idx[slot] * ownb, row_axis)
+            cc = count_mod.count_pair_search(
+                pa_ptr,
+                pa_idx,
+                pb_ptr,
+                pb_idx,
+                ti,
+                tj,
+                cnt,
+                dpad=plan.dmax,
+                chunk=plan.chunk,
+                probe_shorter=probe_shorter,
+                count_dtype=count_dtype,
+                sentinel=sentinel,
+            )
+            return acc + cc, None
+
+        total, _ = jax.lax.scan(
+            step, jnp.zeros((), count_dtype), jnp.arange(c)
+        )
+        if reduce_global:
+            total = jax.lax.psum(total, row_axis)
+            total = jax.lax.psum(total, col_axis)
+            return total
+        return total.reshape((1, 1))
+
+    spec = P(row_axis, col_axis)
+    fn = jax.jit(
+        jax.shard_map(
+            spmd,
+            mesh=mesh,
+            in_specs=(spec,) * 7,
+            out_specs=P() if reduce_global else spec,
+            check_vma=False,
+        )
+    )
+    ordered = [
+        "a_indptr",
+        "a_indices",
+        "b_indptr",
+        "b_indices",
+        "m_ti",
+        "m_tj",
+        "m_cnt",
+    ]
+
+    def call(**arrays):
+        return fn(*(arrays[k] for k in ordered))
+
+    call.lower = lambda **arrays: fn.lower(*(arrays[k] for k in ordered))
+    return call

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+``tc_tile`` — the paper's set-intersection inner loop as a bit-packed
+128x128 tile kernel (popcount/VPU and MXU modes), driven by a
+scalar-prefetched active-tile-triple list (the doubly-compressed-sparsity
+adaptation; see DESIGN.md §2).
+"""
+from .tc_tile.ops import tile_pair_count  # noqa: F401

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the tc_tile kernel (no Pallas)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .tc_tile import unpack_bits_tile
+
+__all__ = ["tile_triple_counts_ref"]
+
+
+def tile_triple_counts_ref(triples, a_tiles, b_tiles, m_tiles):
+    """Reference: identical math to the kernel, gathered with jnp.take."""
+
+    def one(trip):
+        a = a_tiles[trip[0]]
+        b = b_tiles[trip[1]]
+        m = m_tiles[trip[2]]
+        inter = jax.lax.population_count(a[:, None, :] & b[None, :, :])
+        counts = jnp.sum(inter.astype(jnp.int32), axis=-1)
+        mask = unpack_bits_tile(m, jnp.int32)
+        return jnp.where(trip[3] > 0, jnp.sum(counts * mask), 0)
+
+    return jax.vmap(one)(triples)

@@ -1,0 +1,52 @@
+"""Serving driver: batched KV-cached greedy decode for LM archs.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b-smoke \
+        --batch 4 --gen 16
+"""
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from ..configs import get_config
+    from ..models.steps import build_lm_decode_step
+    from ..models.transformer import init_kv_cache, lm_init
+
+    cfg = get_config(args.arch)
+    assert cfg.family == "lm"
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+    params = lm_init(jax.random.key(0), cfg)
+    decode, _ = build_lm_decode_step(cfg, mesh)
+    cache = init_kv_cache(cfg, args.batch, args.max_len)
+    tok = jnp.ones((args.batch,), jnp.int32)
+    cache_len = jnp.zeros((args.batch,), jnp.int32)
+    outs = []
+    t0 = time.perf_counter()
+    for _ in range(args.gen):
+        tok, cache = decode(params, cache, tok, cache_len)
+        cache_len = cache_len + 1
+        outs.append(np.asarray(tok))
+    dt = time.perf_counter() - t0
+    print(
+        f"decoded {args.batch}x{args.gen} tokens in {dt:.2f}s "
+        f"({args.batch*args.gen/dt:.1f} tok/s)"
+    )
+    print("first sequence:", np.stack(outs, 1)[0])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Attention substrate: RoPE (incl. partial/"2d"), GQA flash-style causal
+attention for training/prefill, and KV-cached decode attention whose cache
+may be *sequence-sharded* (GSPMD inserts the flash-decoding style
+psum-combined softmax when the cache's seq dim is sharded over `model`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "apply_rope",
+    "rope_angles",
+    "causal_attention",
+    "decode_attention",
+    "quantize_kv",
+    "dequantize_kv",
+]
+
+
+def rope_angles(positions, dim: int, theta: float = 10000.0):
+    """(..., dim/2) angles for rotary embedding."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions[..., None].astype(jnp.float32) * inv
+
+
+def apply_rope(x, positions, *, fraction: float = 1.0, theta: float = 10000.0):
+    """Rotary embedding on the first ``fraction`` of head dims.
+
+    ``fraction=0.5`` reproduces ChatGLM's 2D/partial RoPE: only half the
+    head dimension rotates, the rest passes through.
+    x: (B, S, H, dh); positions: (B, S).
+    """
+    dh = x.shape[-1]
+    rot = int(dh * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    ang = rope_angles(positions, rot, theta)  # (B, S, rot/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    out = out.reshape(xr.shape)
+    return jnp.concatenate([out, xp], axis=-1)
+
+
+def causal_attention(
+    q,
+    k,
+    v,
+    *,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    softmax_scale: Optional[float] = None,
+    q6_spec=None,
+    nq_multiple: int = 1,
+):
+    """Memory-bounded causal GQA attention (flash-style online softmax).
+
+    q: (B, S, H, dh); k, v: (B, S, KV, dh) with H = KV * G.
+    The q-chunk axis is *vmapped* (parallel — shardable over the mesh via
+    ``q6_spec``, giving 1/tp q-row context parallelism for any head count);
+    the kv-chunk axis is an online-softmax ``lax.scan`` (sequential).
+    ``nq_multiple`` forces enough q chunks that the chunk axis divides the
+    sharding axis.  A Pallas flash kernel is the hardware next step; this
+    jnp schedule is what XLA:TPU fuses today (EXPERIMENTS.md §Perf).
+    """
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    dv = v.shape[-1]  # may differ from dh (e.g. MLA)
+    g = h // kvh
+    scale = softmax_scale or (dh ** -0.5)
+
+    qc = min(q_chunk, max(1, s // max(nq_multiple, 1)))
+    kc = min(kv_chunk, s)
+    nq, nk = s // qc, s // kc
+    assert s % qc == 0 and s % kc == 0, (s, qc, kc)
+
+    q = q.reshape(b, nq, qc, kvh, g, dh)
+    if q6_spec is not None:
+        q = jax.lax.with_sharding_constraint(q, q6_spec)
+    k = k.reshape(b, nk, kc, kvh, dh)
+    v = v.reshape(b, nk, kc, kvh, dv)
+    pos_q = jnp.arange(s).reshape(nq, qc)
+    pos_k = jnp.arange(s).reshape(nk, kc)
+
+    def q_block(qb, pq):
+        # qb: (b, qc, kvh, g, dh); pq: (qc,)
+        qb = qb * scale
+
+        def kv_step(carry, ki):
+            m, l, o = carry
+            kb, vb, pk = k[:, ki], v[:, ki], pos_k[ki]
+            sc = jnp.einsum(
+                "bqkgd,bckd->bqkgc", qb, kb, preferred_element_type=jnp.float32
+            )
+            mask = pq[:, None] >= pk[None, :]  # (qc, kc)
+            sc = jnp.where(mask[None, :, None, None, :], sc, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            # guard fully-masked rows (m_new = -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(sc - m_safe[..., None])
+            p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+            corr = jnp.where(
+                jnp.isfinite(m), jnp.exp(m - m_safe), 0.0
+            )
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bqkgc,bckd->bqkgd", p, vb, preferred_element_type=jnp.float32
+            )
+            o_new = o * corr[..., None] + pv
+            return (m_safe, l_new, o_new), None
+
+        m0 = jnp.full((b, qc, kvh, g), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, qc, kvh, g), jnp.float32)
+        o0 = jnp.zeros((b, qc, kvh, g, dv), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(kv_step, (m0, l0, o0), jnp.arange(nk))
+        return (o / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+
+    # vmap over the (sharded) q-chunk axis — parallel across the mesh
+    out = jax.vmap(q_block, in_axes=(1, 0), out_axes=1)(q, pos_q)
+    return out.reshape(b, s, h, dv)
+
+
+# ----------------------------------------------------------------------
+# decode path (KV cache, optionally int8-quantized / seq-sharded)
+# ----------------------------------------------------------------------
+def quantize_kv(x):
+    """Per-(token, head) symmetric int8 quantization of a cache tensor."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.round(x / scale).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, softmax_scale=None):
+    """One-token GQA attention against a (possibly seq-sharded) cache.
+
+    q: (B, H, dh); k_cache, v_cache: (B, S, KV, dh); cache_len: (B,).
+    Written so every reduction over S is a plain jnp reduction — when the
+    cache is sharded over S (P(data, model, ...)), GSPMD turns the max/sum
+    into psum-combined partial softmax (flash-decoding on the mesh).
+    """
+    b, h, dh = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    scale = softmax_scale or (dh ** -0.5)
+    qg = q.reshape(b, kvh, g, dh) * scale
+    sc = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    )
+    mask = jnp.arange(s)[None, :] < cache_len[:, None]  # (B, S)
+    sc = jnp.where(mask[:, None, None, :], sc, -jnp.inf)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    p = jnp.where(mask[:, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum(
+        "bkgs,bskd->bkgd", p / jnp.maximum(l, 1e-30), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, h, dh).astype(q.dtype)

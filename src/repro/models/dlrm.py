@@ -1,0 +1,87 @@
+"""DLRM (arXiv:1906.00091), MLPerf Criteo-TB config.
+
+Bottom MLP on 13 dense features; 26 embedding bags out of ONE concatenated
+row-sharded table (the EmbeddingBag substrate); dot-product feature
+interaction (pairwise dots of the 27 feature vectors, lower triangle);
+top MLP -> CTR logit.  ``retrieval_step`` scores one query against N
+candidate item embeddings as a single batched matmul + top-k (no loop).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import RecsysConfig
+from ..sparse.embedding_bag import embedding_bag, flatten_ids, table_offsets
+from . import nn
+
+__all__ = ["dlrm_init", "dlrm_forward", "dlrm_loss", "dlrm_retrieval"]
+
+
+def dlrm_init(key, cfg: RecsysConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    # pad the concatenated table to a 512 multiple so row-sharding divides
+    # evenly on both production meshes (padding rows are never addressed)
+    total_rows = ((cfg.total_rows + 511) // 512) * 512
+    params = {
+        "emb": {
+            "table": jax.random.normal(
+                k1, (total_rows, cfg.embed_dim), dtype
+            )
+            * 0.01
+        },
+        "bot": nn.mlp_init(k2, cfg.bot_mlp, dtype=dtype),
+        "top": nn.mlp_init(k3, cfg.top_mlp, dtype=dtype),
+    }
+    return params
+
+
+def _interact_dot(dense_v, sparse_v):
+    """dense_v (B, d); sparse_v (B, F, d) -> (B, F+1 choose 2 + d)."""
+    b, f, d = sparse_v.shape
+    all_v = jnp.concatenate([dense_v[:, None, :], sparse_v], axis=1)  # (B, F+1, d)
+    z = jnp.einsum("bfd,bgd->bfg", all_v, all_v)
+    iu = jnp.triu_indices(f + 1, k=1)
+    pairs = z[:, iu[0], iu[1]]  # (B, (F+1)F/2)
+    return jnp.concatenate([dense_v, pairs], axis=1)
+
+
+def dlrm_forward(params, cfg: RecsysConfig, dense, sparse_ids):
+    """dense (B, 13); sparse_ids (B, F, H) local per-table ids -> (B,) logit."""
+    offs = table_offsets(cfg.table_sizes)
+    flat = flatten_ids(sparse_ids, offs)
+    emb = embedding_bag(params["emb"]["table"], flat)  # (B, F, d)
+    dv = nn.mlp(params["bot"], dense, final_act=True)  # (B, d)
+    feats = _interact_dot(dv, emb)
+    # pad/crop interaction features to the top MLP's input width
+    want = params["top"]["l0"]["w"].shape[0]
+    have = feats.shape[1]
+    if have < want:
+        feats = jnp.pad(feats, ((0, 0), (0, want - have)))
+    elif have > want:
+        feats = feats[:, :want]
+    return nn.mlp(params["top"], feats)[:, 0]
+
+
+def dlrm_loss(params, cfg: RecsysConfig, dense, sparse_ids, labels):
+    logits = dlrm_forward(params, cfg, dense, sparse_ids)
+    # BCE with logits
+    loss = jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+    return loss, {"loss": loss}
+
+
+def dlrm_retrieval(params, cfg: RecsysConfig, dense, cand_ids, k: int = 100):
+    """Score 1 query against N candidates: batched dot, then top-k.
+
+    dense (1, 13) query features; cand_ids (N,) candidate rows of table 0.
+    """
+    q = nn.mlp(params["bot"], dense, final_act=True)  # (1, d)
+    cand = jnp.take(params["emb"]["table"], cand_ids, axis=0)  # (N, d)
+    scores = (cand @ q[0]).astype(jnp.float32)  # (N,)
+    return jax.lax.top_k(scores, min(k, scores.shape[0]))

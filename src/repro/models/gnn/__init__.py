@@ -1,0 +1,1 @@
+"""GNN model family: GAT, GraphCast-style mesh GNN, NequIP, Equiformer-v2."""

@@ -1,0 +1,230 @@
+"""Equiformer-v2 (arXiv:2306.12059): equivariant graph attention with
+eSCN SO(2) convolutions.
+
+The eSCN trick (arXiv:2302.03655, adopted by Equiformer-v2): rotate each
+edge's irrep features into a frame where the edge points along +z; in that
+frame an SO(3)-equivariant convolution becomes *block-diagonal in m* and
+truncating to m <= m_max reduces the tensor-product cost from O(L^6) to
+O(L^3).  Our runtime rotation ``D(R_edge)`` comes from
+:class:`..irreps.RotationBasis` (analytic Z-rotations + constant J
+matrices; verified to 1e-7 against a least-squares Wigner oracle).
+
+Per block: eSCN message (SO(2) linear over m <= m_max, radially modulated)
+-> graph attention (scalar-channel logits, segment softmax) -> aggregation
+-> equivariant LayerNorm + per-l linear + gated nonlinearity + scalar FFN.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...sparse.segment import segment_softmax, segment_sum
+from .. import nn
+from .irreps import RotationBasis, sph_dim, sph_harm, _z_pairing
+from .nequip import bessel_rbf
+
+__all__ = ["equiformer_init", "equiformer_energy"]
+
+N_SPECIES = 16
+
+
+def _sl(l: int) -> slice:
+    return slice(l * l, (l + 1) * (l + 1))
+
+
+def equiformer_init(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    c, lm = cfg.d_hidden, cfg.l_max
+    keys = jax.random.split(key, 3 + cfg.n_layers)
+    params = {
+        "embed": nn.embed_init(keys[0], N_SPECIES, c, dtype),
+        "readout": nn.mlp_init(keys[1], (c, c, 1), dtype=dtype),
+    }
+    n_m0 = lm + 1  # one m=0 component per l
+    for i in range(cfg.n_layers):
+        ks = jax.random.split(keys[2 + i], 8)
+        layer: Dict = {
+            "radial": nn.mlp_init(ks[0], (cfg.n_rbf, 32, c), dtype=dtype),
+            "w_m0": nn.dense_init(ks[1], c * n_m0, c * n_m0, dtype=dtype),
+            "attn": nn.dense_init(ks[2], c, cfg.n_heads, dtype=dtype),
+            "ffn": nn.mlp_init(ks[3], (c, 2 * c, c), dtype=dtype),
+            "gate": nn.dense_init(ks[4], c, lm * c, dtype=dtype),
+            "post": {
+                f"l{l}": nn.dense_init(ks[5], c, c, dtype=dtype)
+                for l in range(lm + 1)
+            },
+        }
+        for m in range(1, cfg.m_max + 1):
+            n_lm = lm + 1 - m  # number of l's carrying this |m|
+            if n_lm <= 0:
+                continue
+            layer[f"w_m{m}_r"] = nn.dense_init(
+                ks[6], c * n_lm, c * n_lm, dtype=dtype
+            )
+            layer[f"w_m{m}_i"] = nn.dense_init(
+                ks[7], c * n_lm, c * n_lm, dtype=dtype
+            )
+        params[f"layer{i}"] = layer
+    return params
+
+
+def _m_indexing(lm: int):
+    """Per-l paired-basis metadata: (Q, pairs) from the Schur pairing."""
+    qs, pairs = [], []
+    for l in range(lm + 1):
+        q, p = _z_pairing(l)
+        qs.append(np.asarray(q, np.float32))
+        pairs.append(p)
+    return qs, pairs
+
+
+def _escn_message(layer_p, cfg, x_rot):
+    """SO(2) linear conv on edge-frame features, m truncated to m_max.
+
+    x_rot: (E, C, S) edge-aligned features.  Components are mapped into the
+    per-l paired basis (Qᵀ f) where the z-rotation acts as per-|m| 2x2
+    blocks; m=0 lines get a real linear over (C * n_l0), |m|>=1 pairs get
+    a complex-structured linear; m > m_max is dropped (the eSCN cut).
+    """
+    c, lm = cfg.d_hidden, cfg.l_max
+    qs, pairs = _m_indexing(lm)
+    e = x_rot.shape[0]
+
+    # project into paired basis per l
+    u = []
+    for l in range(lm + 1):
+        q = jnp.asarray(qs[l])
+        u.append(jnp.einsum("ecs,st->ect", x_rot[..., _sl(l)], q))
+    # collect m=0 components (per l, the lines not in any pair).  Pairs
+    # with negative Schur m rotate with the OPPOSITE orientation under the
+    # residual z-rotation gauge; flipping the second component's sign maps
+    # them to +|m| so one complex-linear map per |m| stays equivariant.
+    m0_feats, m0_loc = [], []
+    m_feats = {m: [] for m in range(1, cfg.m_max + 1)}
+    m_loc = {m: [] for m in range(1, cfg.m_max + 1)}
+    for l in range(lm + 1):
+        d = 2 * l + 1
+        in_pair = set()
+        for (i, j, m) in pairs[l]:
+            in_pair.add(i)
+            in_pair.add(j)
+            mm = int(round(abs(m)))
+            sgn = 1.0 if m > 0 else -1.0
+            if mm <= cfg.m_max:
+                m_feats[mm].append(
+                    jnp.stack([u[l][..., i], sgn * u[l][..., j]], axis=-1)
+                )  # (E, C, 2)
+                m_loc[mm].append((l, i, j, sgn))
+        for i in range(d):
+            if i not in in_pair:
+                m0_feats.append(u[l][..., i])  # (E, C)
+                m0_loc.append((l, i))
+
+    out_u = [jnp.zeros_like(ul) for ul in u]
+    # m = 0: real linear across (l, channel)
+    f0 = jnp.concatenate(m0_feats, axis=-1).reshape(e, -1)  # (E, C*n_l0)
+    y0 = nn.dense(layer_p["w_m0"], f0).reshape(e, c, len(m0_loc))
+    for idx, (l, i) in enumerate(m0_loc):
+        out_u[l] = out_u[l].at[..., i].set(y0[..., idx])
+    # |m| >= 1: complex-structured linear shared over the 2 components
+    for m in range(1, cfg.m_max + 1):
+        if not m_feats[m]:
+            continue
+        fm = jnp.stack(m_feats[m], axis=2)  # (E, C, n_lm, 2)
+        n_lm = fm.shape[2]
+        re = fm[..., 0].reshape(e, -1)
+        im = fm[..., 1].reshape(e, -1)
+        wr, wi = layer_p[f"w_m{m}_r"], layer_p[f"w_m{m}_i"]
+        yr = nn.dense(wr, re) - nn.dense(wi, im)
+        yi = nn.dense(wi, re) + nn.dense(wr, im)
+        yr = yr.reshape(e, c, n_lm)
+        yi = yi.reshape(e, c, n_lm)
+        for idx, (l, i, j, sgn) in enumerate(m_loc[m]):
+            out_u[l] = out_u[l].at[..., i].set(yr[..., idx])
+            out_u[l] = out_u[l].at[..., j].set(sgn * yi[..., idx])
+
+    # back from paired basis
+    out = []
+    for l in range(lm + 1):
+        q = jnp.asarray(qs[l])
+        out.append(jnp.einsum("ect,st->ecs", out_u[l], q))
+    return jnp.concatenate(out, axis=-1)
+
+
+def _equiv_layernorm(x, eps=1e-6):
+    """RMS over (channel, component) per l-subspace — rotation invariant."""
+    lm = int(np.sqrt(x.shape[-1])) - 1
+    outs = []
+    for l in range(lm + 1):
+        blk = x[..., _sl(l)]
+        norm = jnp.sqrt(jnp.mean(jnp.sum(blk ** 2, axis=-1), axis=-1) + eps)
+        outs.append(blk / norm[..., None, None])
+    return jnp.concatenate(outs, axis=-1)
+
+
+def equiformer_energy(params, cfg, species, positions, edge_src, edge_dst, graph_id, n_graphs):
+    n = species.shape[0]
+    c, lm = cfg.d_hidden, cfg.l_max
+    rb = RotationBasis(lm)
+    x = jnp.zeros((n, c, sph_dim(lm)), positions.dtype)
+    x = x.at[..., 0].set(params["embed"]["table"][species])
+
+    vec = positions[edge_dst] - positions[edge_src]
+    r = jnp.linalg.norm(vec + 1e-12, axis=-1)
+    unit = vec / (r[:, None] + 1e-12)
+    rbf = bessel_rbf(r, cfg.n_rbf, cfg.cutoff)
+    # zero-length edges (self loops / padding) have no defined alignment
+    # frame — their messages are masked out (required for equivariance)
+    edge_ok = (r > 1e-6).astype(positions.dtype)[:, None, None]
+    # per-l alignment rotations (E, d, d), plus transposes for the way back
+    d_align = [rb.align_z(l, unit) for l in range(lm + 1)]
+
+    for i in range(cfg.n_layers):
+        p = params[f"layer{i}"]
+        xs = _equiv_layernorm(x)[edge_src]  # (E, C, S)
+        # rotate into the edge frame
+        x_rot = jnp.concatenate(
+            [
+                jnp.einsum("eij,ecj->eci", d_align[l], xs[..., _sl(l)])
+                for l in range(lm + 1)
+            ],
+            axis=-1,
+        )
+        msg = _escn_message(p, cfg, x_rot)
+        msg = msg * nn.mlp(p["radial"], rbf)[:, :, None]  # radial modulation
+        msg = msg * edge_ok  # degenerate-edge mask
+        # rotate back
+        msg = jnp.concatenate(
+            [
+                jnp.einsum("eji,ecj->eci", d_align[l], msg[..., _sl(l)])
+                for l in range(lm + 1)
+            ],
+            axis=-1,
+        )
+        # graph attention on scalar channel
+        logits = nn.dense(p["attn"], msg[..., 0])  # (E, heads)
+        alpha = segment_softmax(logits, edge_dst, n)  # (E, heads)
+        msg = msg * jnp.mean(alpha, axis=-1)[:, None, None]
+        agg = segment_sum(msg, edge_dst, n)
+        agg = jnp.concatenate(
+            [
+                jnp.einsum("ncs,cd->nds", agg[..., _sl(l)], p["post"][f"l{l}"]["w"])
+                for l in range(lm + 1)
+            ],
+            axis=-1,
+        )
+        # gated nonlinearity + scalar FFN
+        scal = agg[..., 0]
+        gates = jax.nn.sigmoid(nn.dense(p["gate"], scal).reshape(n, lm, c))
+        parts = [jax.nn.silu(scal)[..., None]]
+        for l in range(1, lm + 1):
+            parts.append(agg[..., _sl(l)] * gates[:, l - 1, :, None])
+        upd = jnp.concatenate(parts, axis=-1)
+        upd = upd.at[..., 0].add(nn.mlp(p["ffn"], scal))
+        x = x + upd
+
+    e_atom = nn.mlp(params["readout"], x[..., 0])[:, 0]
+    return segment_sum(e_atom, graph_id, n_graphs)

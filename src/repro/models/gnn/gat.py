@@ -1,0 +1,76 @@
+"""Graph Attention Network (GAT, arXiv:1710.10903), Cora config.
+
+SDDMM edge scores -> segment softmax -> SpMM, all on edge lists through
+the :mod:`repro.sparse` substrate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...sparse.segment import segment_softmax, segment_sum
+from .. import nn
+
+__all__ = ["gat_init", "gat_apply"]
+
+
+def _layer_init(key, d_in, d_out, heads, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w": nn.dense_init(k1, d_in, heads * d_out, dtype=dtype),
+        "a_src": jax.random.normal(k2, (heads, d_out), dtype) * 0.1,
+        "a_dst": jax.random.normal(k3, (heads, d_out), dtype) * 0.1,
+    }
+
+
+def gat_init(key, cfg, d_feat: int):
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.n_layers)
+    layers = {}
+    d_in = d_feat
+    for i, k in enumerate(keys):
+        last = i == cfg.n_layers - 1
+        d_out = cfg.d_out if last else cfg.d_hidden
+        layers[f"layer{i}"] = _layer_init(k, d_in, d_out, cfg.n_heads, dtype)
+        d_in = d_out * (1 if last else cfg.n_heads)
+    return layers
+
+
+def _gat_layer(p, x, edge_src, edge_dst, n_nodes, heads, *, concat, act):
+    h = nn.dense(p["w"], x)
+    d_out = p["a_src"].shape[1]
+    h = h.reshape(-1, heads, d_out)  # (N, H, d)
+    s_src = jnp.einsum("nhd,hd->nh", h, p["a_src"])
+    s_dst = jnp.einsum("nhd,hd->nh", h, p["a_dst"])
+    logits = jax.nn.leaky_relu(
+        s_src[edge_src] + s_dst[edge_dst], negative_slope=0.2
+    )  # (E, H)
+    alpha = segment_softmax(logits, edge_dst, n_nodes)  # (E, H)
+    msg = h[edge_src] * alpha[..., None]  # (E, H, d)
+    out = segment_sum(msg, edge_dst, n_nodes)  # (N, H, d)
+    if concat:
+        out = out.reshape(-1, heads * d_out)
+    else:
+        out = jnp.mean(out, axis=1)
+    return act(out) if act is not None else out
+
+
+def gat_apply(params, cfg, feats, edge_src, edge_dst):
+    """feats (N, d_feat) -> logits (N, d_out).  Self-loops are the caller's
+    responsibility (Cora preprocessing adds them)."""
+    n = feats.shape[0]
+    x = feats
+    nl = cfg.n_layers
+    for i in range(nl):
+        last = i == nl - 1
+        x = _gat_layer(
+            params[f"layer{i}"],
+            x,
+            edge_src,
+            edge_dst,
+            n,
+            cfg.n_heads,
+            concat=not last,
+            act=None if last else jax.nn.elu,
+        )
+    return x

@@ -1,0 +1,332 @@
+"""Sharded step builders + input specs for the GNN and recsys families.
+
+GNN sharding: edge arrays over the flattened (pod, data, model) axes (edge
+parallelism — the same decomposition argument as the paper's task
+distribution); node arrays sharded on the node dim; ``segment_sum``
+scatters become psum-combines under GSPMD.
+
+Recsys sharding: batch over (pod, data); the concatenated embedding table
+row-sharded over `model` (all-to-all exchange emerges from the gather).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import GNNConfig, RecsysConfig
+from ..optim import make_optimizer
+from . import nn
+from .dlrm import dlrm_init, dlrm_loss, dlrm_retrieval
+from .gnn.gat import gat_apply, gat_init
+from .gnn.graphcast import graphcast_apply, graphcast_init
+from .gnn.nequip import nequip_energy_forces, nequip_init
+from .gnn.equiformer_v2 import equiformer_energy, equiformer_init
+
+__all__ = [
+    "gnn_init",
+    "build_gnn_train_step",
+    "gnn_input_specs",
+    "build_dlrm_train_step",
+    "build_dlrm_serve_step",
+    "build_dlrm_retrieval_step",
+    "recsys_input_specs",
+]
+
+EQUIVARIANT = ("nequip", "equiformer_v2")
+
+
+def _all_axes(mesh) -> Tuple:
+    return tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+
+
+def gnn_init(key, cfg: GNNConfig, d_feat: int):
+    if cfg.arch == "gat":
+        return gat_init(key, cfg, d_feat)
+    if cfg.arch == "graphcast":
+        return graphcast_init(key, cfg, d_feat)
+    if cfg.arch == "nequip":
+        return nequip_init(key, cfg)
+    if cfg.arch == "equiformer_v2":
+        return equiformer_init(key, cfg)
+    raise ValueError(cfg.arch)
+
+
+def gnn_loss(params, cfg: GNNConfig, batch):
+    if cfg.arch in EQUIVARIANT:
+        fwd = (
+            nequip_energy_forces
+            if cfg.arch == "nequip"
+            else lambda *a: (equiformer_energy(*a), None)
+        )
+        if cfg.arch == "nequip":
+            energy, forces = nequip_energy_forces(
+                params,
+                cfg,
+                batch["species"],
+                batch["positions"],
+                batch["edge_src"],
+                batch["edge_dst"],
+                batch["graph_id"],
+                batch["energy"].shape[0],
+            )
+            loss = jnp.mean((energy - batch["energy"]) ** 2)
+            loss = loss + jnp.mean((forces - batch["forces"]) ** 2)
+        else:
+            energy = equiformer_energy(
+                params,
+                cfg,
+                batch["species"],
+                batch["positions"],
+                batch["edge_src"],
+                batch["edge_dst"],
+                batch["graph_id"],
+                batch["energy"].shape[0],
+            )
+            loss = jnp.mean((energy - batch["energy"]) ** 2)
+        return loss, {"loss": loss}
+    if cfg.arch == "gat":
+        logits = gat_apply(
+            params, cfg, batch["feats"], batch["edge_src"], batch["edge_dst"]
+        )
+        labels = batch["labels"]
+        mask = batch["label_mask"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+        ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return ce, {"loss": ce}
+    if cfg.arch == "graphcast":
+        pred = graphcast_apply(
+            params, cfg, batch["feats"], batch["edge_src"], batch["edge_dst"]
+        )
+        mse = jnp.mean((pred - batch["target"]) ** 2)
+        return mse, {"loss": mse}
+    raise ValueError(cfg.arch)
+
+
+def build_gnn_train_step(cfg: GNNConfig, mesh, d_feat: int):
+    axes = _all_axes(mesh)
+    # GAT-paper style settings (lr 5e-3, no decoupled weight decay)
+    opt_init, opt_update = make_optimizer(
+        "adamw", lambda s: 5e-3, weight_decay=0.0
+    )
+
+    def step(params, opt_state, batch, step_i):
+        (loss, metrics), grads = jax.value_and_grad(
+            gnn_loss, has_aux=True
+        )(params, cfg, batch)
+        new_p, new_o, stats = opt_update(grads, opt_state, params, step_i)
+        return new_p, new_o, {**metrics, **stats}
+
+    dummy = jax.eval_shape(lambda k: gnn_init(k, cfg, d_feat), jax.random.key(0))
+    pspec = jax.tree.map(lambda x: P(*(None,) * x.ndim), dummy)
+    shard = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t)
+    edge_spec = NamedSharding(mesh, P(axes))
+    node_spec = NamedSharding(mesh, P(axes))
+
+    def batch_shardings(batch_struct):
+        out = {}
+        for k, v in batch_struct.items():
+            if k.startswith("edge"):
+                out[k] = edge_spec
+            elif v.ndim >= 1 and k not in ("energy",):
+                out[k] = NamedSharding(
+                    mesh, P(axes, *([None] * (v.ndim - 1)))
+                )
+            else:
+                out[k] = NamedSharding(mesh, P())
+        return out
+
+    opt_shape = jax.eval_shape(opt_init, dummy)
+    ospec = jax.tree.map(lambda x: P(*(None,) * x.ndim), opt_shape)
+
+    def build(batch_struct):
+        fn = jax.jit(
+            step,
+            in_shardings=(
+                shard(pspec),
+                shard(ospec),
+                batch_shardings(batch_struct),
+                None,
+            ),
+            donate_argnums=(0, 1),
+        )
+        return fn
+
+    return build, dict(params=pspec, opt_init=opt_init, dummy=dummy)
+
+
+def _pad_to(x: int, mult: int = 512) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def gnn_input_specs(cfg: GNNConfig, shape: dict) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Batch ShapeDtypeStructs per GNN shape cell.
+
+    Node/edge counts are padded to a multiple of 512 so the arrays shard
+    evenly on both production meshes (pjit input shardings require exact
+    divisibility; the pipeline pads with masked no-op edges on real runs —
+    <0.5% overhead at these sizes)."""
+    f32, i32 = jnp.float32, jnp.int32
+    if shape["kind"] == "sampled":
+        b = shape["batch_nodes"]
+        f1, f2 = shape["fanout"]
+        n = b * (1 + f1 + f1 * f2) + 1
+        e = b * f1 + b * f1 * f2 + 1
+    elif shape["kind"] == "batched":
+        n = shape["n_nodes"] * shape["batch"]
+        e = shape["n_edges"] * shape["batch"]
+    else:
+        n, e = shape["n_nodes"], shape["n_edges"]
+    n, e = _pad_to(n), _pad_to(e)
+    d_feat = shape.get("d_feat", 128)
+    batch = {
+        "edge_src": jax.ShapeDtypeStruct((e,), i32),
+        "edge_dst": jax.ShapeDtypeStruct((e,), i32),
+    }
+    if cfg.arch in EQUIVARIANT:
+        n_graphs = shape.get("batch", 1)
+        batch.update(
+            species=jax.ShapeDtypeStruct((n,), i32),
+            positions=jax.ShapeDtypeStruct((n, 3), f32),
+            graph_id=jax.ShapeDtypeStruct((n,), i32),
+            energy=jax.ShapeDtypeStruct((n_graphs,), f32),
+        )
+        if cfg.arch == "nequip":
+            batch["forces"] = jax.ShapeDtypeStruct((n, 3), f32)
+    elif cfg.arch == "gat":
+        batch.update(
+            feats=jax.ShapeDtypeStruct((n, d_feat), f32),
+            labels=jax.ShapeDtypeStruct((n,), i32),
+            label_mask=jax.ShapeDtypeStruct((n,), f32),
+        )
+    else:  # graphcast
+        nv = cfg.n_vars or d_feat
+        batch.update(
+            feats=jax.ShapeDtypeStruct((n, nv), f32),
+            target=jax.ShapeDtypeStruct((n, nv), f32),
+        )
+    return batch
+
+
+def gnn_feat_dim(cfg: GNNConfig, shape: dict) -> int:
+    if cfg.arch in EQUIVARIANT:
+        return 0
+    if cfg.arch == "graphcast":
+        return cfg.n_vars
+    return shape.get("d_feat", 128)
+
+
+# ----------------------------------------------------------------------
+# recsys (DLRM)
+# ----------------------------------------------------------------------
+def dlrm_param_specs(params, *, tp="model"):
+    def spec(path, x):
+        if x.ndim == 2 and x.shape[0] > 4096:  # the big concatenated table
+            return P(tp, None)
+        return P(*(None,) * x.ndim)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def build_dlrm_train_step(cfg: RecsysConfig, mesh):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    opt_init, opt_update = make_optimizer("adamw", lambda s: 1e-3)
+
+    def step(params, opt_state, batch, step_i):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p, b: dlrm_loss(p, cfg, b["dense"], b["sparse_ids"], b["labels"]),
+            has_aux=True,
+        )(params, batch)
+        new_p, new_o, stats = opt_update(grads, opt_state, params, step_i)
+        return new_p, new_o, {**metrics, **stats}
+
+    dummy = jax.eval_shape(lambda k: dlrm_init(k, cfg), jax.random.key(0))
+    pspec = dlrm_param_specs(dummy)
+    opt_shape = jax.eval_shape(opt_init, dummy)
+
+    def ospec_fn(path, x):
+        if x.ndim == 2 and x.shape[0] > 4096:
+            return P("model", None)
+        if x.ndim >= 1 and x.shape[0] > 4096:  # adafactor factored rows
+            return P("model")
+        return P(*(None,) * x.ndim)
+
+    ospec = jax.tree_util.tree_map_with_path(ospec_fn, opt_shape)
+    shard = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t)
+    bspec = {
+        "dense": NamedSharding(mesh, P(dp, None)),
+        "sparse_ids": NamedSharding(mesh, P(dp, None, None)),
+        "labels": NamedSharding(mesh, P(dp)),
+    }
+    fn = jax.jit(
+        step,
+        in_shardings=(shard(pspec), shard(ospec), bspec, None),
+        donate_argnums=(0, 1),
+    )
+    return fn, dict(params=pspec, opt_init=opt_init, dummy=dummy)
+
+
+def build_dlrm_serve_step(cfg: RecsysConfig, mesh):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def serve(params, dense, sparse_ids):
+        from .dlrm import dlrm_forward
+
+        return jax.nn.sigmoid(dlrm_forward(params, cfg, dense, sparse_ids))
+
+    dummy = jax.eval_shape(lambda k: dlrm_init(k, cfg), jax.random.key(0))
+    pspec = dlrm_param_specs(dummy)
+    shard = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t)
+    fn = jax.jit(
+        serve,
+        in_shardings=(
+            shard(pspec),
+            NamedSharding(mesh, P(dp, None)),
+            NamedSharding(mesh, P(dp, None, None)),
+        ),
+    )
+    return fn, dict(params=pspec, dummy=dummy)
+
+
+def build_dlrm_retrieval_step(cfg: RecsysConfig, mesh):
+    def retrieve(params, dense, cand_ids):
+        return dlrm_retrieval(params, cfg, dense, cand_ids)
+
+    dummy = jax.eval_shape(lambda k: dlrm_init(k, cfg), jax.random.key(0))
+    pspec = dlrm_param_specs(dummy)
+    shard = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t)
+    axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    fn = jax.jit(
+        retrieve,
+        in_shardings=(
+            shard(pspec),
+            NamedSharding(mesh, P()),
+            NamedSharding(mesh, P(axes)),  # candidates sharded over all
+
+        ),
+    )
+    return fn, dict(params=pspec, dummy=dummy)
+
+
+def recsys_input_specs(cfg: RecsysConfig, shape: dict):
+    f32, i32 = jnp.float32, jnp.int32
+    if shape["kind"] == "retrieval":
+        return dict(
+            dense=jax.ShapeDtypeStruct((1, cfg.n_dense), f32),
+            cand_ids=jax.ShapeDtypeStruct(
+                (_pad_to(shape["n_candidates"]),), i32
+            ),
+        )
+    b = shape["batch"]
+    batch = dict(
+        dense=jax.ShapeDtypeStruct((b, cfg.n_dense), f32),
+        sparse_ids=jax.ShapeDtypeStruct((b, cfg.n_sparse, cfg.multi_hot), i32),
+    )
+    if shape["kind"] == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((b,), f32)
+    return batch

@@ -1,0 +1,116 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based capacity dispatch.
+
+Sort-based (GShard-style) dispatch: the (token, k) assignments are sorted
+by expert id, each expert keeps at most ``capacity`` tokens (overflow is
+dropped, standard for capacity-factor training), tokens are gathered into
+an ``(E, C, d)`` batch, the expert SwiGLU runs as one grouped einsum, and
+results scatter-add back weighted by router probabilities.
+
+Expert placement note (DESIGN.md §5): experts are *cyclically* sharded over
+the `model` axis — the paper's cyclic-balance argument applied to hot
+experts (consecutive experts land on different devices, so correlated-hot
+expert pairs spread out).  With E % ep_size == 0 cyclic == blocked in cost
+but better under skewed routing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+
+__all__ = ["moe_init", "moe_apply", "swiglu_init", "swiglu_apply"]
+
+
+def swiglu_init(key, d: int, d_ff: int, dtype=jnp.float32, n_experts: int = 0):
+    ks = jax.random.split(key, 3)
+    shape_in = (n_experts, d, d_ff) if n_experts else (d, d_ff)
+    shape_out = (n_experts, d_ff, d) if n_experts else (d_ff, d)
+    import math
+
+    s = 1.0 / math.sqrt(d)
+    s2 = 1.0 / math.sqrt(d_ff)
+    return {
+        "w_gate": jax.random.uniform(ks[0], shape_in, dtype, -s, s),
+        "w_in": jax.random.uniform(ks[1], shape_in, dtype, -s, s),
+        "w_out": jax.random.uniform(ks[2], shape_out, dtype, -s2, s2),
+    }
+
+
+def swiglu_apply(p, x):
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_in"])) @ p["w_out"]
+
+
+def moe_init(
+    key,
+    d: int,
+    n_experts: int,
+    moe_d_ff: int,
+    n_shared: int = 0,
+    dtype=jnp.float32,
+):
+    ks = jax.random.split(key, 3)
+    p = {
+        "router": nn.dense_init(ks[0], d, n_experts, dtype=dtype),
+        "experts": swiglu_init(ks[1], d, moe_d_ff, dtype, n_experts=n_experts),
+    }
+    if n_shared:
+        p["shared"] = swiglu_init(ks[2], d, n_shared * moe_d_ff, dtype)
+    return p
+
+
+def moe_apply(
+    p,
+    x,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    router_noise: bool = False,
+):
+    """x: (T, d) -> (T, d); returns (y, aux) with the load-balancing loss."""
+    t, d = x.shape
+    e = p["router"]["w"].shape[1]
+    logits = nn.dense(p["router"], x.astype(jnp.float32))  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, top_k)  # (T, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalize
+
+    cap = max(1, int(capacity_factor * t * top_k / e))
+    flat_e = top_i.reshape(-1)  # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t), top_k)
+    flat_w = top_p.reshape(-1)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # rank within expert group (se is sorted)
+    pos = jnp.arange(t * top_k) - jnp.searchsorted(se, se, side="left")
+    keep = pos < cap
+    slot = jnp.where(keep, se * cap + pos, e * cap)  # overflow -> pad row
+
+    xe = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].set(x[st])
+    xe = xe[:-1].reshape(e, cap, d)
+    # grouped expert SwiGLU
+    gate = jnp.einsum("ecd,edf->ecf", xe, p["experts"]["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", xe, p["experts"]["w_in"])
+    ye = jnp.einsum(
+        "ecf,efd->ecd", jax.nn.silu(gate) * up, p["experts"]["w_out"]
+    )
+    ye_flat = ye.reshape(e * cap, d)
+    contrib = jnp.where(keep, sw, 0.0)[:, None].astype(x.dtype) * ye_flat[
+        jnp.minimum(slot, e * cap - 1)
+    ]
+    y = jnp.zeros((t, d), x.dtype).at[st].add(contrib)
+
+    if "shared" in p:
+        y = y + swiglu_apply(p["shared"], x)
+
+    # Switch-style load-balancing aux loss
+    me = jnp.mean(probs, axis=0)  # (E,)
+    fe = jnp.mean(
+        jax.nn.one_hot(top_i[:, 0], e, dtype=jnp.float32), axis=0
+    )
+    aux = e * jnp.sum(me * fe)
+    return y, aux

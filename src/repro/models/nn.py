@@ -1,0 +1,87 @@
+"""Minimal pure-JAX module substrate (no flax on this box).
+
+Convention: a layer is a pair of plain functions —
+``init(key, ...) -> params`` (a pytree of jnp arrays) and
+``apply(params, x, ...) -> y``.  Models compose these; parameters are
+nested dicts so sharding rules can match on path names.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init",
+    "dense",
+    "mlp_init",
+    "mlp",
+    "rmsnorm_init",
+    "rmsnorm",
+    "layernorm_init",
+    "layernorm",
+    "embed_init",
+]
+
+Dtype = jnp.dtype
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(d_in)
+    w = jax.random.uniform(key, (d_in, d_out), dtype, -scale, scale)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def mlp_init(key, dims: Sequence[int], *, bias: bool = True, dtype=jnp.float32):
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"l{i}": dense_init(k, dims[i], dims[i + 1], bias=bias, dtype=dtype)
+        for i, k in enumerate(keys)
+    }
+
+
+def mlp(p, x, *, act=jax.nn.silu, final_act=False):
+    n = len(p)
+    for i in range(n):
+        x = dense(p[f"l{i}"], x)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}

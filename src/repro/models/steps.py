@@ -1,0 +1,318 @@
+"""Sharded train/serve step builders for the LM family.
+
+Sharding recipe (GSPMD, DESIGN.md §5):
+
+* parameters — 2D sharded: FSDP dim over ``data``, TP dim over ``model``;
+  MoE experts over ``model`` (cyclic EP); scanned layers keep a leading
+  un-sharded L dim.  The ``pod`` axis is pure DP (params replicated across
+  pods; gradient psum spans pods).
+* activations — batch over (``pod``,) ``data``; head/ff dims follow the
+  weights; decode KV caches are **sequence-sharded** over ``model`` so
+  one-token attention becomes a psum-combined partial softmax
+  (flash-decoding on the mesh).
+* training — gradient-accumulation microbatching (``cfg.microbatch_size``)
+  under ``lax.scan``; AdamW or Adafactor; optional int8-compressed DP
+  gradient psum.
+"""
+from __future__ import annotations
+
+import functools
+import re
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import LMConfig
+from ..optim import make_optimizer, cosine_schedule
+from . import nn
+from .transformer import init_kv_cache, lm_decode_step, lm_forward, lm_init, lm_loss
+
+__all__ = [
+    "lm_param_specs",
+    "build_lm_train_step",
+    "build_lm_prefill_step",
+    "build_lm_decode_step",
+    "lm_input_specs",
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def lm_param_specs(params, cfg: LMConfig, *, fsdp="data", tp="model", mesh=None):
+    """PartitionSpec pytree matched on parameter path names.
+
+    Expert tensors shard E over `model` (EP) when the expert count divides
+    the axis; otherwise (e.g. grok's 8 experts on a 16-wide axis) they fall
+    back to TP within each expert (d/ff over the mesh axes).
+    """
+    tp_size = mesh.shape[tp] if mesh is not None else 1
+    ep_ok = cfg.n_experts == 0 or (
+        tp_size <= 1 or cfg.n_experts % tp_size == 0
+    )
+
+    def spec_for(path: str, ndim: int) -> P:
+        stacked = path.startswith(("layers/", "dense_layers/"))
+        lead = (None,) if stacked else ()
+        base_ndim = ndim - (1 if stacked else 0)
+
+        def mk(*dims):
+            assert len(dims) == base_ndim, (path, dims, ndim)
+            return P(*(lead + dims))
+
+        if "embed/table" in path:
+            return P(tp, None)
+        if path == "lm_head/w":
+            return P(fsdp, tp)
+        if base_ndim <= 1:
+            return P(*(lead + (None,) * base_ndim))
+        if "experts/" in path:  # (E, d, ff) / (E, ff, d)
+            if ep_ok:
+                if path.endswith("w_out"):
+                    return mk(tp, None, fsdp)
+                return mk(tp, fsdp, None)
+            if path.endswith("w_out"):
+                return mk(None, tp, fsdp)
+            return mk(None, fsdp, tp)
+        if re.search(r"attn/(wq|wk|wv)/w$", path):
+            return mk(fsdp, tp)
+        if path.endswith("attn/wo/w"):
+            return mk(tp, fsdp)
+        if re.search(r"(q_up|k_up|v_up)/w$", path):
+            return mk(None, tp)
+        if re.search(r"(q_down|kv_down)/w$", path):
+            return mk(fsdp, None)
+        if path.endswith("router/w"):
+            return mk(fsdp, None)
+        if re.search(r"(w_gate|w_in)$", path):
+            return mk(fsdp, tp)
+        if path.endswith("w_out"):
+            return mk(tp, fsdp)
+        if path.endswith("proj/w"):  # mtp projection
+            return mk(fsdp, None)
+        if path.endswith("/w"):
+            return mk(fsdp, None) if base_ndim == 2 else P(*(lead + (None,) * base_ndim))
+        return P(*(lead + (None,) * base_ndim))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: spec_for(_path_str(path), x.ndim), params
+    )
+
+
+def _opt_specs(opt_state, param_specs):
+    """Derive optimizer-state specs from param specs (factored states drop
+    the factored dim)."""
+
+    def leaf_spec(path, x):
+        ps = _path_str(path)
+        # path looks like m/<param path> or v/<param path>/vr etc.
+        parts = ps.split("/")
+        tail = parts[-1]
+        param_path = "/".join(parts[1:])
+        spec = _lookup(param_specs, param_path)
+        if spec is None:
+            # factored adafactor leaves: strip trailing vr/vc/v
+            spec = _lookup(param_specs, "/".join(parts[1:-1]))
+            if spec is None:
+                return P()
+            if tail == "vr":
+                return P(*spec[:-1])
+            if tail == "vc":
+                return P(*(spec[:-2] + spec[-1:]))
+            if tail == "v":
+                return spec
+            return P()
+        return spec
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, opt_state)
+
+
+def _lookup(spec_tree, path: str):
+    node = spec_tree
+    for part in path.split("/"):
+        if isinstance(node, dict) and part in node:
+            node = node[part]
+        else:
+            return None
+    return node if isinstance(node, P) else None
+
+
+def _dp_spec(mesh) -> Tuple:
+    names = list(mesh.axis_names)
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def _inject_attn_specs(cfg: LMConfig, mesh, *, tp="model"):
+    """§Perf H2: q-sequence-parallel attention layout (see _attn_train)."""
+    import copy
+
+    cfg = copy.copy(cfg)
+    tp_size = mesh.shape[tp] if tp in mesh.axis_names else 1
+    if tp_size <= 1:
+        cfg._attn_specs = None
+        return cfg
+    dp = _dp_spec(mesh)
+    ns = lambda spec: NamedSharding(mesh, spec)
+    cfg._attn_specs = {
+        # reshaped q (b, nq, qc, kvh, g, dh): chunks over the TP axis
+        "q6": ns(P(dp, tp, None, None, None, None)),
+        # k/v replicated over TP (small: kv_heads * dh per token)
+        "kv": ns(P(dp, None, None, None)),
+        # attention output back to seq-sharded for the FFN
+        "out": ns(P(dp, tp, None, None)),
+        "nq_mult": tp_size,
+    }
+    return cfg
+
+
+def build_lm_train_step(cfg: LMConfig, mesh, *, compress_grads: bool = False):
+    """Returns (step_fn, shardings) — step_fn(params, opt, batch, step)."""
+    dp = _dp_spec(mesh)
+    cfg = _inject_attn_specs(cfg, mesh)
+    opt_init, opt_update = make_optimizer(
+        cfg.optimizer, cosine_schedule(3e-4, 2000, 100_000)
+    )
+
+    def loss_fn(params, tokens, labels):
+        loss, metrics = lm_loss(params, cfg, tokens, labels)
+        return loss, metrics
+
+    def step_fn(params, opt_state, batch, step):
+        tokens, labels = batch["tokens"], batch["labels"]
+        b = tokens.shape[0]
+        mb = min(cfg.microbatch_size, b)
+        nm = b // mb
+        tok_m = tokens.reshape(nm, mb, tokens.shape[1])
+        lab_m = labels.reshape(nm, mb, labels.shape[1])
+
+        def micro(carry, xs):
+            g_acc, l_acc = carry
+            t, l = xs
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, t, l
+            )
+            g_acc = jax.tree.map(jnp.add, g_acc, grads)
+            return (g_acc, l_acc + loss), metrics
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss_sum), _ = jax.lax.scan(micro, (g0, 0.0), (tok_m, lab_m))
+        grads = jax.tree.map(lambda g: g / nm, grads)
+        new_params, new_opt, stats = opt_update(grads, opt_state, params, step)
+        metrics = {"loss": loss_sum / nm, **stats}
+        return new_params, new_opt, metrics
+
+    # shardings
+    dummy = jax.eval_shape(lambda k: lm_init(k, cfg), jax.random.key(0))
+    pspecs = lm_param_specs(dummy, cfg, mesh=mesh)
+    ospecs_tree = None  # inferred lazily below
+
+    def shard(tree_specs):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs)
+
+    opt_shape = jax.eval_shape(opt_init, dummy)
+    ospecs = _opt_specs(opt_shape, pspecs)
+    batch_spec = {
+        "tokens": NamedSharding(mesh, P(dp, None)),
+        "labels": NamedSharding(mesh, P(dp, None)),
+    }
+    fn = jax.jit(
+        step_fn,
+        in_shardings=(shard(pspecs), shard(ospecs), batch_spec, None),
+        out_shardings=(shard(pspecs), shard(ospecs), None),
+        donate_argnums=(0, 1),
+    )
+    return fn, dict(params=pspecs, opt=ospecs, opt_init=opt_init, dummy=dummy,
+                    opt_shape=opt_shape)
+
+
+def build_lm_prefill_step(cfg: LMConfig, mesh):
+    """Prefill: full forward over (B, S) + last-position logits."""
+    dp = _dp_spec(mesh)
+    cfg = _inject_attn_specs(cfg, mesh)
+
+    def prefill(params, tokens):
+        h, _ = lm_forward(params, cfg, tokens)
+        logits = nn.dense(params["lm_head"], h[:, -1])
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    dummy = jax.eval_shape(lambda k: lm_init(k, cfg), jax.random.key(0))
+    pspecs = lm_param_specs(dummy, cfg, mesh=mesh)
+    shard = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t)
+    fn = jax.jit(
+        prefill,
+        in_shardings=(shard(pspecs), NamedSharding(mesh, P(dp, None))),
+    )
+    return fn, dict(params=pspecs, dummy=dummy)
+
+
+def cache_specs(cfg: LMConfig, *, dp, tp="model"):
+    """KV cache PartitionSpecs: batch over dp, seq over model (SP)."""
+    if cfg.mla:
+        return {
+            "ckv": P(None, dp, tp, None),
+            "k_rope": P(None, dp, tp, None),
+        }
+    return {
+        "k": P(None, dp, tp, None, None),
+        "v": P(None, dp, tp, None, None),
+    }
+
+
+def build_lm_decode_step(cfg: LMConfig, mesh):
+    """One-token decode with sequence-sharded KV cache."""
+    dp = _dp_spec(mesh)
+
+    def decode(params, cache, token, cache_len):
+        nt, logits, new_cache = lm_decode_step(params, cfg, token, cache, cache_len)
+        return nt, new_cache
+
+    dummy = jax.eval_shape(lambda k: lm_init(k, cfg), jax.random.key(0))
+    pspecs = lm_param_specs(dummy, cfg, mesh=mesh)
+    cspecs = cache_specs(cfg, dp=dp)
+    shard = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t)
+    fn = jax.jit(
+        decode,
+        in_shardings=(
+            shard(pspecs),
+            shard(cspecs),
+            NamedSharding(mesh, P(dp)),
+            NamedSharding(mesh, P(dp)),
+        ),
+        out_shardings=(NamedSharding(mesh, P(dp)), shard(cspecs)),
+        donate_argnums=(1,),
+    )
+    return fn, dict(params=pspecs, cache=cspecs, dummy=dummy)
+
+
+def lm_input_specs(cfg: LMConfig, shape: dict, *, step: str):
+    """ShapeDtypeStructs for the dry-run, per shape-set entry."""
+    b = shape["global_batch"]
+    s = shape["seq_len"]
+    if step == "train":
+        return dict(
+            batch={
+                "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            }
+        )
+    if step == "prefill":
+        return dict(tokens=jax.ShapeDtypeStruct((b, s), jnp.int32))
+    if step == "decode":
+        cache = jax.eval_shape(
+            lambda: init_kv_cache(cfg, b, s)
+        )
+        return dict(
+            cache=cache,
+            token=jax.ShapeDtypeStruct((b,), jnp.int32),
+            cache_len=jax.ShapeDtypeStruct((b,), jnp.int32),
+        )
+    raise ValueError(step)

@@ -1,0 +1,374 @@
+"""Transformer LM covering all five assigned architectures.
+
+Features: GQA with optional QKV bias, full/partial RoPE, SwiGLU FFN,
+MoE (top-k, shared experts, capacity dispatch), MLA (DeepSeek low-rank
+attention, absorbed-matmul decode), MTP auxiliary head, scan-over-layers
+with remat (compact HLO at 80 layers), bf16 params option.
+
+Parameter tree layout (scanned layers carry a leading L dim):
+
+    {"embed": .., "layers": {...}, ["dense_layers": {...}],
+     "final_norm": .., "lm_head": .., ["mtp": {...}]}
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import LMConfig
+from . import nn
+from .attention import apply_rope, causal_attention, decode_attention
+from .moe import moe_apply, moe_init, swiglu_apply, swiglu_init
+
+__all__ = ["lm_init", "lm_loss", "lm_forward", "lm_decode_step", "init_kv_cache"]
+
+
+def _dtype(cfg: LMConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+def _attn_init(key, cfg: LMConfig, dtype):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 8)
+    if cfg.mla:
+        qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+        nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        return {
+            "q_down": nn.dense_init(ks[0], d, qr, dtype=dtype),
+            "q_up": nn.dense_init(ks[1], qr, h * (nope + rope), dtype=dtype),
+            "kv_down": nn.dense_init(ks[2], d, kvr + rope, dtype=dtype),
+            "k_up": nn.dense_init(ks[3], kvr, h * nope, dtype=dtype),
+            "v_up": nn.dense_init(ks[4], kvr, h * vd, dtype=dtype),
+            "wo": nn.dense_init(ks[5], h * vd, d, dtype=dtype),
+            "ln_q": nn.rmsnorm_init(qr, dtype),
+            "ln_kv": nn.rmsnorm_init(kvr, dtype),
+        }
+    return {
+        "wq": nn.dense_init(ks[0], d, h * dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": nn.dense_init(ks[1], d, kv * dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": nn.dense_init(ks[2], d, kv * dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": nn.dense_init(ks[3], h * dh, d, dtype=dtype),
+    }
+
+
+def _layer_init(key, cfg: LMConfig, *, moe_layer: bool, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "ln1": nn.rmsnorm_init(cfg.d_model, dtype),
+        "ln2": nn.rmsnorm_init(cfg.d_model, dtype),
+        "attn": _attn_init(k1, cfg, dtype),
+    }
+    if moe_layer:
+        p["moe"] = moe_init(
+            k2,
+            cfg.d_model,
+            cfg.n_experts,
+            cfg.moe_d_ff,
+            n_shared=cfg.n_shared_experts,
+            dtype=dtype,
+        )
+    else:
+        p["ffn"] = swiglu_init(k3, cfg.d_model, cfg.d_ff, dtype=dtype)
+    return p
+
+
+def lm_init(key, cfg: LMConfig):
+    dtype = _dtype(cfg)
+    keys = jax.random.split(key, 6)
+    n_dense = cfg.first_dense_layers if cfg.moe else cfg.n_layers
+    n_scan = cfg.n_layers - cfg.first_dense_layers if cfg.moe else cfg.n_layers
+    params: Dict[str, Any] = {
+        "embed": nn.embed_init(keys[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": nn.rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": nn.dense_init(keys[1], cfg.d_model, cfg.vocab, dtype=dtype),
+    }
+    if cfg.moe:
+        if cfg.first_dense_layers:
+            dkeys = jax.random.split(keys[2], cfg.first_dense_layers)
+            params["dense_layers"] = jax.vmap(
+                lambda k: _layer_init(k, cfg, moe_layer=False, dtype=dtype)
+            )(dkeys)
+        lkeys = jax.random.split(keys[3], n_scan)
+        params["layers"] = jax.vmap(
+            lambda k: _layer_init(k, cfg, moe_layer=True, dtype=dtype)
+        )(lkeys)
+    else:
+        lkeys = jax.random.split(keys[3], cfg.n_layers)
+        params["layers"] = jax.vmap(
+            lambda k: _layer_init(k, cfg, moe_layer=False, dtype=dtype)
+        )(lkeys)
+    if cfg.mtp:
+        k_mtp1, k_mtp2 = jax.random.split(keys[4])
+        params["mtp"] = {
+            "proj": nn.dense_init(k_mtp1, 2 * cfg.d_model, cfg.d_model, dtype=dtype),
+            "layer": _layer_init(k_mtp2, cfg, moe_layer=False, dtype=dtype),
+            "norm_h": nn.rmsnorm_init(cfg.d_model, dtype),
+            "norm_e": nn.rmsnorm_init(cfg.d_model, dtype),
+        }
+    return params
+
+
+# ----------------------------------------------------------------------
+# forward
+# ----------------------------------------------------------------------
+def _constrain(x, spec):
+    return jax.lax.with_sharding_constraint(x, spec) if spec is not None else x
+
+
+def _attn_train(p, cfg: LMConfig, x, positions):
+    """GQA / MLA attention with explicit q-sequence-parallel layout.
+
+    §Perf H2: without constraints GSPMD shards the kv-seq *contraction*
+    dim of the flash inner products over `model`, inserting an all-reduce
+    per (layer × microbatch × q-chunk × kv-chunk) — 2.9 TB/device/step on
+    qwen2 train_4k.  Pinning q (and the attention output) to seq-sharded
+    P(dp, model, ...) and k/v to replicated-over-model makes every score/PV
+    contraction local: perfect 1/tp q-row parallelism for ANY head count
+    (14 heads on a 16-wide axis included), with only a per-layer k/v
+    broadcast.  Specs are injected by the step builders via
+    ``cfg._attn_specs`` (None on 1x1 meshes).
+    """
+    specs = getattr(cfg, "_attn_specs", None) or {}
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    if cfg.mla:
+        nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        cq = nn.rmsnorm(p["ln_q"], nn.dense(p["q_down"], x))
+        q = nn.dense(p["q_up"], cq).reshape(b, s, h, nope + rope)
+        q_nope, q_rope = q[..., :nope], q[..., nope:]
+        q_rope = apply_rope(q_rope, positions, theta=cfg.rope_theta)
+        ckv_full = nn.dense(p["kv_down"], x)
+        ckv = nn.rmsnorm(p["ln_kv"], ckv_full[..., : cfg.kv_lora_rank])
+        k_rope = ckv_full[..., cfg.kv_lora_rank :].reshape(b, s, 1, rope)
+        k_rope = apply_rope(k_rope, positions, theta=cfg.rope_theta)
+        k_nope = nn.dense(p["k_up"], ckv).reshape(b, s, h, nope)
+        v = nn.dense(p["v_up"], ckv).reshape(b, s, h, vd)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, s, h, rope))], axis=-1
+        )
+        k_full = _constrain(k_full, specs.get("kv"))
+        v = _constrain(v, specs.get("kv"))
+        out = causal_attention(
+            q_full, k_full, v,
+            q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+            q6_spec=specs.get("q6"), nq_multiple=specs.get("nq_mult", 1),
+        )
+        out = _constrain(out, specs.get("out"))
+        return nn.dense(p["wo"], out.reshape(b, s, h * vd))
+    q = nn.dense(p["wq"], x).reshape(b, s, h, dh)
+    k = nn.dense(p["wk"], x).reshape(b, s, kv, dh)
+    v = nn.dense(p["wv"], x).reshape(b, s, kv, dh)
+    q = apply_rope(q, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    k = apply_rope(k, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    k = _constrain(k, specs.get("kv"))
+    v = _constrain(v, specs.get("kv"))
+    out = causal_attention(
+        q, k, v, q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+        q6_spec=specs.get("q6"), nq_multiple=specs.get("nq_mult", 1),
+    )
+    out = _constrain(out, specs.get("out"))
+    return nn.dense(p["wo"], out.reshape(b, s, h * dh))
+
+
+def _layer_apply(p, cfg: LMConfig, x, positions, *, moe_layer: bool):
+    h = x + _attn_train(p["attn"], cfg, nn.rmsnorm(p["ln1"], x), positions)
+    z = nn.rmsnorm(p["ln2"], h)
+    if moe_layer:
+        b, s, d = z.shape
+        y, aux = moe_apply(p["moe"], z.reshape(b * s, d), top_k=cfg.top_k)
+        return h + y.reshape(b, s, d), aux
+    return h + swiglu_apply(p["ffn"], z), jnp.zeros((), jnp.float32)
+
+
+def lm_forward(params, cfg: LMConfig, tokens):
+    """tokens (B, S) -> hidden states (B, S, d) + moe aux loss."""
+    b, s = tokens.shape
+    x = params["embed"]["table"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def run_stack(stack_params, x, moe_layer):
+        def body(carry, layer_p):
+            h, aux = carry
+            h2, a = _layer_apply(
+                layer_p, cfg, h, positions, moe_layer=moe_layer
+            )
+            return (h2, aux + a), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)), stack_params)
+        return x, aux
+
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.moe and cfg.first_dense_layers:
+        x, a = run_stack(params["dense_layers"], x, False)
+        aux_total += a
+    x, a = run_stack(params["layers"], x, cfg.moe)
+    aux_total += a
+    return nn.rmsnorm(params["final_norm"], x), aux_total
+
+
+def lm_loss(params, cfg: LMConfig, tokens, labels):
+    """Next-token CE (+ MoE aux + MTP aux).  tokens/labels: (B, S)."""
+    h, aux = lm_forward(params, cfg, tokens)
+    logits = nn.dense(params["lm_head"], h).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    total = ce + 0.01 * aux
+    metrics = {"ce": ce, "moe_aux": aux}
+    if cfg.mtp:
+        # MTP: predict token t+2 from (h_t, emb(label_t)) through one extra
+        # layer (DeepSeek-V3 §2.2); applied on a shifted slice.
+        p = params["mtp"]
+        emb_next = params["embed"]["table"][labels]
+        cat = jnp.concatenate(
+            [nn.rmsnorm(p["norm_h"], h), nn.rmsnorm(p["norm_e"], emb_next)],
+            axis=-1,
+        )
+        h2 = nn.dense(p["proj"], cat)
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        h2, _ = _layer_apply(p["layer"], cfg, h2, positions, moe_layer=False)
+        logits2 = nn.dense(params["lm_head"], h2[:, :-1]).astype(jnp.float32)
+        mtp_labels = labels[:, 1:]
+        logz2 = jax.nn.logsumexp(logits2, axis=-1)
+        gold2 = jnp.take_along_axis(
+            logits2, mtp_labels[..., None], axis=-1
+        )[..., 0]
+        mtp_ce = jnp.mean(logz2 - gold2)
+        total = total + 0.3 * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    return total, metrics
+
+
+# ----------------------------------------------------------------------
+# decode (serving)
+# ----------------------------------------------------------------------
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    """Per-layer stacked KV cache pytree (see steps.serve_step for specs)."""
+    dtype = dtype or _dtype(cfg)
+    l = cfg.n_layers
+    if cfg.mla:
+        return {
+            "ckv": jnp.zeros((l, batch, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((l, batch, max_len, cfg.qk_rope_dim), dtype),
+        }
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    return {
+        "k": jnp.zeros((l, batch, max_len, kv, dh), dtype),
+        "v": jnp.zeros((l, batch, max_len, kv, dh), dtype),
+    }
+
+
+def _attn_decode(p, cfg: LMConfig, x, cache_layer, cache_len):
+    """x: (B, d) single token; returns (out (B, d), updated cache_layer)."""
+    b, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    pos = cache_len  # (B,) current position
+    if cfg.mla:
+        nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        kvr = cfg.kv_lora_rank
+        cq = nn.rmsnorm(p["ln_q"], nn.dense(p["q_down"], x))
+        q = nn.dense(p["q_up"], cq).reshape(b, h, nope + rope)
+        q_nope, q_rope = q[..., :nope], q[..., nope:]
+        q_rope = apply_rope(
+            q_rope[:, None], pos[:, None], theta=cfg.rope_theta
+        )[:, 0]
+        ckv_full = nn.dense(p["kv_down"], x)
+        ckv_new = nn.rmsnorm(p["ln_kv"], ckv_full[..., :kvr])
+        kr_new = apply_rope(
+            ckv_full[..., kvr:][:, None, None], pos[:, None], theta=cfg.rope_theta
+        )[:, 0, 0]
+        ckv_c = jax.vmap(
+            lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(c, u[None], i, 0)
+        )(cache_layer["ckv"], ckv_new.astype(cache_layer["ckv"].dtype), pos)
+        kr_c = jax.vmap(
+            lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(c, u[None], i, 0)
+        )(cache_layer["k_rope"], kr_new.astype(cache_layer["k_rope"].dtype), pos)
+        # absorbed decode: q_eff[b,h,r] = sum_n q_nope[b,h,n] * k_up[r, h, n]
+        k_up = p["k_up"]["w"].reshape(kvr, h, nope)
+        q_eff = jnp.einsum("bhn,rhn->bhr", q_nope, k_up)
+        s_len = ckv_c.shape[1]
+        sc = jnp.einsum("bhr,bsr->bhs", q_eff, ckv_c.astype(jnp.float32))
+        sc += jnp.einsum("bhr,bsr->bhs", q_rope, kr_c.astype(jnp.float32))
+        sc = sc * ((nope + rope) ** -0.5)
+        mask = jnp.arange(s_len)[None, :] <= pos[:, None]
+        sc = jnp.where(mask[:, None, :], sc, -jnp.inf)
+        w = jax.nn.softmax(sc, axis=-1)
+        ctx = jnp.einsum("bhs,bsr->bhr", w, ckv_c.astype(jnp.float32))
+        v_up = p["v_up"]["w"].reshape(kvr, h, vd)
+        out = jnp.einsum("bhr,rhv->bhv", ctx, v_up).astype(x.dtype)
+        out = nn.dense(p["wo"], out.reshape(b, h * vd))
+        return out, {"ckv": ckv_c, "k_rope": kr_c}
+    q = nn.dense(p["wq"], x).reshape(b, h, dh)
+    k_new = nn.dense(p["wk"], x).reshape(b, kv, dh)
+    v_new = nn.dense(p["wv"], x).reshape(b, kv, dh)
+    q = apply_rope(
+        q[:, None], pos[:, None], fraction=cfg.rope_fraction,
+        theta=cfg.rope_theta,
+    )[:, 0]
+    k_new = apply_rope(
+        k_new[:, None], pos[:, None], fraction=cfg.rope_fraction,
+        theta=cfg.rope_theta,
+    )[:, 0]
+    upd = lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(c, u[None], i, 0)
+    k_c = jax.vmap(upd)(cache_layer["k"], k_new.astype(cache_layer["k"].dtype), pos)
+    v_c = jax.vmap(upd)(cache_layer["v"], v_new.astype(cache_layer["v"].dtype), pos)
+    out = decode_attention(q, k_c, v_c, pos + 1)
+    out = nn.dense(p["wo"], out.reshape(b, h * dh))
+    return out, {"k": k_c, "v": v_c}
+
+
+def lm_decode_step(params, cfg: LMConfig, token, cache, cache_len):
+    """One greedy decode step.
+
+    token: (B,) int32; cache: stacked per-layer pytree; cache_len: (B,).
+    Returns (next_token (B,), logits (B, V), new cache).
+    """
+    x = params["embed"]["table"][token]
+
+    n_dense = cfg.first_dense_layers if cfg.moe else 0
+
+    # scan over layers carrying x, emitting updated caches
+    def scan_stack(x, stack_params, stack_cache, moe_layer):
+        def body(x, sl):
+            layer_p = sl[0]
+            cache_layer = sl[1]
+            z = nn.rmsnorm(layer_p["ln1"], x)
+            attn_out, new_cache = _attn_decode(
+                layer_p["attn"], cfg, z, cache_layer, cache_len
+            )
+            h = x + attn_out
+            z2 = nn.rmsnorm(layer_p["ln2"], h)
+            if moe_layer:
+                y, _ = moe_apply(layer_p["moe"], z2, top_k=cfg.top_k)
+                h = h + y
+            else:
+                h = h + swiglu_apply(layer_p["ffn"], z2)
+            return h, new_cache
+
+        return jax.lax.scan(body, x, (stack_params, stack_cache))
+
+    new_cache = {}
+    if cfg.moe and n_dense:
+        dense_cache = jax.tree.map(lambda c: c[:n_dense], cache)
+        moe_cache = jax.tree.map(lambda c: c[n_dense:], cache)
+        x, dc = scan_stack(x, params["dense_layers"], dense_cache, False)
+        x, mc = scan_stack(x, params["layers"], moe_cache, True)
+        new_cache = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), dc, mc
+        )
+    else:
+        x, new_cache = scan_stack(x, params["layers"], cache, cfg.moe)
+
+    x = nn.rmsnorm(params["final_norm"], x)
+    logits = nn.dense(params["lm_head"], x).astype(jnp.float32)
+    next_token = jnp.argmax(logits, axis=-1).astype(token.dtype)
+    return next_token, logits, new_cache

@@ -1,0 +1,59 @@
+"""AdamW with fp32 moments and decoupled weight decay."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw_init", "adamw_update"]
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def adamw_update(
+    grads,
+    state,
+    params,
+    step,
+    *,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+):
+    lr_t = lr(step) if callable(lr) else lr
+    # global grad-norm clip
+    gsq = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(grads)
+    )
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m2 / (1 - b1 ** (step + 1))
+        vhat = v2 / (1 - b2 ** (step + 1))
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gnorm}

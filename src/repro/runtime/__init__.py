@@ -1,0 +1,4 @@
+"""Distributed runtime: elasticity, plan rebalancing, fault handling."""
+from .elastic import best_grid, replan_elastic  # noqa: F401
+from .rebalance import rebalance_plan  # noqa: F401
+from .fault import run_with_restarts  # noqa: F401

@@ -1,0 +1,48 @@
+"""Elastic scaling: re-factorize the grid after device count changes.
+
+Cannon needs a square grid; after losing devices the framework falls back
+to the best rectangular factorization under the SUMMA schedule (the
+paper's own §8 suggestion) and replans.  Checkpointed TC state (shift
+index + partial counts) or training state (global arrays) restores onto
+the new mesh via :mod:`repro.ckpt`.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+__all__ = ["best_grid", "replan_elastic"]
+
+
+def best_grid(n_devices: int, *, require_square: bool = False) -> Tuple[int, int]:
+    """Largest usable (r, c) with r*c <= n_devices.
+
+    Prefers square; falls back to the most-square factorization where the
+    larger dim is a multiple of the smaller (SUMMA panel-slot requirement).
+    """
+    q = int(math.isqrt(n_devices))
+    if require_square:
+        return q, q
+    best = (1, 1)
+    for r in range(1, n_devices + 1):
+        c = n_devices // r
+        if c < r:
+            break
+        if c % r == 0 and r * c <= n_devices:
+            # prefer larger area, then most-square (largest r)
+            if (r * c, r) > (best[0] * best[1], best[0]):
+                best = (r, c)
+    if best == (1, 1):
+        best = (q, q)
+    return best
+
+
+def replan_elastic(graph, n_devices: int, *, chunk: int = 512):
+    """Re-plan for a new device count: square -> Cannon, else SUMMA."""
+    from ..core.plan import build_plan
+    from ..core.summa import build_summa_plan
+
+    r, c = best_grid(n_devices)
+    if r == c:
+        return "cannon", build_plan(graph, r, chunk=chunk), (r, c)
+    return "summa", build_summa_plan(graph, r, c, chunk=chunk), (r, c)

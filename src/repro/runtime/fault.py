@@ -1,0 +1,72 @@
+"""Fault-tolerant execution wrapper: checkpoint/restart with retries.
+
+``run_with_restarts`` drives a step function with periodic checkpoints;
+on failure (device loss / preemption / injected fault) it restores the
+latest checkpoint — optionally onto a smaller elastic grid — and
+continues.  The TC driver uses shift-level state (shift index + partial
+counts); training uses (step, params, opt, rng).
+"""
+from __future__ import annotations
+
+import logging
+import time
+from typing import Callable, Optional
+
+from ..ckpt import CheckpointManager
+
+log = logging.getLogger(__name__)
+
+__all__ = ["run_with_restarts"]
+
+
+def run_with_restarts(
+    init_state: Callable[[], dict],
+    step_fn: Callable[[dict, int], dict],
+    *,
+    n_steps: int,
+    ckpt_dir: str,
+    ckpt_every: int = 50,
+    max_restarts: int = 3,
+    state_like=None,
+    fault_injector: Optional[Callable[[int], None]] = None,
+):
+    """Run ``step_fn`` n_steps times with checkpoint/restart semantics.
+
+    ``fault_injector(step)`` may raise to simulate failures (used by tests
+    and the fault-tolerance example).  Returns the final state dict.
+    """
+    mgr = CheckpointManager(ckpt_dir, keep=2, async_save=False)
+    restarts = 0
+    state = None
+    start = 0
+
+    like = state_like or init_state()
+    got_step, restored, extra = mgr.restore_latest(like)
+    if restored is not None:
+        state, start = restored, int(extra["next_step"])
+        log.info("resumed from step %d", start)
+    else:
+        state = init_state()
+
+    step = start
+    while step < n_steps:
+        try:
+            if fault_injector is not None:
+                fault_injector(step)
+            state = step_fn(state, step)
+            step += 1
+            if step % ckpt_every == 0 or step == n_steps:
+                mgr.save(step, state, extra={"next_step": step})
+        except Exception as e:  # noqa: BLE001
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            log.warning("step %d failed (%s); restarting", step, e)
+            got_step, restored, extra = mgr.restore_latest(like)
+            if restored is None:
+                state, step = init_state(), 0
+            else:
+                state, step = restored, int(extra["next_step"])
+            time.sleep(0.01)
+    mgr.close()
+    return state

@@ -1,0 +1,9 @@
+"""Sparse substrate: segment-op message passing, EmbeddingBag, sampling.
+
+JAX has no native EmbeddingBag or CSR SpMM — these are built here from
+``jnp.take`` + ``jax.ops.segment_sum`` as first-class framework pieces
+(assignment requirement; see kernel_taxonomy §GNN/§RecSys).
+"""
+from .segment import segment_softmax, segment_sum, spmm_edges  # noqa: F401
+from .embedding_bag import embedding_bag  # noqa: F401
+from .sampler import sample_neighbors  # noqa: F401

@@ -1,0 +1,41 @@
+"""EmbeddingBag: ragged multi-hot lookup + segment reduce (no torch here).
+
+The DLRM hot path.  Tables are stored as ONE concatenated (total_rows, d)
+matrix with per-table row offsets so a batch of 26 sparse fields is a
+single gather + segment_sum — and row-sharding the concatenated table over
+the `model` axis turns the gather into the standard all-to-all embedding
+exchange under GSPMD.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["embedding_bag", "table_offsets", "flatten_ids"]
+
+
+def table_offsets(table_sizes: Sequence[int]) -> np.ndarray:
+    return np.concatenate([[0], np.cumsum(table_sizes)[:-1]]).astype(np.int64)
+
+
+def flatten_ids(ids, offsets):
+    """ids: (B, F, H) per-table local ids -> global row ids (B, F, H)."""
+    return ids + jnp.asarray(offsets, ids.dtype)[None, :, None]
+
+
+def embedding_bag(table, flat_ids, *, combiner: str = "sum"):
+    """table: (rows, d); flat_ids: (B, F, H) global ids (H = bag size).
+
+    Returns (B, F, d) — one reduced embedding per (sample, field).
+    """
+    emb = jnp.take(table, flat_ids, axis=0)  # (B, F, H, d)
+    if combiner == "sum":
+        return jnp.sum(emb, axis=2)
+    if combiner == "mean":
+        return jnp.mean(emb, axis=2)
+    if combiner == "max":
+        return jnp.max(emb, axis=2)
+    raise ValueError(combiner)

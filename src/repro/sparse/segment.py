@@ -1,0 +1,60 @@
+"""Edge-index message passing via segment reductions.
+
+``spmm_edges`` is the GNN SpMM primitive: gather source-node features along
+edges, optionally weight per edge, scatter-add into destination nodes.
+All ops are shape-static and GSPMD-shardable (edges sharded over devices;
+the scatter becomes a psum-combine when dst nodes are sharded).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["segment_sum", "segment_softmax", "spmm_edges", "degree"]
+
+
+def segment_sum(data, segment_ids, num_segments: int):
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+
+def segment_softmax(logits, segment_ids, num_segments: int):
+    """Numerically-stable softmax over variable-size segments (edge->dst)."""
+    seg_max = jax.ops.segment_max(logits, segment_ids, num_segments=num_segments)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    ex = jnp.exp(logits - seg_max[segment_ids])
+    denom = segment_sum(ex, segment_ids, num_segments)
+    return ex / jnp.maximum(denom[segment_ids], 1e-16)
+
+
+def degree(segment_ids, num_segments: int, dtype=jnp.float32):
+    ones = jnp.ones(segment_ids.shape[0], dtype)
+    return segment_sum(ones, segment_ids, num_segments)
+
+
+def spmm_edges(
+    x_src,
+    edge_src,
+    edge_dst,
+    num_dst: int,
+    *,
+    edge_weight: Optional[jnp.ndarray] = None,
+    reduce: str = "sum",
+):
+    """y[dst] = reduce_{(s,d) in E} w_e * x_src[s].
+
+    x_src: (N_src, ...); edge_src/edge_dst: (E,) int32.
+    """
+    msg = jnp.take(x_src, edge_src, axis=0)
+    if edge_weight is not None:
+        msg = msg * edge_weight.reshape((-1,) + (1,) * (msg.ndim - 1))
+    if reduce == "sum":
+        return jax.ops.segment_sum(msg, edge_dst, num_segments=num_dst)
+    if reduce == "mean":
+        s = jax.ops.segment_sum(msg, edge_dst, num_segments=num_dst)
+        d = degree(edge_dst, num_dst, msg.dtype)
+        return s / jnp.maximum(d, 1.0).reshape((-1,) + (1,) * (msg.ndim - 1))
+    if reduce == "max":
+        return jax.ops.segment_max(msg, edge_dst, num_segments=num_dst)
+    raise ValueError(reduce)

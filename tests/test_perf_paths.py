@@ -1,0 +1,150 @@
+"""Tests for the §Perf hillclimb code paths (H1a/H1b/H2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_plan, preprocess, rmat, triangle_count_oracle
+from repro.core.api import make_grid_mesh
+from repro.core.cannon import build_cannon_fn
+from repro.core.count import (
+    build_aug_keys,
+    count_pair_search,
+    count_pair_search_global,
+)
+from repro.core.plan import bucketize_plan
+
+
+def _plan(seed=3, q=1):
+    g = rmat(9, 8, seed=seed)
+    exp = triangle_count_oracle(g)
+    g2, _ = preprocess(g)
+    return g, exp, build_plan(g2, q)
+
+
+def test_global_search_matches_flat():
+    _, _, plan = _plan()
+    a = plan.device_arrays()
+    args = [
+        jnp.asarray(a[k][0, 0])
+        for k in ("a_indptr", "a_indices", "b_indptr", "b_indices",
+                  "m_ti", "m_tj")
+    ] + [jnp.asarray(a["m_cnt"][0, 0])]
+    flat = count_pair_search(*args, dpad=plan.dmax, chunk=128)
+    glob = count_pair_search_global(*args, dpad=plan.dmax, chunk=128)
+    assert int(flat) == int(glob)
+
+
+def test_aug_keys_sorted_and_unique_rows():
+    _, _, plan = _plan()
+    aug = np.asarray(
+        build_aug_keys(
+            jnp.asarray(plan.b_indptr[0, 0]), jnp.asarray(plan.b_indices[0, 0])
+        )
+    )
+    assert np.all(np.diff(aug) >= 0)  # sorted => binary search is valid
+
+
+@pytest.mark.parametrize("d_small", [4, 16, 64])
+def test_bucketed_matches_oracle(d_small):
+    g, exp, plan = _plan(seed=7, q=1)
+    bplan = bucketize_plan(plan, d_small=d_small)
+    mesh = make_grid_mesh(1)
+    fn = build_cannon_fn(bplan, mesh, method="search2")
+    got = int(fn(**{k: jnp.asarray(v) for k, v in bplan.device_arrays().items()}))
+    assert got == exp
+
+
+def test_compressed_blob_matches_oracle(distributed_runner):
+    code = """
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from repro.core import build_plan, preprocess, rmat, triangle_count_oracle
+from repro.core.api import make_grid_mesh
+from repro.core.cannon import build_cannon_fn
+from repro.core.plan import bucketize_plan
+g = rmat(10, 8, seed=11)
+exp = triangle_count_oracle(g)
+g2, _ = preprocess(g)
+plan = bucketize_plan(build_plan(g2, 2), d_small=32)
+mesh = make_grid_mesh(2)
+for kw in (dict(method="search", compress_lengths=True),
+           dict(method="search2", compress_lengths=True)):
+    fn = build_cannon_fn(plan, mesh, count_dtype=jnp.int64, **kw)
+    got = int(fn(**{k: jnp.asarray(v) for k, v in plan.device_arrays().items()}))
+    assert got == exp, (kw, got, exp)
+print("OK")
+"""
+    assert "OK" in distributed_runner(code, ndev=4)
+
+
+def test_attention_seq_parallel_specs_numerically_equal():
+    """H2 constraints must not change results (1x1 mesh degenerate case)."""
+    from repro.configs import get_config
+    from repro.models.transformer import lm_init, lm_loss
+    from repro.models.steps import _inject_attn_specs
+
+    cfg = get_config("qwen2-0.5b-smoke")
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+    cfg2 = _inject_attn_specs(cfg, mesh)
+    params = lm_init(jax.random.key(0), cfg)
+    toks = jnp.ones((2, 32), jnp.int32)
+    l1, _ = lm_loss(params, cfg, toks, toks)
+    l2, _ = lm_loss(params, cfg2, toks, toks)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_causal_attention_vmap_matches_reference():
+    """Flash-style schedule vs plain softmax attention."""
+    from repro.models.attention import causal_attention
+
+    rng = np.random.default_rng(0)
+    b, s, h, kv, dh = 2, 64, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, dh)), jnp.float32)
+    out = causal_attention(q, k, v, q_chunk=16, kv_chunk=32)
+    # reference: dense masked softmax
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, dh)
+    sc = jnp.einsum("bqkgd,bckd->bqkgc", qg, k) * (dh ** -0.5)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    sc = jnp.where(mask[None, :, None, None, :], sc, -jnp.inf)
+    w = jax.nn.softmax(sc, axis=-1)
+    ref = jnp.einsum("bqkgc,bckd->bqkgd", w, v).reshape(b, s, h, dh)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_causal_attention_nq_multiple():
+    from repro.models.attention import causal_attention
+
+    rng = np.random.default_rng(1)
+    b, s, h, dh = 1, 64, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    a = causal_attention(q, k, v, q_chunk=64, kv_chunk=64, nq_multiple=1)
+    b_ = causal_attention(q, k, v, q_chunk=64, kv_chunk=64, nq_multiple=8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6))
+@settings(max_examples=10, deadline=None)
+def test_bucketed_property(seed, dsmall):
+    from repro.core import erdos_renyi
+
+    g = erdos_renyi(80, 6.0, seed=seed)
+    exp = triangle_count_oracle(g)
+    g2, _ = preprocess(g)
+    plan = bucketize_plan(build_plan(g2, 1), d_small=dsmall)
+    mesh = make_grid_mesh(1)
+    fn = build_cannon_fn(plan, mesh, method="search2")
+    got = int(fn(**{k: jnp.asarray(v) for k, v in plan.device_arrays().items()}))
+    assert got == exp

@@ -1,0 +1,88 @@
+"""Property-based tests (hypothesis) for system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Graph,
+    build_plan,
+    count_triangles,
+    preprocess,
+    triangle_count_oracle,
+)
+from repro.core.decomp import cyclic_blocks
+from repro.core.graph import triangle_count_dense_oracle
+
+
+@st.composite
+def small_graphs(draw):
+    n = draw(st.integers(min_value=3, max_value=40))
+    m = draw(st.integers(min_value=0, max_value=3 * n))
+    src = draw(
+        st.lists(
+            st.integers(min_value=0, max_value=n - 1), min_size=m, max_size=m
+        )
+    )
+    dst = draw(
+        st.lists(
+            st.integers(min_value=0, max_value=n - 1), min_size=m, max_size=m
+        )
+    )
+    return Graph.from_edges(n, src, dst)
+
+
+@given(small_graphs())
+@settings(max_examples=25, deadline=None)
+def test_count_matches_dense_oracle(g):
+    exp = triangle_count_dense_oracle(g)
+    assert count_triangles(g, q=1).triangles == exp
+
+
+@given(small_graphs(), st.randoms())
+@settings(max_examples=15, deadline=None)
+def test_count_invariant_under_permutation(g, rnd):
+    perm = np.arange(g.n)
+    rnd.shuffle(perm)
+    g2 = g.relabel(perm)
+    assert triangle_count_oracle(g) == triangle_count_oracle(g2)
+    assert (
+        count_triangles(g, q=1).triangles
+        == count_triangles(g2, q=1).triangles
+    )
+
+
+@given(small_graphs(), st.integers(min_value=1, max_value=5),
+       st.integers(min_value=1, max_value=5))
+@settings(max_examples=25, deadline=None)
+def test_cyclic_blocks_partition_edges(g, r, c):
+    """Every U edge lands in exactly one block with correct local ids."""
+    blocks = cyclic_blocks(g, r, c)
+    seen = set()
+    for x in range(r):
+        for y in range(c):
+            blk = blocks[x][y]
+            rows = np.repeat(np.arange(blk.n_rows), np.diff(blk.indptr))
+            for li, lj in zip(rows, blk.indices):
+                gi, gj = li * r + x, lj * c + y
+                assert gi < gj
+                seen.add((int(gi), int(gj)))
+    expected = {(int(i), int(j)) for i, j in g.edges}
+    assert seen == expected
+
+
+@given(small_graphs())
+@settings(max_examples=15, deadline=None)
+def test_plan_tasks_equal_edges(g):
+    g2, _ = preprocess(g)
+    plan = build_plan(g2, 2)
+    assert int(plan.m_cnt.sum()) == g.m
+
+
+@given(st.integers(min_value=2, max_value=64), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_degree_order_is_permutation(n, seed):
+    from repro.core import erdos_renyi, degree_order
+
+    g = erdos_renyi(n, min(4.0, n / 2), seed=seed)
+    perm = degree_order(g)
+    assert np.array_equal(np.sort(perm), np.arange(n))

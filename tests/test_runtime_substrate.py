@@ -1,0 +1,267 @@
+"""Tests: checkpointing, optimizers, compression, elastic, sparse, data."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+# ----------------------------------------------------------------------
+# checkpoint
+# ----------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.ckpt import load_checkpoint, save_checkpoint
+
+    tree = {
+        "a": jnp.arange(12.0).reshape(3, 4),
+        "b": {"c": jnp.ones((5,), jnp.int32)},
+    }
+    save_checkpoint(str(tmp_path), 7, tree, extra={"x": 1})
+    out, extra = load_checkpoint(str(tmp_path), 7, tree)
+    assert extra == {"x": 1}
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    np.testing.assert_array_equal(
+        np.asarray(out["b"]["c"]), np.asarray(tree["b"]["c"])
+    )
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    from repro.ckpt import load_checkpoint, save_checkpoint
+
+    tree = {"a": jnp.ones((4,))}
+    path = save_checkpoint(str(tmp_path), 1, tree)
+    payload = os.path.join(str(tmp_path), "step_0000000001.npz")
+    with open(payload, "r+b") as f:
+        f.seek(30)
+        f.write(b"\x00\x01\x02")
+    with pytest.raises(IOError, match="corruption"):
+        load_checkpoint(str(tmp_path), 1, tree)
+
+
+def test_manager_rotation_and_restore(tmp_path):
+    from repro.ckpt import CheckpointManager
+
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in range(5):
+        mgr.save(s, {"w": jnp.full((3,), float(s))}, extra={"next_step": s})
+    files = [f for f in os.listdir(tmp_path) if f.endswith(".json")]
+    assert len(files) == 2  # rotated
+    step, tree, extra = mgr.restore_latest({"w": jnp.zeros((3,))})
+    assert step == 4 and float(tree["w"][0]) == 4.0
+
+
+def test_async_manager(tmp_path):
+    from repro.ckpt import CheckpointManager
+
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    for s in range(3):
+        mgr.save(s, {"w": jnp.full((2,), float(s))})
+    mgr.wait()
+    mgr.close()
+    assert len([f for f in os.listdir(tmp_path) if f.endswith(".npz")]) == 3
+
+
+def test_run_with_restarts(tmp_path):
+    from repro.runtime import run_with_restarts
+
+    calls = {"failures": 0}
+
+    def injector(step):
+        if step == 5 and calls["failures"] == 0:
+            calls["failures"] += 1
+            raise RuntimeError("injected device loss")
+
+    state = run_with_restarts(
+        lambda: {"x": jnp.zeros(())},
+        lambda st, i: {"x": st["x"] + 1.0},
+        n_steps=10,
+        ckpt_dir=str(tmp_path),
+        ckpt_every=2,
+        fault_injector=injector,
+    )
+    assert float(state["x"]) == 10.0
+    assert calls["failures"] == 1
+
+
+# ----------------------------------------------------------------------
+# optimizers + compression
+# ----------------------------------------------------------------------
+def test_adamw_reduces_quadratic():
+    from repro.optim import adamw_init, adamw_update
+
+    params = {"w": jnp.array([3.0, -2.0])}
+    st = adamw_init(params)
+    for i in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, st, _ = adamw_update(
+            grads, st, params, i, lr=0.05, weight_decay=0.0
+        )
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_adafactor_reduces_quadratic_matrix():
+    from repro.optim import adafactor_init, adafactor_update
+
+    params = {"w": jnp.ones((4, 5)) * 2.0}
+    st = adafactor_init(params)
+    for i in range(300):
+        grads = {"w": 2 * params["w"]}
+        params, st, _ = adafactor_update(grads, st, params, i, lr=0.05)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+    # factored state shapes
+    assert st["v"]["w"]["vr"].shape == (4,)
+    assert st["v"]["w"]["vc"].shape == (5,)
+
+
+def test_grad_compression_accuracy():
+    from repro.optim.compress import _dequantize, _quantize
+
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(333, 7)).astype(np.float32)) * 0.01
+    q, s = _quantize(g)
+    back = _dequantize(q, s, g.shape, g.size)
+    rel = float(jnp.linalg.norm(back - g) / jnp.linalg.norm(g))
+    assert rel < 0.01, rel
+
+
+def test_compressed_psum_matches_plain(distributed_runner):
+    code = """
+import jax, numpy as np
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.optim.compress import compressed_psum
+mesh = jax.make_mesh((4,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+x = jnp.arange(64, dtype=jnp.float32).reshape(4, 16) * 0.01
+def f(x):
+    g = {"w": x.reshape(16)}
+    out = compressed_psum(g, "d")
+    ref = jax.tree.map(lambda v: jax.lax.psum(v, "d"), g)
+    return out["w"], ref["w"]
+fn = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P(),
+                           check_vma=False))
+got, ref = fn(x)
+rel = float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref))
+assert rel < 0.02, rel
+print("OK", rel)
+"""
+    assert "OK" in distributed_runner(code, ndev=4)
+
+
+# ----------------------------------------------------------------------
+# elastic + rebalance
+# ----------------------------------------------------------------------
+def test_best_grid():
+    from repro.runtime import best_grid
+
+    assert best_grid(16) == (4, 4)
+    assert best_grid(8) == (2, 4)
+    # 12 = 3x4 violates the SUMMA panel-slot constraint (4 % 3 != 0);
+    # the most-square admissible factorization is 2x6
+    assert best_grid(12) == (2, 6)
+    assert best_grid(256) == (16, 16)
+    assert best_grid(255, require_square=True) == (15, 15)
+
+
+def test_replan_elastic_counts_correctly():
+    from repro.core import rmat, triangle_count_oracle
+    from repro.runtime import replan_elastic
+
+    g = rmat(9, 8, seed=2)
+    sched, plan, (r, c) = replan_elastic(g, 4)
+    assert sched == "cannon" and (r, c) == (2, 2)
+    sched, plan, (r, c) = replan_elastic(g, 8)
+    assert sched == "summa" and r * c <= 8
+
+
+def test_rebalance_improves_or_equal():
+    from repro.core import preprocess, rmat
+    from repro.runtime import rebalance_plan
+
+    g = rmat(10, 8, seed=1)
+    plan, report = rebalance_plan(g, 3, trials=4)
+    assert report["improvement"] >= 0.99  # never worse than seed 0
+
+
+# ----------------------------------------------------------------------
+# sparse substrate
+# ----------------------------------------------------------------------
+def test_embedding_bag_matches_dense():
+    from repro.sparse import embedding_bag
+    from repro.sparse.embedding_bag import flatten_ids, table_offsets
+
+    rng = np.random.default_rng(0)
+    sizes = (7, 13, 5)
+    offs = table_offsets(sizes)
+    table = jnp.asarray(rng.normal(size=(sum(sizes), 4)).astype(np.float32))
+    ids = jnp.asarray(
+        np.stack(
+            [rng.integers(0, s, size=(6, 2)) for s in sizes], axis=1
+        ).astype(np.int32)
+    )  # (B=6, F=3, H=2)
+    out = embedding_bag(table, flatten_ids(ids, offs))
+    # dense one-hot oracle
+    flat = np.asarray(flatten_ids(ids, offs))
+    expect = np.zeros((6, 3, 4), np.float32)
+    for b in range(6):
+        for f in range(3):
+            for h in range(2):
+                expect[b, f] += np.asarray(table)[flat[b, f, h]]
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-6)
+
+
+def test_segment_softmax_normalizes():
+    from repro.sparse import segment_softmax
+
+    logits = jnp.asarray([1.0, 2.0, 3.0, 1.0, -1.0])
+    seg = jnp.asarray([0, 0, 0, 1, 1])
+    out = segment_softmax(logits, seg, 2)
+    sums = jax.ops.segment_sum(out, seg, num_segments=2)
+    np.testing.assert_allclose(np.asarray(sums), [1.0, 1.0], rtol=1e-6)
+
+
+def test_spmm_edges_matches_matmul():
+    from repro.sparse import spmm_edges
+
+    rng = np.random.default_rng(1)
+    n, e, d = 10, 40, 3
+    src = rng.integers(0, n, e)
+    dst = rng.integers(0, n, e)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    adj = np.zeros((n, n), np.float32)
+    for s, t in zip(src, dst):
+        adj[t, s] += 1.0
+    out = spmm_edges(
+        jnp.asarray(x), jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32), n
+    )
+    np.testing.assert_allclose(np.asarray(out), adj @ x, rtol=1e-5, atol=1e-5)
+
+
+def test_neighbor_sampler_shapes_and_validity():
+    from repro.core import rmat
+    from repro.sparse.sampler import sample_neighbors
+
+    g = rmat(9, 8, seed=0)
+    adj = g.adjacency_csr()
+    rng = np.random.default_rng(0)
+    sub = sample_neighbors(adj.indptr, adj.indices, np.arange(16), (5, 3), rng)
+    assert sub.n_nodes >= 16
+    valid = sub.node_ids >= 0
+    assert valid.sum() >= 16
+    # every sampled edge's endpoints are real nodes
+    assert sub.edge_src.max() < valid.sum() + 1
+    assert sub.edge_dst.max() < valid.sum() + 1
+
+
+def test_token_pipeline_deterministic_replay():
+    from repro.data.pipeline import TokenPipeline
+
+    p1 = TokenPipeline(1000, 4, 16, seed=3)
+    b1 = p1.next_batch()
+    st = p1.state_dict()
+    b2 = p1.next_batch()
+    p2 = TokenPipeline(1000, 4, 16, seed=3)
+    p2.load_state(st)
+    b2r = p2.next_batch()
+    np.testing.assert_array_equal(b2["tokens"], b2r["tokens"])
+    assert not np.array_equal(b1["tokens"], b2["tokens"])
