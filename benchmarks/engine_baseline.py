@@ -1,0 +1,69 @@
+"""Engine benchmark baseline: per-schedule wall-time on RMAT graphs.
+
+Records ``BENCH_engine.json`` — per-schedule triangle-count wall-time
+(tct_seconds, plus preprocess ppt_seconds) on RMAT scales 12-16 at q=3
+(9 XLA host devices per subprocess) — so subsequent perf PRs have a
+trajectory to compare against.
+
+    python -m benchmarks.engine_baseline [--quick] [--out BENCH_engine.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+from .common import csv_row, run_tc_subprocess
+
+GRID = 3  # q=3 -> 9 ranks
+SCALES_FULL = [12, 13, 14, 15, 16]
+SCALES_QUICK = [12, 13]
+SCHEDULES = ["cannon", "summa", "oned"]
+
+
+def run(quick: bool = False, out: str = "BENCH_engine.json") -> dict:
+    scales = SCALES_QUICK if quick else SCALES_FULL
+    report = {
+        "grid": GRID,
+        "ranks": GRID * GRID,
+        "unix_time": time.time(),
+        "quick": quick,
+        "schedules": {s: {} for s in SCHEDULES},
+    }
+    for scale in scales:
+        graph = f"rmat:{scale}"
+        for sched in SCHEDULES:
+            r = run_tc_subprocess(graph, GRID, schedule=sched)
+            cell = dict(
+                tct_seconds=r["tct_seconds"],
+                ppt_seconds=r["ppt_seconds"],
+                triangles=r["triangles"],
+            )
+            report["schedules"][sched][str(scale)] = cell
+            print(
+                csv_row(
+                    f"engine/{sched}/rmat{scale}",
+                    r["tct_seconds"] * 1e6,
+                    f"triangles={r['triangles']}",
+                )
+            )
+        counts = {
+            report["schedules"][s][str(scale)]["triangles"] for s in SCHEDULES
+        }
+        assert len(counts) == 1, f"schedules disagree at scale {scale}: {counts}"
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"# wrote {out}")
+    return report
+
+
+def main(quick: bool = False, out: str = "BENCH_engine.json"):
+    return run(quick=quick, out=out)
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    out = "BENCH_engine.json"
+    if "--out" in argv:
+        out = argv[argv.index("--out") + 1]
+    main(quick="--quick" in argv or "--full" not in argv, out=out)

@@ -14,9 +14,9 @@ from .common import csv_row
 _CODE = """
 import json
 from repro.core import build_plan, preprocess, rmat
-from repro.core.api import make_grid_mesh
-from repro.core.cannon import build_cannon_fn
+from repro.core.api import get_schedule, make_grid_mesh
 from repro.launch.roofline import HW, hlo_cost
+build_cannon_fn = get_schedule("cannon").build_fn
 
 g, _ = preprocess(rmat({scale}, 16))
 plan = build_plan(g, {q})

@@ -9,6 +9,7 @@ import sys
 def main() -> None:
     quick = "--full" not in sys.argv
     from . import (
+        engine_baseline,
         fig1_efficiency,
         fig2_oprate,
         fig3_commfraction,
@@ -28,6 +29,8 @@ def main() -> None:
     fig2_oprate.main(quick=quick)
     fig3_commfraction.main(quick=quick)
     kernels.main(quick=quick)
+    # per-schedule wall-time baseline -> BENCH_engine.json
+    engine_baseline.main(quick=quick)
 
 
 if __name__ == "__main__":

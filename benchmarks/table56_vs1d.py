@@ -27,10 +27,12 @@ def run(graph: str = "rmat:13", grid: int = 4):
 _COMM_CODE = """
 import json, jax
 from repro.core import build_plan, preprocess, rmat
-from repro.core.api import make_grid_mesh
-from repro.core.cannon import build_cannon_fn
-from repro.core.onedim import build_oned_plan, build_oned_fn
+from repro.core.api import get_schedule, make_grid_mesh
+from repro.core.onedim import build_oned_plan
 from repro.launch.roofline import hlo_cost
+from repro import compat
+build_cannon_fn = get_schedule("cannon").build_fn
+build_oned_fn = get_schedule("oned").build_fn
 
 scale, q = {scale}, {grid}
 g, _ = preprocess(rmat(scale, 16))
@@ -40,7 +42,7 @@ comp = fn.lower(**plan.shape_structs()).compile()
 c2d = sum(hlo_cost(comp.as_text())["collectives"].values())
 p = q * q
 oplan = build_oned_plan(g, p)
-mesh1 = jax.make_mesh((p,), ("flat",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh1 = compat.make_mesh((p,), ("flat",))
 fn1 = build_oned_fn(oplan, mesh1)
 comp1 = fn1.lower(**oplan.shape_structs()).compile()
 c1d = sum(hlo_cost(comp1.as_text())["collectives"].values())

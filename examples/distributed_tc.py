@@ -27,8 +27,8 @@ r = count_triangles(g, q=2, npods=2, schedule="cannon")
 print(f"2.5D 2x(2x2)    : {r.triangles}  tct={r.count_seconds:.3f}s")
 assert r.triangles == exp
 
-mesh = jax.make_mesh((2, 8), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro import compat
+mesh = compat.make_mesh((2, 8), ("data", "model"))
 r = count_triangles(g, mesh=mesh, schedule="summa")
 print(f"summa 2x8       : {r.triangles}  tct={r.count_seconds:.3f}s")
 assert r.triangles == exp

@@ -18,9 +18,9 @@ from repro.models.transformer import init_kv_cache, lm_init
 
 def main():
     cfg = get_config("qwen2-0.5b-smoke")  # reduced dims, same architecture
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    from repro import compat
+
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     params = lm_init(jax.random.key(0), cfg)
     decode, _ = build_lm_decode_step(cfg, mesh)
 

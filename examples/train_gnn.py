@@ -42,9 +42,9 @@ def main():
         labels=jnp.asarray(labels, jnp.int32),
         label_mask=jnp.asarray(train_mask),
     )
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    from repro import compat
+
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     params = gnn_init(jax.random.key(0), cfg, d)
     build, info = build_gnn_train_step(cfg, mesh, d)
     fn = build(jax.eval_shape(lambda: batch))

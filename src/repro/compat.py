@@ -1,0 +1,187 @@
+"""JAX-version compatibility layer (DESIGN.md §7).
+
+The repo targets the mesh/SPMD API surface of jax >= 0.5 (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType``) but must
+run on jax 0.4.x where those names either do not exist or have different
+signatures (``jax.experimental.shard_map.shard_map`` with ``check_rep``,
+``jax.make_mesh`` without ``axis_types``).  Every call site in ``src/`` and
+``tests/`` goes through this module instead of touching the moving API
+directly; supporting a new jax release means updating this file only.
+
+Shimmed surface:
+
+* :func:`shard_map`    — ``jax.shard_map`` | ``jax.experimental.shard_map``;
+  the ``check_vma``/``check_rep`` rename is absorbed here.
+* :func:`make_mesh`    — ``axis_types`` forwarded when supported, dropped
+  otherwise (0.4.x meshes have no axis types; all axes behave as Auto).
+* :data:`AxisType`     — real enum when available, else a stand-in with the
+  same member names so call sites never branch.
+* :func:`ppermute`     — stable today; routed here so a future signature
+  change has a single home.
+* :func:`x64_enabled` / :func:`default_count_dtype` — robust replacement
+  for the deprecated ``jax.config.read("jax_enable_x64")``.
+* :func:`check_count_overflow` — the int32 fallback guard used by
+  :func:`repro.core.api.count_triangles`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "AxisType",
+    "axis_size",
+    "check_count_overflow",
+    "cost_analysis",
+    "default_count_dtype",
+    "make_mesh",
+    "ppermute",
+    "shard_map",
+    "x64_enabled",
+]
+
+
+# ----------------------------------------------------------------------
+# AxisType
+# ----------------------------------------------------------------------
+class _AxisTypeStub:
+    """Stand-in for ``jax.sharding.AxisType`` on jax < 0.5.
+
+    Member values are only ever compared/forwarded, never interpreted, so
+    plain strings suffice.  On old jax the mesh constructor ignores them.
+    """
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+AxisType = getattr(jax.sharding, "AxisType", _AxisTypeStub)
+
+
+# ----------------------------------------------------------------------
+# mesh construction
+# ----------------------------------------------------------------------
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` across versions.
+
+    ``axis_types`` defaults to all-Auto (the repo's convention); it is
+    forwarded on jax >= 0.5 and dropped on 0.4.x, where meshes carry no
+    axis types and every axis already behaves as Auto.
+    """
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is None:
+        axis_types = (AxisType.Auto,) * len(tuple(axis_shapes))
+    try:
+        return jax.make_mesh(
+            tuple(axis_shapes), tuple(axis_names), axis_types=tuple(axis_types), **kwargs
+        )
+    except TypeError:  # jax 0.4.x: no axis_types kwarg
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+# ----------------------------------------------------------------------
+# shard_map
+# ----------------------------------------------------------------------
+_new_shard_map = getattr(jax, "shard_map", None)
+if _new_shard_map is None:
+    from jax.experimental.shard_map import shard_map as _old_shard_map
+else:
+    _old_shard_map = None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """``jax.shard_map`` (>= 0.5, ``check_vma``) or the 0.4.x
+    ``jax.experimental.shard_map.shard_map`` (``check_rep``)."""
+    if _new_shard_map is not None:
+        try:
+            return _new_shard_map(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_vma=check_vma,
+            )
+        except TypeError:  # transitional releases spell it check_rep
+            return _new_shard_map(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=check_vma,
+            )
+    return _old_shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+# ----------------------------------------------------------------------
+# collectives
+# ----------------------------------------------------------------------
+def ppermute(x, axis_name, perm):
+    """``jax.lax.ppermute`` — stable across supported versions."""
+    return jax.lax.ppermute(x, axis_name, perm=perm)
+
+
+def axis_size(axis_name) -> int:
+    """Size of a mapped mesh axis, as a static int.
+
+    ``jax.lax.axis_size`` is recent; on older jax ``psum(1, axis)`` is
+    constant-folded to the axis size at trace time.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+# ----------------------------------------------------------------------
+# compiled-executable introspection
+# ----------------------------------------------------------------------
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as one flat dict across versions.
+
+    jax 0.4.x returns a list with one per-program dict (possibly empty);
+    jax >= 0.5 returns the dict directly.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+# ----------------------------------------------------------------------
+# x64 / count dtype
+# ----------------------------------------------------------------------
+def x64_enabled() -> bool:
+    """Whether 64-bit mode is on, without the deprecated config.read."""
+    try:
+        return bool(jax.config.jax_enable_x64)
+    except AttributeError:
+        try:
+            return bool(jax.config.read("jax_enable_x64"))
+        except Exception:  # noqa: BLE001 — any failure means default off
+            return False
+
+
+def default_count_dtype():
+    """int64 when x64 is enabled, else int32 (callers must then guard the
+    final count with :func:`check_count_overflow`)."""
+    return jnp.int64 if x64_enabled() else jnp.int32
+
+
+_INT32_MAX = 2**31 - 1
+
+
+def check_count_overflow(total: int, count_dtype) -> int:
+    """Validate a final triangle count accumulated in ``count_dtype``.
+
+    int32 accumulation wraps silently in XLA; a negative or saturated
+    total is unambiguous evidence of overflow, so fail loudly instead of
+    returning garbage.  Returns ``total`` unchanged when plausible.
+    """
+    if jnp.dtype(count_dtype) == jnp.dtype(jnp.int32) and (
+        total < 0 or total >= _INT32_MAX
+    ):
+        raise OverflowError(
+            f"triangle count overflowed int32 (got {total}); enable x64 "
+            "(jax.config.update('jax_enable_x64', True)) or pass "
+            "count_dtype=jnp.int64"
+        )
+    return total

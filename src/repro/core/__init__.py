@@ -8,7 +8,14 @@ Public surface:
 * schedules: :mod:`.cannon` (paper), :mod:`.summa` (rectangular/elastic),
   :mod:`.onedim` (1D-decomposition baseline the paper compares against).
 """
-from .api import TCResult, count_triangles, make_grid_mesh  # noqa: F401
+from .api import (  # noqa: F401
+    TCResult,
+    available_schedules,
+    count_triangles,
+    get_schedule,
+    make_grid_mesh,
+    register_schedule,
+)
 from .graph import Graph, triangle_count_oracle  # noqa: F401
 from .generators import erdos_renyi, named_graph, rmat  # noqa: F401
 from .plan import TCPlan, analytic_plan, build_plan  # noqa: F401

@@ -1,26 +1,39 @@
 """Top-level triangle-counting API.
 
 ``count_triangles(graph, mesh=...)`` runs the full pipeline of the paper:
-degree-order preprocessing -> 2D-cyclic plan -> Cannon (or SUMMA / 1D)
-schedule -> global count, on whatever mesh is supplied (including a 1x1
-mesh for single-device use).
+degree-order preprocessing -> 2D-cyclic plan -> schedule -> global count,
+on whatever mesh is supplied (including a 1x1 mesh for single-device use).
+
+Schedules resolve via a registry: :func:`register_schedule` makes a new
+schedule one registration away (DESIGN.md §6) — the bundled ones are
+``cannon`` (the paper), ``summa`` (rectangular/elastic), and ``oned``
+(the 1D baseline the paper beats).  The per-block count path is selected
+with ``method`` (any registered CSR kernel, plus the ``dense`` and
+``tile`` operand-store paths on the Cannon schedule).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import Callable, Dict, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import compat
 from . import cannon as cannon_mod
 from .graph import Graph
 from .plan import TCPlan, build_plan
 from .preprocess import preprocess
 
-__all__ = ["TCResult", "count_triangles", "make_grid_mesh"]
+__all__ = [
+    "TCResult",
+    "count_triangles",
+    "make_grid_mesh",
+    "register_schedule",
+    "get_schedule",
+    "available_schedules",
+]
 
 
 @dataclasses.dataclass
@@ -36,22 +49,185 @@ class TCResult:
 
 def make_grid_mesh(q: int, row_axis="data", col_axis="model", npods=1, pod_axis="pod"):
     """A q x q (optionally x pods) mesh from the available devices."""
+    import jax
+
     n_needed = q * q * npods
     devs = jax.devices()
     assert len(devs) >= n_needed, f"need {n_needed} devices, have {len(devs)}"
     if npods > 1:
-        return jax.make_mesh(
-            (npods, q, q),
-            (pod_axis, row_axis, col_axis),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3,
+        return compat.make_mesh((npods, q, q), (pod_axis, row_axis, col_axis))
+    return compat.make_mesh((q, q), (row_axis, col_axis))
+
+
+# ----------------------------------------------------------------------
+# schedule registry
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ScheduleSpec:
+    """One registered schedule: how to plan and how to run.
+
+    ``runner(graph, mesh, ctx) -> (total, plan)`` does planning + array
+    staging + engine-fn build + execution; ``ctx`` is the
+    :class:`RunContext` of the current ``count_triangles`` call.
+    ``build_fn`` exposes the raw engine-fn builder for dry runs /
+    lowering-only callers (benchmarks, roofline).
+    """
+
+    name: str
+    runner: Callable
+    build_fn: Optional[Callable] = None
+
+
+@dataclasses.dataclass
+class RunContext:
+    q: int
+    npods: int
+    method: str
+    chunk: int
+    probe_shorter: bool
+    count_dtype: object
+    plan: Optional[TCPlan] = None
+    # set via mark_counting(): host-side planning/staging before this
+    # point is reported as preprocess time, not count time
+    counting_started_at: Optional[float] = None
+
+    def mark_counting(self) -> None:
+        self.counting_started_at = time.perf_counter()
+
+
+_SCHEDULES: Dict[str, ScheduleSpec] = {}
+
+
+def register_schedule(
+    name: str, runner: Callable, *, build_fn: Optional[Callable] = None
+) -> None:
+    """Register a schedule; ``count_triangles(..., schedule=name)`` then
+    resolves to ``runner``.  Overwrites any previous registration."""
+    _SCHEDULES[name] = ScheduleSpec(name=name, runner=runner, build_fn=build_fn)
+
+
+def get_schedule(name: str) -> ScheduleSpec:
+    try:
+        return _SCHEDULES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown schedule {name!r}; registered: {available_schedules()}"
+        ) from None
+
+
+def available_schedules():
+    return sorted(_SCHEDULES)
+
+
+# ----------------------------------------------------------------------
+# bundled schedule runners
+# ----------------------------------------------------------------------
+def _run_cannon(graph: Graph, mesh, ctx: RunContext):
+    plan = ctx.plan
+    if plan is None:
+        plan = build_plan(graph, ctx.q, skew=True, chunk=ctx.chunk)
+
+    if ctx.method == "dense":
+        from .cannon import build_cannon_dense_fn
+
+        dense = plan.dense_blocks()
+        ctx.mark_counting()
+        fn = build_cannon_dense_fn(plan, mesh)
+        total = int(fn(**{k: jnp.asarray(v) for k, v in dense.items()}))
+        return total, plan
+    if ctx.method == "tile":
+        import jax
+
+        from .cannon import build_cannon_tile_fn
+        from .tiles import build_tile_plan
+
+        tp = build_tile_plan(plan)
+        ctx.mark_counting()
+        # interpret mode only off-TPU: Mosaic lowering needs real hardware,
+        # and silently interpreting on TPU would be orders of magnitude slow
+        fn = build_cannon_tile_fn(
+            plan, tp, mesh,
+            interpret=jax.default_backend() != "tpu",
+            count_dtype=ctx.count_dtype,
         )
-    return jax.make_mesh(
-        (q, q),
-        (row_axis, col_axis),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        total = int(fn(**{k: jnp.asarray(v) for k, v in tp.device_arrays().items()}))
+        return total, plan
+
+    if ctx.method == "search2" and not hasattr(plan, "n_long"):
+        from .plan import bucketize_plan
+
+        plan = bucketize_plan(plan)
+
+    arrays = plan.device_arrays()
+    pod_axis = None
+    if ctx.npods > 1:
+        arrays = cannon_mod.pod_stack_arrays(arrays, ctx.npods, plan.q)
+        pod_axis = "pod"
+    ctx.mark_counting()
+    fn = cannon_mod.build_cannon_fn(
+        plan,
+        mesh,
+        pod_axis=pod_axis,
+        method=ctx.method,
+        probe_shorter=ctx.probe_shorter,
+        count_dtype=ctx.count_dtype,
     )
+    total = int(fn(**{k: jnp.asarray(v) for k, v in arrays.items()}))
+    return total, plan
 
 
+def _run_summa(graph: Graph, mesh, ctx: RunContext):
+    from .summa import build_summa_fn, build_summa_plan
+
+    names = list(mesh.axis_names)
+    r, c = mesh.shape[names[-2]], mesh.shape[names[-1]]
+    splan = build_summa_plan(graph, r, c, chunk=ctx.chunk)
+    ctx.mark_counting()
+    fn = build_summa_fn(
+        splan,
+        mesh,
+        method=ctx.method,
+        probe_shorter=ctx.probe_shorter,
+        count_dtype=ctx.count_dtype,
+    )
+    total = int(fn(**{k: jnp.asarray(v) for k, v in splan.device_arrays().items()}))
+    return total, splan
+
+
+def _run_oned(graph: Graph, mesh, ctx: RunContext):
+    from .onedim import build_oned_fn, build_oned_plan
+
+    p = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    flat_mesh = compat.make_mesh((p,), ("flat",))
+    oplan = build_oned_plan(graph, p, chunk=ctx.chunk)
+    ctx.mark_counting()
+    fn = build_oned_fn(
+        oplan,
+        flat_mesh,
+        method=ctx.method,
+        probe_shorter=ctx.probe_shorter,
+        count_dtype=ctx.count_dtype,
+    )
+    total = int(fn(**{k: jnp.asarray(v) for k, v in oplan.device_arrays().items()}))
+    return total, oplan
+
+
+def _register_bundled():
+    from .cannon import build_cannon_fn
+    from .onedim import build_oned_fn
+    from .summa import build_summa_fn
+
+    register_schedule("cannon", _run_cannon, build_fn=build_cannon_fn)
+    register_schedule("summa", _run_summa, build_fn=build_summa_fn)
+    register_schedule("oned", _run_oned, build_fn=build_oned_fn)
+
+
+_register_bundled()
+
+
+# ----------------------------------------------------------------------
+# top-level entry point
+# ----------------------------------------------------------------------
 def count_triangles(
     graph: Graph,
     mesh=None,
@@ -69,7 +245,9 @@ def count_triangles(
     """Count triangles with the paper's 2D algorithm.
 
     With no mesh, a 1x1 grid on the default device is used (degenerate but
-    identical code path).  ``schedule`` in {"cannon", "summa", "oned"}.
+    identical code path).  ``schedule`` resolves via the registry (see
+    :func:`available_schedules`); ``method`` picks the count kernel
+    ("search", "search2", "global", and on Cannon also "dense"/"tile").
     """
     t0 = time.perf_counter()
     if reorder:
@@ -87,59 +265,28 @@ def count_triangles(
         q = mesh.shape[names[-1]]
 
     if count_dtype is None:
-        count_dtype = jnp.int64 if jax.config.read("jax_enable_x64") else jnp.int32
+        count_dtype = compat.default_count_dtype()
 
-    if schedule == "cannon":
-        if plan is None:
-            plan = build_plan(g2, q, skew=True, chunk=chunk)
-        arrays = plan.device_arrays()
-        pod_axis = None
-        if npods > 1:
-            arrays = cannon_mod.pod_stack_arrays(arrays, npods, q)
-            pod_axis = "pod"
-        t1 = time.perf_counter()
-        fn = cannon_mod.build_cannon_fn(
-            plan,
-            mesh,
-            pod_axis=pod_axis,
-            method=method,
-            probe_shorter=probe_shorter,
-            count_dtype=count_dtype,
-        )
-        total = int(fn(**{k: jnp.asarray(v) for k, v in arrays.items()}))
-        t2 = time.perf_counter()
-    elif schedule == "summa":
-        from .summa import build_summa_plan, build_summa_fn
-
-        names = list(mesh.axis_names)
-        r, c = mesh.shape[names[-2]], mesh.shape[names[-1]]
-        splan = build_summa_plan(g2, r, c, chunk=chunk)
-        t1 = time.perf_counter()
-        fn = build_summa_fn(
-            splan, mesh, probe_shorter=probe_shorter, count_dtype=count_dtype
-        )
-        total = int(fn(**{k: jnp.asarray(v) for k, v in splan.device_arrays().items()}))
-        plan = splan
-        t2 = time.perf_counter()
-    elif schedule == "oned":
-        from .onedim import build_oned_plan, build_oned_fn
-
-        p = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
-        flat_mesh = jax.make_mesh(
-            (p,), ("flat",), axis_types=(jax.sharding.AxisType.Auto,)
-        )
-        oplan = build_oned_plan(g2, p, chunk=chunk)
-        t1 = time.perf_counter()
-        fn = build_oned_fn(oplan, flat_mesh, count_dtype=count_dtype)
-        total = int(fn(**{k: jnp.asarray(v) for k, v in oplan.device_arrays().items()}))
-        plan = oplan
-        t2 = time.perf_counter()
-    else:
-        raise ValueError(f"unknown schedule {schedule!r}")
+    spec = get_schedule(schedule)
+    ctx = RunContext(
+        q=q,
+        npods=npods,
+        method=method,
+        chunk=chunk,
+        probe_shorter=probe_shorter,
+        count_dtype=count_dtype,
+        plan=plan,
+    )
+    total, out_plan = spec.runner(g2, mesh, ctx)
+    total = compat.check_count_overflow(total, count_dtype)
+    t2 = time.perf_counter()
+    # host-side planning/staging counts as preprocessing (paper's ppt),
+    # like the pre-engine code; counting starts at the runner's mark
+    t1 = ctx.counting_started_at or t0
 
     return TCResult(
         triangles=total,
-        plan=plan,
+        plan=out_plan,
         preprocess_seconds=t1 - t0,
         count_seconds=t2 - t1,
         method=method,

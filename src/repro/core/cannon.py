@@ -12,46 +12,45 @@ Multi-pod (2.5D, beyond-paper): with ``npods`` pods the blocks are
 replicated across the ``pod`` axis, pod ``t`` starts at skew offset ``t``
 and executes every ``npods``-th shift; the final count is a global psum.
 Memory ×npods, shift traffic ÷npods — the communication-avoiding trade.
+
+This module is a thin *configuration* of :mod:`repro.core.engine`: every
+builder below just composes an OperandStore (CSR blob / dense / bit-tile),
+the :class:`~repro.core.engine.CannonSchedule`, a count kernel, and a
+Reduction — the scan/ppermute schedule body lives in the engine, once.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional
 
-import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from . import count as count_mod
-from .blob import blob_layout, pack_blob, unpack_blob
+from . import engine
+from .engine import (
+    CannonSchedule,
+    CSRStore,
+    DenseStore,
+    GridAxes,
+    Reduction,
+    TileStore,
+    make_csr_kernel,
+)
 
-__all__ = ["build_cannon_fn", "cannon_in_specs", "pod_stack_arrays"]
-
-
-def _shift_perm(q: int, k: int):
-    """ppermute pairs shifting *towards lower index* by k (left/up)."""
-    return [(s, (s - k) % q) for s in range(q)]
+__all__ = [
+    "build_cannon_fn",
+    "build_cannon_stepper",
+    "build_cannon_tile_fn",
+    "build_cannon_dense_fn",
+    "cannon_in_specs",
+    "pod_stack_arrays",
+]
 
 
 def cannon_in_specs(
     row_axis: str, col_axis: str, pod_axis: Optional[str] = None
-) -> Dict[str, P]:
+) -> Dict:
     """PartitionSpecs for the plan's stacked device arrays."""
-    ab = (
-        P(pod_axis, row_axis, col_axis)
-        if pod_axis
-        else P(row_axis, col_axis)
-    )
-    m = P(row_axis, col_axis)
-    return dict(
-        a_indptr=ab,
-        a_indices=ab,
-        b_indptr=ab,
-        b_indices=ab,
-        m_ti=m,
-        m_tj=m,
-        m_cnt=m,
-    )
+    axes = GridAxes(row_axis, col_axis, pod_axis)
+    return CSRStore(kernel=None).in_specs(axes)
 
 
 def pod_stack_arrays(arrays: Dict, npods: int, q: int) -> Dict:
@@ -75,6 +74,12 @@ def pod_stack_arrays(arrays: Dict, npods: int, q: int) -> Dict:
     return out
 
 
+def _cannon_parts(plan, mesh, *, row_axis, col_axis, pod_axis):
+    axes = GridAxes(row_axis, col_axis, pod_axis)
+    npods = mesh.shape[pod_axis] if pod_axis else 1
+    return axes, CannonSchedule(q=plan.q, axes=axes, npods=npods)
+
+
 def build_cannon_fn(
     plan,
     mesh,
@@ -92,172 +97,39 @@ def build_cannon_fn(
 ):
     """Build the jitted SPMD counting function for ``plan`` on ``mesh``.
 
-    Returns ``(fn, in_specs)``; ``fn(**device_arrays)`` yields the global
-    triangle count (scalar) or per-device counts if ``reduce_global=False``.
-    ``method``: ``"search"`` (flat padding), ``"search2"`` (two-level
-    length-bucketed — §Perf H1a; requires ``bucketize_plan``).
+    Returns a callable ``fn(**device_arrays)`` yielding the global triangle
+    count (scalar) or per-device counts if ``reduce_global=False``.
+    ``method``: any registered CSR kernel — ``"search"`` (flat padding),
+    ``"search2"`` (two-level length-bucketed — §Perf H1a; requires
+    ``bucketize_plan``), ``"global"`` (gather-free keys).
     ``compress_lengths`` (§Perf H1b) ships row *lengths as uint16 pairs*
-    instead of the int32 indptr inside the shift blob (the indptr is
-    rebuilt with one cumsum after each receive), cutting shifted bytes by
-    ~(nb*2)/(nb*4+nnz*4).
+    instead of the int32 indptr inside the shift blob, cutting shifted
+    bytes by ~(nb*2)/(nb*4+nnz*4).
     """
-    q = plan.q
-    npods = mesh.shape[pod_axis] if pod_axis else 1
-    assert q % npods == 0, "pods must divide the grid dimension"
-    nshifts = q // npods
-    if compress_lengths:
-        assert plan.dmax < 65536, "uint16 length compression needs d < 2^16"
-
-    axes = (
-        (pod_axis, row_axis, col_axis) if pod_axis else (row_axis, col_axis)
+    del tile_kernel_mode  # tile path has its own builder below
+    axes, schedule = _cannon_parts(
+        plan, mesh, row_axis=row_axis, col_axis=col_axis, pod_axis=pod_axis
     )
-
-    def _count_pair(a_ptr, a_idx, b_ptr, b_idx, m_ti, m_tj, m_cnt):
-        if method == "search":
-            return count_mod.count_pair_search(
-                a_ptr,
-                a_idx,
-                b_ptr,
-                b_idx,
-                m_ti,
-                m_tj,
-                m_cnt,
-                dpad=plan.dmax,
-                chunk=plan.chunk,
-                probe_shorter=probe_shorter,
-                count_dtype=count_dtype,
-            )
-        if method == "search2":
-            return count_mod.count_pair_search_two_level(
-                a_ptr,
-                a_idx,
-                b_ptr,
-                b_idx,
-                m_ti,
-                m_tj,
-                m_cnt,
-                plan.n_long,
-                dpad_long=plan.dmax,
-                dpad_short=plan.d_small,
-                chunk=plan.chunk,
-                probe_shorter=probe_shorter,
-                count_dtype=count_dtype,
-            )
-        raise ValueError(f"unknown method {method!r} for CSR operands")
-
-    def _pack_lengths(ptr):
-        """(nb+1,) indptr -> (ceil(nb/2),) int32 of uint16 length pairs."""
-        lens = jnp.diff(ptr).astype(jnp.int32)
-        if lens.shape[0] % 2:
-            lens = jnp.concatenate([lens, jnp.zeros((1,), jnp.int32)])
-        return lens[0::2] | (lens[1::2] << 16)
-
-    def _unpack_lengths(packed, nb):
-        lo = packed & 0xFFFF
-        hi = (packed >> 16) & 0xFFFF
-        lens = jnp.stack([lo, hi], axis=1).reshape(-1)[:nb]
-        return jnp.concatenate(
-            [jnp.zeros((1,), jnp.int32), jnp.cumsum(lens, dtype=jnp.int32)]
-        )
-
-    def spmd(a_indptr, a_indices, b_indptr, b_indices, m_ti, m_tj, m_cnt):
-        # strip the leading (pod,) r, c block dims added by shard_map;
-        # mask arrays are replicated over the pod axis (no pod dim).
-        lead = 3 if pod_axis else 2
-        sq = lambda a: a.reshape(a.shape[lead:])
-        sqm = lambda a: a.reshape(a.shape[2:])
-        a_ptr, a_idx = sq(a_indptr), sq(a_indices)
-        b_ptr, b_idx = sq(b_indptr), sq(b_indices)
-        ti, tj, cnt = sqm(m_ti), sqm(m_tj), sqm(m_cnt)
-
-        nb = a_ptr.shape[0] - 1
-        if compress_lengths:
-            a_head = _pack_lengths(a_ptr)
-            b_head = _pack_lengths(b_ptr)
-            expand = lambda head: _unpack_lengths(head, nb)
-        else:
-            a_head, b_head = a_ptr, b_ptr
-            expand = lambda head: head
-        a_layout, _ = blob_layout([a_head.shape, a_idx.shape])
-        b_layout, _ = blob_layout([b_head.shape, b_idx.shape])
-
-        def body_blob(carry, _):
-            a_blob, b_blob = carry
-            # issue the shift for the *next* step first: independent of the
-            # local count below, so XLA may overlap collective + compute.
-            a_next = jax.lax.ppermute(
-                a_blob, col_axis, perm=_shift_perm(q, npods)
-            )
-            b_next = jax.lax.ppermute(
-                b_blob, row_axis, perm=_shift_perm(q, npods)
-            )
-            a_head_s, a_idx_s = unpack_blob(a_blob, a_layout)
-            b_head_s, b_idx_s = unpack_blob(b_blob, b_layout)
-            c = _count_pair(
-                expand(a_head_s), a_idx_s, expand(b_head_s), b_idx_s,
-                ti, tj, cnt,
-            )
-            return (a_next, b_next), c
-
-        def body_noblob(carry, _):
-            ap, ai, bp, bi = carry
-            nxt = tuple(
-                jax.lax.ppermute(arr, ax, perm=_shift_perm(q, npods))
-                for arr, ax in (
-                    (ap, col_axis),
-                    (ai, col_axis),
-                    (bp, row_axis),
-                    (bi, row_axis),
-                )
-            )
-            c = _count_pair(ap, ai, bp, bi, ti, tj, cnt)
-            return nxt, c
-
-        if use_blob:
-            init = (pack_blob([a_head, a_idx]), pack_blob([b_head, b_idx]))
-            _, per_shift = jax.lax.scan(body_blob, init, None, length=nshifts)
-        else:  # one collective per array (blob ablation)
-            init = (a_ptr, a_idx, b_ptr, b_idx)
-            _, per_shift = jax.lax.scan(
-                body_noblob, init, None, length=nshifts
-            )
-        total = jnp.sum(per_shift, dtype=count_dtype)
-        if reduce_global:
-            total = jax.lax.psum(total, row_axis)
-            total = jax.lax.psum(total, col_axis)
-            if pod_axis:
-                total = jax.lax.psum(total, pod_axis)
-            return total
-        return total.reshape((1,) * len(axes))
-
-    in_specs = cannon_in_specs(row_axis, col_axis, pod_axis)
-    ordered = [
-        "a_indptr",
-        "a_indices",
-        "b_indptr",
-        "b_indices",
-        "m_ti",
-        "m_tj",
-        "m_cnt",
-    ]
-    out_specs = P() if reduce_global else P(*axes)
-    fn = jax.jit(
-        jax.shard_map(
-            spmd,
-            mesh=mesh,
-            in_specs=tuple(in_specs[k] for k in ordered),
-            out_specs=out_specs,
-            check_vma=False,
-        )
+    kernel = make_csr_kernel(
+        method,
+        dpad=plan.dmax,
+        chunk=plan.chunk,
+        probe_shorter=probe_shorter,
+        count_dtype=count_dtype,
+        n_long=getattr(plan, "n_long", None),
+        d_small=getattr(plan, "d_small", None),
     )
-
-    def call(**arrays):
-        return fn(*(arrays[k] for k in ordered))
-
-    call.lower = lambda **arrays: fn.lower(*(arrays[k] for k in ordered))
-    call.in_specs = in_specs
-    call.ordered = ordered
-    return call
+    store = CSRStore(
+        kernel,
+        use_blob=use_blob,
+        compress_lengths=compress_lengths,
+        dmax=plan.dmax,
+    )
+    return engine.build_engine_fn(
+        mesh, axes, store, schedule,
+        count_dtype=count_dtype,
+        reduction=Reduction(global_sum=reduce_global),
+    )
 
 
 def build_cannon_stepper(
@@ -272,59 +144,26 @@ def build_cannon_stepper(
 ):
     """Shift-at-a-time Cannon for fault-tolerant runs.
 
-    Returns ``one_shift(state) -> state`` (jitted SPMD) where state =
-    (a_ptr, a_idx, b_ptr, b_idx, partial_counts).  The host loop owns the
-    shift index, checkpointing state between shifts so a restarted job
-    resumes mid-loop (EXPERIMENTS.md §Fault-tolerance).
+    Returns ``one_shift(state, masks) -> state`` (jitted SPMD) where state
+    = (a_ptr, a_idx, b_ptr, b_idx, partial_counts).  The host loop owns
+    the shift index, checkpointing state between shifts so a restarted job
+    resumes mid-loop (EXPERIMENTS.md §Fault-tolerance).  Same engine body
+    as :func:`build_cannon_fn` — only the loop owner differs.
     """
-    q = plan.q
-
-    def _count_pair(a_ptr, a_idx, b_ptr, b_idx, m_ti, m_tj, m_cnt):
-        return count_mod.count_pair_search(
-            a_ptr, a_idx, b_ptr, b_idx, m_ti, m_tj, m_cnt,
-            dpad=plan.dmax, chunk=plan.chunk,
-            probe_shorter=probe_shorter, count_dtype=count_dtype,
-        )
-
-    def spmd(a_indptr, a_indices, b_indptr, b_indices, m_ti, m_tj, m_cnt, acc):
-        sq = lambda a: a.reshape(a.shape[2:])
-        a_ptr, a_idx = sq(a_indptr), sq(a_indices)
-        b_ptr, b_idx = sq(b_indptr), sq(b_indices)
-        ti, tj, cnt = sq(m_ti), sq(m_tj), sq(m_cnt)
-        acc_l = acc.reshape(())
-        a_ptr_n = jax.lax.ppermute(a_ptr, col_axis, perm=_shift_perm(q, 1))
-        a_idx_n = jax.lax.ppermute(a_idx, col_axis, perm=_shift_perm(q, 1))
-        b_ptr_n = jax.lax.ppermute(b_ptr, row_axis, perm=_shift_perm(q, 1))
-        b_idx_n = jax.lax.ppermute(b_idx, row_axis, perm=_shift_perm(q, 1))
-        c = _count_pair(a_ptr, a_idx, b_ptr, b_idx, ti, tj, cnt)
-        one = lambda a: a.reshape((1, 1) + a.shape)
-        return (
-            one(a_ptr_n),
-            one(a_idx_n),
-            one(b_ptr_n),
-            one(b_idx_n),
-            (acc_l + c).reshape(1, 1),
-        )
-
-    spec = P(row_axis, col_axis)
-    fn = jax.jit(
-        jax.shard_map(
-            spmd,
-            mesh=mesh,
-            in_specs=(spec,) * 8,
-            out_specs=(spec,) * 5,
-            check_vma=False,
-        )
+    axes, schedule = _cannon_parts(
+        plan, mesh, row_axis=row_axis, col_axis=col_axis, pod_axis=None
     )
-
-    def one_shift(state, masks):
-        a_ptr, a_idx, b_ptr, b_idx, acc = state
-        return fn(
-            a_ptr, a_idx, b_ptr, b_idx,
-            masks["m_ti"], masks["m_tj"], masks["m_cnt"], acc,
-        )
-
-    return one_shift
+    kernel = make_csr_kernel(
+        method,
+        dpad=plan.dmax,
+        chunk=plan.chunk,
+        probe_shorter=probe_shorter,
+        count_dtype=count_dtype,
+    )
+    store = CSRStore(kernel, use_blob=False)
+    # count_dtype binds only the kernel; the accumulator dtype follows the
+    # caller's acc array (the checkpointed state owns it)
+    return engine.build_engine_stepper(mesh, axes, store, schedule)
 
 
 def build_cannon_tile_fn(
@@ -346,56 +185,16 @@ def build_cannon_tile_fn(
     scalar-prefetch grid.  ``interpret=True`` validates on CPU; on TPU pass
     ``interpret=False`` to run the Mosaic-lowered kernel.
     """
-    from ..kernels.tc_tile.tc_tile import tile_triple_counts
-
-    q = plan.q
-    nshifts = q
-
-    def spmd(a_tiles, b_tiles, m_tiles, triples):
-        sq = lambda a: a.reshape(a.shape[2:])
-        a_t, b_t = sq(a_tiles), sq(b_tiles)
-        m_t, trips = sq(m_tiles), sq(triples)  # trips: (q, trip_pad, 4)
-
-        def body(carry, s):
-            a_cur, b_cur = carry
-            a_next = jax.lax.ppermute(
-                a_cur, col_axis, perm=_shift_perm(q, 1)
-            )
-            b_next = jax.lax.ppermute(
-                b_cur, row_axis, perm=_shift_perm(q, 1)
-            )
-            per = tile_triple_counts(
-                trips[s], a_cur, b_cur, m_t, mode=mode, interpret=interpret
-            )
-            return (a_next, b_next), jnp.sum(per, dtype=count_dtype)
-
-        (_, _), per_shift = jax.lax.scan(
-            body, (a_t, b_t), jnp.arange(nshifts)
-        )
-        total = jnp.sum(per_shift, dtype=count_dtype)
-        if reduce_global:
-            total = jax.lax.psum(total, row_axis)
-            total = jax.lax.psum(total, col_axis)
-            return total
-        return total.reshape((1, 1))
-
-    spec = P(row_axis, col_axis)
-    fn = jax.jit(
-        jax.shard_map(
-            spmd,
-            mesh=mesh,
-            in_specs=(spec,) * 4,
-            out_specs=P() if reduce_global else spec,
-            check_vma=False,
-        )
+    del tile_plan  # shapes travel with the device arrays
+    axes, schedule = _cannon_parts(
+        plan, mesh, row_axis=row_axis, col_axis=col_axis, pod_axis=None
     )
-    ordered = ["a_tiles", "b_tiles", "m_tiles", "triples"]
-
-    def call(**arrays):
-        return fn(*(arrays[k] for k in ordered))
-
-    call.lower = lambda **arrays: fn.lower(*(arrays[k] for k in ordered))
-    return call
+    store = TileStore(mode=mode, interpret=interpret, count_dtype=count_dtype)
+    return engine.build_engine_fn(
+        mesh, axes, store, schedule,
+        count_dtype=count_dtype,
+        reduction=Reduction(global_sum=reduce_global),
+    )
 
 
 def build_cannon_dense_fn(
@@ -409,51 +208,12 @@ def build_cannon_dense_fn(
     reduce_global: bool = True,
 ):
     """Dense-operand Cannon (oracle path): blocks as 0/1 float matrices."""
-    q = plan.q
-    npods = mesh.shape[pod_axis] if pod_axis else 1
-    assert q % npods == 0
-    nshifts = q // npods
-    axes = (
-        (pod_axis, row_axis, col_axis) if pod_axis else (row_axis, col_axis)
+    axes, schedule = _cannon_parts(
+        plan, mesh, row_axis=row_axis, col_axis=col_axis, pod_axis=pod_axis
     )
-
-    def spmd(a_dense, b_dense, m_dense):
-        lead = 3 if pod_axis else 2
-        sq = lambda a: a.reshape(a.shape[lead:])
-        a, b, msk = sq(a_dense), sq(b_dense), sq(m_dense)
-
-        def body(carry, _):
-            a_cur, b_cur = carry
-            a_next = jax.lax.ppermute(
-                a_cur, col_axis, perm=_shift_perm(q, npods)
-            )
-            b_next = jax.lax.ppermute(
-                b_cur, row_axis, perm=_shift_perm(q, npods)
-            )
-            c = count_mod.count_pair_dense(a_cur, b_cur, msk, acc_dtype=acc_dtype)
-            return (a_next, b_next), c
-
-        (_, _), per_shift = jax.lax.scan(body, (a, b), None, length=nshifts)
-        total = jnp.sum(per_shift, dtype=acc_dtype)
-        if reduce_global:
-            for ax in axes:
-                total = jax.lax.psum(total, ax)
-            return total
-        return total.reshape((1,) * len(axes))
-
-    ab = P(pod_axis, row_axis, col_axis) if pod_axis else P(row_axis, col_axis)
-    fn = jax.jit(
-        jax.shard_map(
-            spmd,
-            mesh=mesh,
-            in_specs=(ab, ab, P(row_axis, col_axis)),
-            out_specs=P() if reduce_global else P(*axes),
-            check_vma=False,
-        )
+    store = DenseStore(acc_dtype=acc_dtype)
+    return engine.build_engine_fn(
+        mesh, axes, store, schedule,
+        count_dtype=acc_dtype,
+        reduction=Reduction(global_sum=reduce_global),
     )
-
-    def call(a_dense, b_dense, m_dense):
-        return fn(a_dense, b_dense, m_dense)
-
-    call.lower = fn.lower
-    return call

@@ -1,0 +1,738 @@
+"""Unified schedule engine: one pluggable runtime for every distributed
+count (DESIGN.md §3-§6).
+
+A distributed triangle count is expressed as the composition
+
+    (OperandStore, ShiftSchedule, CountKernel, Reduction)
+
+and this module generates the jitted ``shard_map`` SPMD function from the
+parts — the scan/ppermute schedule bodies that used to be quadruplicated
+across ``cannon.py`` / ``summa.py`` / ``onedim.py`` live here exactly once.
+
+* :class:`OperandStore` subclasses encapsulate *payload representation*:
+  how per-device blocks are packed for shifting (single-blob CSR with
+  optional uint16 length compression, dense 0/1 blocks, bit-packed
+  128x128 tiles) and how a payload is unpacked back into count-kernel
+  arguments.
+* :class:`ShiftSchedule` subclasses encapsulate *permutation structure*:
+  Cannon's q-step left/up rotation with 2.5D pod striding, SUMMA's
+  one-hot-psum broadcast rounds, and the 1D ring rotation.  Each yields a
+  ``(carry0, body, nsteps)`` triple for one shared ``lax.scan`` driver;
+  the same body also powers the host-driven stepper used for fault
+  tolerance (:func:`build_engine_stepper`).
+* CountKernels are the existing :mod:`repro.core.count` paths behind one
+  signature ``kernel(a_ptr, a_idx, b_ptr, b_idx, ti, tj, cnt) -> scalar``
+  (see :func:`make_csr_kernel` / :data:`CSR_KERNELS`); dense and tile
+  stores carry their own kernels behind the store-level ``count`` hook.
+* :class:`Reduction` turns per-device per-step partials into the global
+  scalar (psum over every mesh axis) or per-device outputs.
+
+All jax API calls with cross-version drift go through :mod:`repro.compat`
+so the engine runs unchanged on jax 0.4.x and >= 0.5.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .. import compat
+from . import count as count_mod
+from .blob import blob_layout, pack_blob, unpack_blob
+
+__all__ = [
+    "GridAxes",
+    "RingAxes",
+    "OperandStore",
+    "CSRStore",
+    "DenseStore",
+    "TileStore",
+    "SummaCSRStore",
+    "OneDCSRStore",
+    "ShiftSchedule",
+    "CannonSchedule",
+    "SummaSchedule",
+    "RingSchedule",
+    "Reduction",
+    "CSR_KERNELS",
+    "register_csr_kernel",
+    "make_csr_kernel",
+    "build_engine_fn",
+    "build_engine_stepper",
+    "shift_perm",
+    "tree_ppermute",
+]
+
+
+# ======================================================================
+# mesh axes
+# ======================================================================
+@dataclasses.dataclass(frozen=True)
+class GridAxes:
+    """Named mesh axes of a 2D (optionally 2.5D) grid."""
+
+    row: str = "data"
+    col: str = "model"
+    pod: Optional[str] = None
+
+    @property
+    def all(self) -> Tuple[str, ...]:
+        return (self.pod, self.row, self.col) if self.pod else (self.row, self.col)
+
+
+@dataclasses.dataclass(frozen=True)
+class RingAxes:
+    """A single mesh axis forming the 1D ring."""
+
+    axis: str = "flat"
+
+    @property
+    def all(self) -> Tuple[str, ...]:
+        return (self.axis,)
+
+
+# ======================================================================
+# shared shift helpers
+# ======================================================================
+def shift_perm(size: int, k: int):
+    """ppermute pairs shifting *towards lower index* by ``k`` (left/up)."""
+    return [(s, (s - k) % size) for s in range(size)]
+
+
+def tree_ppermute(tree, axis: str, perm):
+    """Shift every leaf of a payload pytree along one mesh axis."""
+    return jax.tree.map(lambda a: compat.ppermute(a, axis, perm), tree)
+
+
+def _squeeze(a, lead: int):
+    return a.reshape(a.shape[lead:])
+
+
+# ======================================================================
+# CSR count-kernel registry — "behind one signature"
+# ======================================================================
+# Every CSR kernel factory returns
+#   kernel(a_ptr, a_idx, b_ptr, b_idx, ti, tj, cnt) -> scalar count
+# with all plan-derived padding/chunk parameters bound at build time.
+CSR_KERNELS: Dict[str, Callable] = {}
+
+
+def register_csr_kernel(name: str, factory: Callable) -> None:
+    """Register a CSR count-kernel factory under ``name``.
+
+    ``factory(dpad=..., chunk=..., probe_shorter=..., count_dtype=...,
+    sentinel=..., n_long=..., d_small=...) -> kernel``.
+    """
+    CSR_KERNELS[name] = factory
+
+
+def _search_factory(*, dpad, chunk, probe_shorter, count_dtype, sentinel,
+                    n_long, d_small):
+    del n_long, d_small
+    return functools.partial(
+        count_mod.count_pair_search,
+        dpad=dpad,
+        chunk=chunk,
+        probe_shorter=probe_shorter,
+        count_dtype=count_dtype,
+        sentinel=sentinel,
+    )
+
+
+def _search2_factory(*, dpad, chunk, probe_shorter, count_dtype, sentinel,
+                     n_long, d_small):
+    if n_long is None or d_small is None:
+        raise ValueError(
+            "method 'search2' needs a bucketized plan (bucketize_plan) "
+            "providing n_long/d_small"
+        )
+
+    def kernel(a_ptr, a_idx, b_ptr, b_idx, ti, tj, cnt):
+        return count_mod.count_pair_search_two_level(
+            a_ptr, a_idx, b_ptr, b_idx, ti, tj, cnt, n_long,
+            dpad_long=dpad,
+            dpad_short=d_small,
+            chunk=chunk,
+            probe_shorter=probe_shorter,
+            count_dtype=count_dtype,
+            sentinel=sentinel,
+        )
+
+    return kernel
+
+
+def _global_factory(*, dpad, chunk, probe_shorter, count_dtype, sentinel,
+                    n_long, d_small):
+    del probe_shorter, sentinel, n_long, d_small
+    return functools.partial(
+        count_mod.count_pair_search_global,
+        dpad=dpad,
+        chunk=chunk,
+        count_dtype=count_dtype,
+    )
+
+
+register_csr_kernel("search", _search_factory)
+register_csr_kernel("search2", _search2_factory)
+register_csr_kernel("global", _global_factory)
+
+
+def make_csr_kernel(
+    method: str,
+    *,
+    dpad: int,
+    chunk: int,
+    probe_shorter: bool = True,
+    count_dtype=jnp.int32,
+    sentinel: Optional[int] = None,
+    n_long: Optional[int] = None,
+    d_small: Optional[int] = None,
+) -> Callable:
+    """Build a registered CSR kernel with plan parameters bound."""
+    try:
+        factory = CSR_KERNELS[method]
+    except KeyError:
+        raise ValueError(
+            f"unknown CSR count method {method!r}; "
+            f"registered: {sorted(CSR_KERNELS)}"
+        ) from None
+    return factory(
+        dpad=dpad,
+        chunk=chunk,
+        probe_shorter=probe_shorter,
+        count_dtype=count_dtype,
+        sentinel=sentinel,
+        n_long=n_long,
+        d_small=d_small,
+    )
+
+
+# ======================================================================
+# operand stores
+# ======================================================================
+class OperandStore:
+    """Payload representation: pack/unpack + kernel-argument extraction.
+
+    Contract (all methods trace inside ``shard_map``):
+
+    * ``operand_names`` / ``static_names`` — plan device-array names, in
+      call order (operands travel; statics stay put).
+    * ``in_specs(axes)``  — PartitionSpec per array name.
+    * ``lead(name, axes)`` — number of leading mesh block-dims shard_map
+      prefixes onto that array (stripped by ``localize``).
+    * ``payload(local)``  — packed shiftable state (a pytree; schedules
+      treat it opaquely and shift it with :func:`tree_ppermute`).
+    * ``count(state, local, step, ctx)`` — unpack ``state`` and run the
+      bound count kernel for one schedule step.
+    """
+
+    operand_names: Sequence[str] = ()
+    static_names: Sequence[str] = ()
+
+    @property
+    def names(self):
+        return tuple(self.operand_names) + tuple(self.static_names)
+
+    def in_specs(self, axes) -> Dict[str, P]:
+        raise NotImplementedError
+
+    def lead(self, name: str, axes) -> int:
+        raise NotImplementedError
+
+    def localize(self, named: Dict, axes) -> Dict:
+        return {k: _squeeze(v, self.lead(k, axes)) for k, v in named.items()}
+
+    def payload(self, local: Dict):
+        raise NotImplementedError
+
+    def count(self, state, local: Dict, step, ctx):
+        raise NotImplementedError
+
+
+class CSRStore(OperandStore):
+    """CSR-block operands shifted as single int32 blobs (paper's
+    serialization optimization), with optional uint16 length compression
+    (§Perf H1b: ship row-length *pairs* instead of the int32 indptr and
+    rebuild the indptr with one cumsum after each receive)."""
+
+    operand_names = ("a_indptr", "a_indices", "b_indptr", "b_indices")
+    static_names = ("m_ti", "m_tj", "m_cnt")
+
+    def __init__(self, kernel, *, use_blob: bool = True,
+                 compress_lengths: bool = False, dmax: Optional[int] = None):
+        if compress_lengths:
+            assert use_blob, "length compression only applies to blob shifts"
+            assert dmax is not None and dmax < 65536, (
+                "uint16 length compression needs d < 2^16"
+            )
+        self.kernel = kernel
+        self.use_blob = use_blob
+        self.compress_lengths = compress_lengths
+        self._layouts = {}
+
+    def in_specs(self, axes):
+        ab = P(*axes.all)
+        m = P(axes.row, axes.col)
+        return dict(
+            a_indptr=ab, a_indices=ab, b_indptr=ab, b_indices=ab,
+            m_ti=m, m_tj=m, m_cnt=m,
+        )
+
+    def lead(self, name, axes):
+        return len(axes.all) if name in self.operand_names else 2
+
+    # -- uint16 length compression ------------------------------------
+    @staticmethod
+    def _pack_lengths(ptr):
+        """(nb+1,) indptr -> (ceil(nb/2),) int32 of uint16 length pairs."""
+        lens = jnp.diff(ptr).astype(jnp.int32)
+        if lens.shape[0] % 2:
+            lens = jnp.concatenate([lens, jnp.zeros((1,), jnp.int32)])
+        return lens[0::2] | (lens[1::2] << 16)
+
+    @staticmethod
+    def _unpack_lengths(packed, nb):
+        lo = packed & 0xFFFF
+        hi = (packed >> 16) & 0xFFFF
+        lens = jnp.stack([lo, hi], axis=1).reshape(-1)[:nb]
+        return jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(lens, dtype=jnp.int32)]
+        )
+
+    # -- pack / unpack -------------------------------------------------
+    def payload(self, local):
+        a_ptr, a_idx = local["a_indptr"], local["a_indices"]
+        b_ptr, b_idx = local["b_indptr"], local["b_indices"]
+        if not self.use_blob:
+            return ((a_ptr, a_idx), (b_ptr, b_idx))
+        self._nb = a_ptr.shape[0] - 1
+        if self.compress_lengths:
+            a_head, b_head = self._pack_lengths(a_ptr), self._pack_lengths(b_ptr)
+        else:
+            a_head, b_head = a_ptr, b_ptr
+        self._layouts["a"], _ = blob_layout([a_head.shape, a_idx.shape])
+        self._layouts["b"], _ = blob_layout([b_head.shape, b_idx.shape])
+        return (pack_blob([a_head, a_idx]), pack_blob([b_head, b_idx]))
+
+    def _unpack(self, blob, side):
+        head, idx = unpack_blob(blob, self._layouts[side])
+        if self.compress_lengths:
+            head = self._unpack_lengths(head, self._nb)
+        return head, idx
+
+    def count(self, state, local, step, ctx):
+        del step, ctx
+        a_state, b_state = state
+        if self.use_blob:
+            a_ptr, a_idx = self._unpack(a_state, "a")
+            b_ptr, b_idx = self._unpack(b_state, "b")
+        else:
+            a_ptr, a_idx = a_state
+            b_ptr, b_idx = b_state
+        return self.kernel(
+            a_ptr, a_idx, b_ptr, b_idx,
+            local["m_ti"], local["m_tj"], local["m_cnt"],
+        )
+
+
+class DenseStore(OperandStore):
+    """Dense 0/1 block operands (oracle path): count = sum((A@Bᵀ)⊙M)."""
+
+    operand_names = ("a_dense", "b_dense")
+    static_names = ("m_dense",)
+
+    def __init__(self, *, acc_dtype=jnp.float32):
+        self.acc_dtype = acc_dtype
+
+    def in_specs(self, axes):
+        ab = P(*axes.all)
+        return dict(a_dense=ab, b_dense=ab, m_dense=P(axes.row, axes.col))
+
+    def lead(self, name, axes):
+        return len(axes.all) if name in self.operand_names else 2
+
+    def payload(self, local):
+        return (local["a_dense"], local["b_dense"])
+
+    def count(self, state, local, step, ctx):
+        del step, ctx
+        a, b = state
+        return count_mod.count_pair_dense(
+            a, b, local["m_dense"], acc_dtype=self.acc_dtype
+        )
+
+
+class TileStore(OperandStore):
+    """Bit-packed 128x128 tile operands driving the Pallas kernel.
+
+    Tile stores shift exactly like CSR blobs; the per-(device, shift)
+    active-triple lists are static (planner-joined) and selected by the
+    schedule's step index.
+    """
+
+    operand_names = ("a_tiles", "b_tiles")
+    static_names = ("m_tiles", "triples")
+
+    def __init__(self, *, mode: str = "popcount", interpret: bool = True,
+                 count_dtype=jnp.int32):
+        self.mode = mode
+        self.interpret = interpret
+        self.count_dtype = count_dtype
+
+    def in_specs(self, axes):
+        spec = P(axes.row, axes.col)
+        return {k: spec for k in self.names}
+
+    def lead(self, name, axes):
+        del name
+        return 2
+
+    def payload(self, local):
+        return (local["a_tiles"], local["b_tiles"])
+
+    def count(self, state, local, step, ctx):
+        del ctx
+        from ..kernels.tc_tile.tc_tile import tile_triple_counts
+
+        a_cur, b_cur = state
+        per = tile_triple_counts(
+            local["triples"][step], a_cur, b_cur, local["m_tiles"],
+            mode=self.mode, interpret=self.interpret,
+        )
+        return jnp.sum(per, dtype=self.count_dtype)
+
+
+class SummaCSRStore(OperandStore):
+    """CSR operands for SUMMA broadcast rounds.
+
+    Nothing is carried between steps; instead the B operand holds
+    ``npan = ceil(c/r)`` panels per device and :meth:`select` realizes
+    step ``z``'s (A, B) panel pair as masked psums (one-hot broadcast —
+    XLA lowers this to an all-reduce; a dedicated collective-broadcast
+    would move strictly fewer bytes, accounted in the roofline).
+    """
+
+    operand_names = ("a_indptr", "a_indices", "b_indptr", "b_indices")
+    static_names = ("m_ti", "m_tj", "m_cnt")
+
+    def __init__(self, kernel, *, r: int, c: int):
+        self.kernel = kernel
+        self.r = r
+        self.c = c
+
+    def in_specs(self, axes):
+        spec = P(axes.row, axes.col)
+        return {k: spec for k in self.names}
+
+    def lead(self, name, axes):
+        del name, axes
+        return 2
+
+    def payload(self, local):  # SUMMA carries no shift state
+        del local
+        return ()
+
+    def select(self, local, z, ctx):
+        """One-hot psum broadcast of step ``z``'s A panel (along the grid
+        row, from owner column ``z % c``) and B panel (along the grid
+        column, from owner row ``z % r``, local slot ``z // r``)."""
+        a_ptr, a_idx = local["a_indptr"], local["a_indices"]
+        b_ptr, b_idx = local["b_indptr"], local["b_indices"]
+        owna = (ctx.axis_index(ctx.axes.col) == z % self.c).astype(a_ptr.dtype)
+        pa_ptr = jax.lax.psum(a_ptr * owna, ctx.axes.col)
+        pa_idx = jax.lax.psum(a_idx * owna, ctx.axes.col)
+        slot = z // self.r
+        ownb = (ctx.axis_index(ctx.axes.row) == z % self.r).astype(b_ptr.dtype)
+        pb_ptr = jax.lax.psum(b_ptr[slot] * ownb, ctx.axes.row)
+        pb_idx = jax.lax.psum(b_idx[slot] * ownb, ctx.axes.row)
+        return ((pa_ptr, pa_idx), (pb_ptr, pb_idx))
+
+    def count(self, state, local, step, ctx):
+        del step, ctx
+        (a_ptr, a_idx), (b_ptr, b_idx) = state
+        return self.kernel(
+            a_ptr, a_idx, b_ptr, b_idx,
+            local["m_ti"], local["m_tj"], local["m_cnt"],
+        )
+
+
+class OneDCSRStore(OperandStore):
+    """1D-ring operands: each device's own row-block CSR rotates as one
+    blob; tasks are grouped by owner-of-j and the group matching the
+    currently-held block is selected each step."""
+
+    operand_names = ("indptr", "indices")
+    static_names = ("t_i", "t_j", "t_cnt")
+
+    def __init__(self, kernel, *, p: int):
+        self.kernel = kernel
+        self.p = p
+        self._layout = None
+
+    def in_specs(self, axes):
+        return {k: P(axes.axis) for k in self.names}
+
+    def lead(self, name, axes):
+        del name, axes
+        return 1
+
+    def payload(self, local):
+        own_ptr, own_idx = local["indptr"], local["indices"]
+        self._layout, _ = blob_layout([own_ptr.shape, own_idx.shape])
+        return pack_blob([own_ptr, own_idx])
+
+    def count(self, state, local, step, ctx):
+        b_ptr, b_idx = unpack_blob(state, self._layout)
+        d = ctx.axis_index(ctx.axes.axis)
+        o = (d + step) % self.p
+        return self.kernel(
+            local["indptr"], local["indices"], b_ptr, b_idx,
+            jnp.take(local["t_i"], o, axis=0),
+            jnp.take(local["t_j"], o, axis=0),
+            jnp.take(local["t_cnt"], o, axis=0),
+        )
+
+
+# ======================================================================
+# shift schedules
+# ======================================================================
+@dataclasses.dataclass
+class _Ctx:
+    """Per-trace context handed to stores (axis introspection)."""
+
+    axes: object
+
+    @staticmethod
+    def axis_index(name: str):
+        return jax.lax.axis_index(name)
+
+
+class ShiftSchedule:
+    """Permutation structure: yields ``(carry0, body, nsteps)`` for the
+    shared ``lax.scan`` driver; ``body(carry, step) -> (carry', count)``."""
+
+    def make_scan(self, store: OperandStore, local: Dict, ctx: _Ctx):
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class CannonSchedule(ShiftSchedule):
+    """Cannon's q-step {count, shift-A-left, shift-B-up} rotation.
+
+    Multi-pod (2.5D): blocks are replicated over the pod axis, pod ``t``
+    starts at skew offset ``t`` (see ``pod_stack_arrays``) and executes
+    every ``npods``-th shift — memory ×npods, shift traffic ÷npods.
+    """
+
+    q: int
+    axes: GridAxes
+    npods: int = 1
+
+    @property
+    def nsteps(self) -> int:
+        assert self.q % self.npods == 0, "pods must divide the grid dimension"
+        return self.q // self.npods
+
+    def make_scan(self, store, local, ctx):
+        perm = shift_perm(self.q, self.npods)
+        carry0 = store.payload(local)
+
+        def body(carry, s):
+            a_state, b_state = carry
+            # issue the shift for the *next* step first: independent of
+            # the local count, so XLA may overlap collective + compute.
+            a_next = tree_ppermute(a_state, self.axes.col, perm)
+            b_next = tree_ppermute(b_state, self.axes.row, perm)
+            c = store.count((a_state, b_state), local, s, ctx)
+            return (a_next, b_next), c
+
+        return carry0, body, self.nsteps
+
+
+@dataclasses.dataclass
+class SummaSchedule(ShiftSchedule):
+    """SUMMA broadcast rounds on an ``r x c`` grid: ``c`` steps, each a
+    one-hot-psum panel broadcast realized by the store's ``select``."""
+
+    r: int
+    c: int
+    axes: GridAxes
+
+    @property
+    def nsteps(self) -> int:
+        return self.c
+
+    def make_scan(self, store, local, ctx):
+        carry0 = store.payload(local)  # () — nothing travels
+
+        def body(carry, z):
+            state = store.select(local, z, ctx)
+            return carry, store.count(state, local, z, ctx)
+
+        return carry0, body, self.nsteps
+
+
+@dataclasses.dataclass
+class RingSchedule(ShiftSchedule):
+    """1D ring rotation over ``p`` devices: the whole payload passes
+    through every device once (the baseline's (p-1)/p·nnz volume)."""
+
+    p: int
+    axes: RingAxes
+
+    @property
+    def nsteps(self) -> int:
+        return self.p
+
+    def make_scan(self, store, local, ctx):
+        perm = shift_perm(self.p, 1)
+        carry0 = store.payload(local)
+
+        def body(carry, t):
+            nxt = tree_ppermute(carry, self.axes.axis, perm)
+            return nxt, store.count(carry, local, t, ctx)
+
+        return carry0, body, self.nsteps
+
+
+# ======================================================================
+# reduction
+# ======================================================================
+@dataclasses.dataclass(frozen=True)
+class Reduction:
+    """Global psum over every mesh axis, or per-device partials."""
+
+    global_sum: bool = True
+
+    def apply(self, total, axes):
+        if self.global_sum:
+            for ax in axes.all:
+                total = jax.lax.psum(total, ax)
+            return total
+        return total.reshape((1,) * len(axes.all))
+
+    def out_specs(self, axes):
+        return P() if self.global_sum else P(*axes.all)
+
+
+# ======================================================================
+# engine builders
+# ======================================================================
+def _make_call(fn, ordered, in_specs):
+    """Keyword/positional call wrapper with ``.lower`` for dry runs."""
+
+    def call(*pos, **arrays):
+        if pos:
+            return fn(*pos)
+        return fn(*(arrays[k] for k in ordered))
+
+    def lower(*pos, **arrays):
+        if pos:
+            return fn.lower(*pos)
+        return fn.lower(*(arrays[k] for k in ordered))
+
+    call.lower = lower
+    call.in_specs = in_specs
+    call.ordered = list(ordered)
+    return call
+
+
+def build_engine_fn(
+    mesh,
+    axes,
+    store: OperandStore,
+    schedule: ShiftSchedule,
+    *,
+    count_dtype=jnp.int32,
+    reduction: Optional[Reduction] = None,
+):
+    """Generate the jitted SPMD counting function for one composition.
+
+    Returns ``call(**device_arrays)`` (also accepts positional arrays in
+    ``call.ordered`` order) yielding the global count scalar, or
+    per-device counts with ``Reduction(global_sum=False)``.
+    """
+    reduction = reduction or Reduction()
+    ordered = list(store.names)
+    specs = store.in_specs(axes)
+    ctx = _Ctx(axes)
+
+    def spmd(*args):
+        local = store.localize(dict(zip(ordered, args)), axes)
+        carry0, body, nsteps = schedule.make_scan(store, local, ctx)
+        _, per_step = jax.lax.scan(body, carry0, jnp.arange(nsteps))
+        total = jnp.sum(per_step, dtype=count_dtype)
+        return reduction.apply(total, axes)
+
+    fn = jax.jit(
+        compat.shard_map(
+            spmd,
+            mesh=mesh,
+            in_specs=tuple(specs[k] for k in ordered),
+            out_specs=reduction.out_specs(axes),
+            check_vma=False,
+        )
+    )
+    return _make_call(fn, ordered, specs)
+
+
+def build_engine_stepper(
+    mesh,
+    axes,
+    store: OperandStore,
+    schedule: ShiftSchedule,
+):
+    """One-schedule-step-at-a-time variant for fault-tolerant runs.
+
+    Reuses the exact scan body of ``schedule`` but executes a single step
+    per call with the carry held by the *host* as explicit arrays, so the
+    host loop owns the shift index and can checkpoint state between
+    shifts (a restarted job resumes mid-loop).
+
+    Requires a store whose payload is identity-structured (raw arrays,
+    e.g. ``CSRStore(use_blob=False)``) so checkpointed state round-trips
+    exactly.  Returns ``one_shift(state, statics) -> state`` where
+    ``state = (*operand_arrays, acc)`` and ``statics`` maps the store's
+    static names.
+    """
+    ordered = list(store.names)
+    specs = store.in_specs(axes)
+    ctx = _Ctx(axes)
+    n_op = len(store.operand_names)
+    op_spec = specs[store.operand_names[0]]
+
+    def spmd(*args):
+        named = dict(zip(ordered, args[:-1]))
+        acc = _squeeze(args[-1], store.lead(store.operand_names[0], axes))
+        local = store.localize(named, axes)
+        carry0, body, _ = schedule.make_scan(store, local, ctx)
+        carry_next, c = body(carry0, jnp.zeros((), jnp.int32))
+        leaves = jax.tree.flatten(carry_next)[0]
+        assert len(leaves) == n_op, (
+            "stepper requires an identity-structured payload "
+            "(e.g. CSRStore(use_blob=False))"
+        )
+        lead = store.lead(store.operand_names[0], axes)
+        one = lambda a: a.reshape((1,) * lead + a.shape)
+        return tuple(one(x) for x in leaves) + (one(acc + c),)
+
+    fn = jax.jit(
+        compat.shard_map(
+            spmd,
+            mesh=mesh,
+            in_specs=tuple(specs[k] for k in ordered) + (op_spec,),
+            out_specs=(op_spec,) * (n_op + 1),
+            check_vma=False,
+        )
+    )
+
+    def one_shift(state, statics):
+        *operands, acc = state
+        args = list(operands) + [statics[k] for k in store.static_names] + [acc]
+        return fn(*args)
+
+    return one_shift

@@ -17,13 +17,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from . import count as count_mod
-from .blob import blob_layout, pack_blob, unpack_blob
 from .graph import Graph
 
 INT = np.int32
@@ -136,6 +132,7 @@ def build_oned_fn(
     mesh,
     *,
     axis: str = None,
+    method: str = "search",
     count_dtype=jnp.int32,
     probe_shorter: bool = True,
 ):
@@ -144,64 +141,35 @@ def build_oned_fn(
     For multi-axis meshes the ring runs over the *last* axis only if it
     covers all devices; otherwise callers should pass a flat 1D mesh (the
     baseline is evaluated on its own flat mesh — it exists for comparison,
-    not production).
+    not production).  Thin engine configuration: RingSchedule ×
+    OneDCSRStore × kernel.
     """
+    from . import engine
+    from .engine import (
+        OneDCSRStore,
+        RingAxes,
+        RingSchedule,
+        make_csr_kernel,
+    )
+
     p = plan.p
     if axis is None:
         sizes = {a: mesh.shape[a] for a in mesh.axis_names}
         flat = [a for a in mesh.axis_names if sizes[a] == p]
         assert flat, f"no single mesh axis of size {p}; pass a flat mesh"
         axis = flat[0]
-    sentinel = plan.n + 1
 
-    def spmd(indptr, indices, t_i, t_j, t_cnt):
-        sq = lambda a: a.reshape(a.shape[1:])
-        own_ptr, own_idx = sq(indptr), sq(indices)
-        ti, tj, cnt = sq(t_i), sq(t_j), sq(t_cnt)
-        d = jax.lax.axis_index(axis)
-        layout, _ = blob_layout([own_ptr.shape, own_idx.shape])
-
-        def step(carry, t):
-            blob = carry
-            nxt = jax.lax.ppermute(
-                blob, axis, perm=[(s, (s - 1) % p) for s in range(p)]
-            )
-            b_ptr, b_idx = unpack_blob(blob, layout)
-            o = (d + t) % p
-            cc = count_mod.count_pair_search(
-                own_ptr,
-                own_idx,
-                b_ptr,
-                b_idx,
-                jnp.take(ti, o, axis=0),
-                jnp.take(tj, o, axis=0),
-                jnp.take(cnt, o, axis=0),
-                dpad=plan.dmax,
-                chunk=plan.chunk,
-                probe_shorter=probe_shorter,
-                count_dtype=count_dtype,
-                sentinel=sentinel,
-            )
-            return nxt, cc
-
-        _, per = jax.lax.scan(
-            step, pack_blob([own_ptr, own_idx]), jnp.arange(p)
-        )
-        return jax.lax.psum(jnp.sum(per, dtype=count_dtype), axis)
-
-    fn = jax.jit(
-        jax.shard_map(
-            spmd,
-            mesh=mesh,
-            in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
-            out_specs=P(),
-            check_vma=False,
-        )
+    axes = RingAxes(axis)
+    kernel = make_csr_kernel(
+        method,
+        dpad=plan.dmax,
+        chunk=plan.chunk,
+        probe_shorter=probe_shorter,
+        count_dtype=count_dtype,
+        sentinel=plan.n + 1,
     )
-    ordered = ["indptr", "indices", "t_i", "t_j", "t_cnt"]
-
-    def call(**arrays):
-        return fn(*(arrays[k] for k in ordered))
-
-    call.lower = lambda **arrays: fn.lower(*(arrays[k] for k in ordered))
-    return call
+    store = OneDCSRStore(kernel, p=p)
+    schedule = RingSchedule(p=p, axes=axes)
+    return engine.build_engine_fn(
+        mesh, axes, store, schedule, count_dtype=count_dtype
+    )

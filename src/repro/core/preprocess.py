@@ -86,8 +86,10 @@ def distributed_degree_rank(degrees, axis_name: str):
     import jax
     import jax.numpy as jnp
 
+    from .. import compat
+
     degrees = jnp.asarray(degrees)
-    p = jax.lax.axis_size(axis_name)
+    p = compat.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     # static bucket bound: a vertex degree is < n = chunk * p
     nbuckets = degrees.shape[0] * p + 1

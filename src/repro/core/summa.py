@@ -25,12 +25,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from . import count as count_mod
 from .decomp import cyclic_blocks
 from .graph import Graph
 
@@ -153,78 +150,34 @@ def build_summa_fn(
     *,
     row_axis: str = "data",
     col_axis: str = "model",
+    method: str = "search",
     probe_shorter: bool = True,
     count_dtype=jnp.int32,
     reduce_global: bool = True,
 ):
-    r, c = plan.r, plan.c
-    sentinel = plan.nb_c + 1
-
-    def spmd(a_indptr, a_indices, b_indptr, b_indices, m_ti, m_tj, m_cnt):
-        sq = lambda a: a.reshape(a.shape[2:])
-        a_ptr, a_idx = sq(a_indptr), sq(a_indices)
-        b_ptr, b_idx = sq(b_indptr), sq(b_indices)  # (npan, ...)
-        ti, tj, cnt = sq(m_ti), sq(m_tj), sq(m_cnt)
-        my_col = jax.lax.axis_index(col_axis)
-        my_row = jax.lax.axis_index(row_axis)
-
-        def step(acc, z):
-            # one-hot broadcast of the A panel along the grid row
-            owna = (my_col == z % c).astype(a_ptr.dtype)
-            pa_ptr = jax.lax.psum(a_ptr * owna, col_axis)
-            pa_idx = jax.lax.psum(a_idx * owna, col_axis)
-            # one-hot broadcast of the B panel along the grid column
-            slot = z // r
-            ownb = (my_row == z % r).astype(b_ptr.dtype)
-            pb_ptr = jax.lax.psum(b_ptr[slot] * ownb, row_axis)
-            pb_idx = jax.lax.psum(b_idx[slot] * ownb, row_axis)
-            cc = count_mod.count_pair_search(
-                pa_ptr,
-                pa_idx,
-                pb_ptr,
-                pb_idx,
-                ti,
-                tj,
-                cnt,
-                dpad=plan.dmax,
-                chunk=plan.chunk,
-                probe_shorter=probe_shorter,
-                count_dtype=count_dtype,
-                sentinel=sentinel,
-            )
-            return acc + cc, None
-
-        total, _ = jax.lax.scan(
-            step, jnp.zeros((), count_dtype), jnp.arange(c)
-        )
-        if reduce_global:
-            total = jax.lax.psum(total, row_axis)
-            total = jax.lax.psum(total, col_axis)
-            return total
-        return total.reshape((1, 1))
-
-    spec = P(row_axis, col_axis)
-    fn = jax.jit(
-        jax.shard_map(
-            spmd,
-            mesh=mesh,
-            in_specs=(spec,) * 7,
-            out_specs=P() if reduce_global else spec,
-            check_vma=False,
-        )
+    """Thin engine configuration: SummaSchedule × SummaCSRStore × kernel."""
+    from . import engine
+    from .engine import (
+        GridAxes,
+        Reduction,
+        SummaCSRStore,
+        SummaSchedule,
+        make_csr_kernel,
     )
-    ordered = [
-        "a_indptr",
-        "a_indices",
-        "b_indptr",
-        "b_indices",
-        "m_ti",
-        "m_tj",
-        "m_cnt",
-    ]
 
-    def call(**arrays):
-        return fn(*(arrays[k] for k in ordered))
-
-    call.lower = lambda **arrays: fn.lower(*(arrays[k] for k in ordered))
-    return call
+    axes = GridAxes(row_axis, col_axis)
+    kernel = make_csr_kernel(
+        method,
+        dpad=plan.dmax,
+        chunk=plan.chunk,
+        probe_shorter=probe_shorter,
+        count_dtype=count_dtype,
+        sentinel=plan.nb_c + 1,
+    )
+    store = SummaCSRStore(kernel, r=plan.r, c=plan.c)
+    schedule = SummaSchedule(r=plan.r, c=plan.c, axes=axes)
+    return engine.build_engine_fn(
+        mesh, axes, store, schedule,
+        count_dtype=count_dtype,
+        reduction=Reduction(global_sum=reduce_global),
+    )

@@ -60,8 +60,10 @@ def _kernel_popcount(triples_ref, a_ref, b_ref, m_ref, out_ref):
     inter = jax.lax.population_count(a[:, None, :] & b[None, :, :])
     counts = jnp.sum(inter.astype(jnp.int32), axis=-1)  # (T, T)
     mask = unpack_bits_tile(m, jnp.int32)  # (T, T) over (i, j)
-    total = jnp.sum(counts * mask)
-    out_ref[0] = jnp.where(valid, total, 0)
+    # dtype pinned: under x64, sum() would promote to int64 and the swap
+    # into the int32 out_ref would fail
+    total = jnp.sum(counts * mask, dtype=jnp.int32)
+    out_ref[0] = jnp.where(valid, total, jnp.int32(0))
 
 
 def _kernel_mxu(triples_ref, a_ref, b_ref, m_ref, out_ref):
@@ -77,7 +79,7 @@ def _kernel_mxu(triples_ref, a_ref, b_ref, m_ref, out_ref):
     )  # (T, T) exact integers (<= 128 per entry)
     mask = unpack_bits_tile(m_ref[0], jnp.float32)
     total = jnp.sum(counts * mask).astype(jnp.int32)
-    out_ref[0] = jnp.where(valid, total, 0)
+    out_ref[0] = jnp.where(valid, total, jnp.int32(0))
 
 
 @functools.partial(

@@ -158,9 +158,11 @@ def _run_tc_cell(cfg, sched: str, mesh, chips: int, label: str) -> dict:
     import jax
     import jax.numpy as jnp
 
-    from ..core.cannon import build_cannon_fn, cannon_in_specs
+    from ..core.api import get_schedule
     from ..core.plan import analytic_plan
     from .roofline import roofline_from_compiled
+
+    build_cannon_fn = get_schedule("cannon").build_fn
 
     q = 16
     plan = analytic_plan(
@@ -203,8 +205,10 @@ def _run_tc_cell(cfg, sched: str, mesh, chips: int, label: str) -> dict:
         lowered = fn.lower(**st)
         nshifts = q // npods
     elif sched == "oned":
-        from ..core.onedim import OneDPlan, build_oned_fn
+        from ..core.onedim import OneDPlan
         import numpy as np
+
+        build_oned_fn = get_schedule("oned").build_fn
 
         p = chips
         nb = -(-cfg.n_vertices // p)
@@ -225,9 +229,9 @@ def _run_tc_cell(cfg, sched: str, mesh, chips: int, label: str) -> dict:
             t_j=np.zeros((1,), np.int32),
             t_cnt=np.zeros((1,), np.int32),
         )
-        flat_mesh = jax.make_mesh(
-            (p,), ("flat",), axis_types=(jax.sharding.AxisType.Auto,)
-        )
+        from .. import compat
+
+        flat_mesh = compat.make_mesh((p,), ("flat",))
         fn = build_oned_fn(oplan, flat_mesh)
         structs = {
             "indptr": jax.ShapeDtypeStruct((p, nb + 1), jnp.int32),

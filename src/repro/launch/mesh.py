@@ -2,11 +2,12 @@
 
 A function (not a module-level constant) so importing this module never
 touches jax device state.  Single pod: 16x16 = 256 chips (v5e pod);
-multi-pod: 2x16x16 = 512 chips with a leading "pod" axis.
+multi-pod: 2x16x16 = 512 chips with a leading "pod" axis.  Mesh creation
+goes through :mod:`repro.compat` so it works on jax 0.4.x and >= 0.5.
 """
 from __future__ import annotations
 
-import jax
+from .. import compat
 
 __all__ = ["make_production_mesh", "make_mesh_for"]
 
@@ -14,14 +15,8 @@ __all__ = ["make_production_mesh", "make_mesh_for"]
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape)
-    )
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh_for(shape, axes):
-    return jax.make_mesh(
-        tuple(shape),
-        tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(shape),
-    )
+    return compat.make_mesh(tuple(shape), tuple(axes))

@@ -411,7 +411,9 @@ def roofline_from_compiled(
     cost_analysis counts while bodies once — see hlo_cost docstring); the
     single-iteration XLA numbers are kept in the report for cross-checks.
     """
-    ca = compiled.cost_analysis()
+    from .. import compat
+
+    ca = compat.cost_analysis(compiled)
     cost = hlo_cost(compiled.as_text())
     flops = max(cost["flops"], float(ca.get("flops", 0.0))) * loop_multiplier
     byts = max(

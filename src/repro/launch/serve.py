@@ -25,10 +25,9 @@ def main():
 
     cfg = get_config(args.arch)
     assert cfg.family == "lm"
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from .. import compat
+
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     params = lm_init(jax.random.key(0), cfg)
     decode, _ = build_lm_decode_step(cfg, mesh)
     cache = init_kv_cache(cfg, args.batch, args.max_len)

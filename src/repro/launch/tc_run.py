@@ -42,13 +42,21 @@ def main():
     import numpy as np
 
     from ..core import (
+        available_schedules,
         count_triangles,
         erdos_renyi,
+        get_schedule,
         named_graph,
         preprocess,
         rmat,
         triangle_count_oracle,
     )
+
+    if args.schedule not in available_schedules():
+        raise SystemExit(
+            f"unknown --schedule {args.schedule!r}; "
+            f"registered: {available_schedules()}"
+        )
 
     kind, _, spec = args.graph.partition(":")
     if kind == "rmat":
@@ -78,11 +86,12 @@ def main():
             # §Perf H1a+H1b: bucketed probes + compressed shift blobs
             import jax.numpy as jnp
 
+            from .. import compat
             from ..core import build_plan
             from ..core.api import make_grid_mesh
-            from ..core.cannon import build_cannon_fn
             from ..core.plan import bucketize_plan
 
+            build_cannon_fn = get_schedule("cannon").build_fn
             g2, _ = preprocess(g)
             t1o = time.perf_counter()
             bplan = bucketize_plan(
@@ -92,8 +101,7 @@ def main():
                 if args.pods == 1 else make_grid_mesh(args.grid, npods=args.pods)
             fn = build_cannon_fn(
                 bplan, mesh, method="search2", compress_lengths=True,
-                count_dtype=jnp.int64 if jax.config.read("jax_enable_x64")
-                else jnp.int32,
+                count_dtype=compat.default_count_dtype(),
             )
             total = int(
                 fn(**{k: jnp.asarray(v) for k, v in bplan.device_arrays().items()})

@@ -31,9 +31,10 @@ def main():
     from ..data.pipeline import RecsysPipeline, TokenPipeline
 
     cfg = get_config(args.arch)
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    from .. import compat
+
+    mesh = compat.make_mesh(
+        (1, 1), ("data", "model")
     ) if len(jax.devices()) == 1 else None
     if mesh is None:
         from .mesh import make_mesh_for

@@ -13,10 +13,9 @@ MESH = None
 def mesh11():
     global MESH
     if MESH is None:
-        MESH = jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
+        from repro import compat
+
+        MESH = compat.make_mesh((1, 1), ("data", "model"))
     return MESH
 
 

@@ -3,7 +3,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import build_plan, preprocess, rmat, triangle_count_oracle
 from repro.core.api import make_grid_mesh
@@ -87,10 +86,9 @@ def test_attention_seq_parallel_specs_numerically_equal():
     from repro.models.steps import _inject_attn_specs
 
     cfg = get_config("qwen2-0.5b-smoke")
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro import compat
+
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     cfg2 = _inject_attn_specs(cfg, mesh)
     params = lm_init(jax.random.key(0), cfg)
     toks = jnp.ones((2, 32), jnp.int32)
@@ -135,16 +133,5 @@ def test_causal_attention_nq_multiple():
     np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-5, atol=1e-5)
 
 
-@given(st.integers(0, 2**31 - 1), st.integers(2, 6))
-@settings(max_examples=10, deadline=None)
-def test_bucketed_property(seed, dsmall):
-    from repro.core import erdos_renyi
-
-    g = erdos_renyi(80, 6.0, seed=seed)
-    exp = triangle_count_oracle(g)
-    g2, _ = preprocess(g)
-    plan = bucketize_plan(build_plan(g2, 1), d_small=dsmall)
-    mesh = make_grid_mesh(1)
-    fn = build_cannon_fn(plan, mesh, method="search2")
-    got = int(fn(**{k: jnp.asarray(v) for k, v in plan.device_arrays().items()}))
-    assert got == exp
+# NOTE: the hypothesis-based bucketed-probe property test lives in
+# test_property.py so this module stays collectible without hypothesis.

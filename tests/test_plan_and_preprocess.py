@@ -133,9 +133,10 @@ g = rmat(6, 6, seed=9)
 deg = g.degrees()
 p = 4
 n = g.n
-mesh = jax.make_mesh((p,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro import compat
+mesh = compat.make_mesh((p,), ("x",))
 chunk = n // p
-fn = jax.jit(jax.shard_map(
+fn = jax.jit(compat.shard_map(
     lambda d: distributed_degree_rank(d, "x"),
     mesh=mesh, in_specs=P("x"), out_specs=P("x"), check_vma=False))
 ranks = np.asarray(fn(jnp.asarray(deg, dtype=jnp.int32)))

@@ -1,7 +1,9 @@
 """Property-based tests (hypothesis) for system invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     Graph,
@@ -86,3 +88,26 @@ def test_degree_order_is_permutation(n, seed):
     g = erdos_renyi(n, min(4.0, n / 2), seed=seed)
     perm = degree_order(g)
     assert np.array_equal(np.sort(perm), np.arange(n))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(min_value=2, max_value=6))
+@settings(max_examples=10, deadline=None)
+def test_bucketed_property(seed, dsmall):
+    """§Perf H1a bucketed probes agree with the oracle for any bucket cut
+    (moved here from test_perf_paths.py: it is the only hypothesis-based
+    perf test, and this module already skips without hypothesis)."""
+    import jax.numpy as jnp
+
+    from repro.core import erdos_renyi
+    from repro.core.api import make_grid_mesh
+    from repro.core.cannon import build_cannon_fn
+    from repro.core.plan import bucketize_plan
+
+    g = erdos_renyi(80, 6.0, seed=seed)
+    exp = triangle_count_oracle(g)
+    g2, _ = preprocess(g)
+    plan = bucketize_plan(build_plan(g2, 1), d_small=dsmall)
+    mesh = make_grid_mesh(1)
+    fn = build_cannon_fn(plan, mesh, method="search2")
+    got = int(fn(**{k: jnp.asarray(v) for k, v in plan.device_arrays().items()}))
+    assert got == exp

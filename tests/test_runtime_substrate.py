@@ -131,15 +131,16 @@ import jax, numpy as np
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.optim.compress import compressed_psum
-mesh = jax.make_mesh((4,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro import compat
+mesh = compat.make_mesh((4,), ("d",))
 x = jnp.arange(64, dtype=jnp.float32).reshape(4, 16) * 0.01
 def f(x):
     g = {"w": x.reshape(16)}
     out = compressed_psum(g, "d")
     ref = jax.tree.map(lambda v: jax.lax.psum(v, "d"), g)
     return out["w"], ref["w"]
-fn = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P(),
-                           check_vma=False))
+fn = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P(),
+                              check_vma=False))
 got, ref = fn(x)
 rel = float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref))
 assert rel < 0.02, rel

@@ -139,9 +139,8 @@ r = count_triangles(g, q=2, npods=2)
 
 def test_distributed_summa_rect(distributed_runner):
     body = """
-import jax
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro import compat
+mesh = compat.make_mesh((2, 4), ("data", "model"))
 r = count_triangles(g, mesh=mesh, schedule="summa")
 assert r.triangles == exp, (r.triangles, exp)
 """
