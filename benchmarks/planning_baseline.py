@@ -1,0 +1,154 @@
+"""Planning benchmark baseline: cold plan vs warm cache, batched vs loop.
+
+Records ``BENCH_planning.json``:
+
+* ``planning`` — per-RMAT-scale (12-16) cold pipeline plan wall time vs
+  warm (cache-hit) re-plan, and the speedup (acceptance: warm >= 10x);
+* ``batch`` — a 4-graph mixed batch through ``count_triangles_many``
+  (one compiled call, then a warm cached round) vs the per-graph
+  ``count_triangles`` loop, with exact-match verification of the counts
+  and the measured batched-padding overhead (DESIGN.md §10.5).
+
+    python -m benchmarks.planning_baseline [--smoke] [--out BENCH_planning.json]
+
+``--smoke`` runs scale 12 only and *fails* (exit 1) if the warm-cache
+speedup drops below 10x or the batched counts diverge — the CI guard
+against planning regressions.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+GRID = 3  # planning grid (q x q blocks; planning is host-side, no devices)
+SCALES_FULL = [12, 13, 14, 15, 16]
+SCALES_SMOKE = [12]
+WARM_REPS = 5
+MIN_WARM_SPEEDUP = 10.0
+
+
+def _time_planning(scale: int) -> dict:
+    from repro.core import rmat
+    from repro.pipeline import PlanCache, plan_cannon
+
+    g = rmat(scale)
+    cache = PlanCache()
+    t0 = time.perf_counter()
+    art = plan_cannon(g, GRID, cache=cache)
+    cold = time.perf_counter() - t0
+
+    warm = float("inf")
+    for _ in range(WARM_REPS):
+        t0 = time.perf_counter()
+        hit = plan_cannon(g, GRID, cache=cache)
+        warm = min(warm, time.perf_counter() - t0)
+    assert hit is art and hit.cache_hit
+    return dict(
+        n=g.n,
+        m=g.m,
+        cold_seconds=round(cold, 6),
+        warm_seconds=round(warm, 6),
+        warm_speedup=round(cold / max(warm, 1e-9), 1),
+        stage_seconds={k: round(v, 6) for k, v in art.stage_seconds.items()},
+    )
+
+
+def _time_batch() -> dict:
+    from repro.core import (
+        count_triangles,
+        named_graph,
+        rmat,
+        triangle_count_oracle,
+    )
+    from repro.pipeline import PlanCache, count_triangles_many
+
+    graphs = [rmat(10, seed=s) for s in range(3)] + [named_graph("karate")]
+    expected = [triangle_count_oracle(g) for g in graphs]
+
+    t0 = time.perf_counter()
+    loop = [
+        count_triangles(g, q=1, cache=PlanCache(maxsize=0)).triangles
+        for g in graphs
+    ]
+    loop_seconds = time.perf_counter() - t0
+
+    cache = PlanCache()
+    t0 = time.perf_counter()
+    res = count_triangles_many(graphs, q=1, cache=cache)
+    batched_seconds = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    warm = count_triangles_many(graphs, q=1, cache=cache)
+    warm_seconds = time.perf_counter() - t0
+
+    matches = bool(res.triangles == loop == expected and
+                   warm.triangles == expected)
+    return dict(
+        batch=len(graphs),
+        graphs=[g.name for g in graphs],
+        triangles=res.triangles,
+        matches_individual=matches,
+        loop_seconds=round(loop_seconds, 4),
+        batched_seconds=round(batched_seconds, 4),
+        batched_warm_seconds=round(warm_seconds, 4),
+        batched_speedup_vs_loop=round(
+            loop_seconds / max(batched_seconds, 1e-9), 2
+        ),
+        warm_cache_hit=bool(warm.cache_hit),
+        padding_overhead=round(res.padding_overhead, 4),
+    )
+
+
+def run(smoke: bool = False, out: str = "BENCH_planning.json") -> dict:
+    scales = SCALES_SMOKE if smoke else SCALES_FULL
+    report = {
+        "grid": GRID,
+        "unix_time": time.time(),
+        "smoke": smoke,
+        "planning": {},
+    }
+    for scale in scales:
+        cell = _time_planning(scale)
+        report["planning"][str(scale)] = cell
+        print(
+            f"planning/rmat{scale},cold={cell['cold_seconds']*1e3:.1f}ms,"
+            f"warm={cell['warm_seconds']*1e6:.0f}us,"
+            f"speedup={cell['warm_speedup']}x"
+        )
+    report["batch"] = _time_batch()
+    print(
+        f"batch/loop={report['batch']['loop_seconds']}s,"
+        f"batched={report['batch']['batched_seconds']}s,"
+        f"warm={report['batch']['batched_warm_seconds']}s,"
+        f"matches={report['batch']['matches_individual']}"
+    )
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"# wrote {out}")
+
+    failures = []
+    for scale, cell in report["planning"].items():
+        if cell["warm_speedup"] < MIN_WARM_SPEEDUP:
+            failures.append(
+                f"warm-cache speedup at rmat{scale} is "
+                f"{cell['warm_speedup']}x < {MIN_WARM_SPEEDUP}x"
+            )
+    if not report["batch"]["matches_individual"]:
+        failures.append("batched counts diverge from per-graph counts")
+    if failures:
+        for msg in failures:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        raise SystemExit(1)
+    return report
+
+
+def main(smoke: bool = False, out: str = "BENCH_planning.json"):
+    return run(smoke=smoke, out=out)
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    out = "BENCH_planning.json"
+    if "--out" in argv:
+        out = argv[argv.index("--out") + 1]
+    main(smoke="--smoke" in argv, out=out)

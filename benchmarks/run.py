@@ -14,6 +14,7 @@ def main() -> None:
         fig2_oprate,
         fig3_commfraction,
         kernels,
+        planning_baseline,
         table2_scaling,
         table3_imbalance,
         table4_taskgrowth,
@@ -31,6 +32,8 @@ def main() -> None:
     kernels.main(quick=quick)
     # per-schedule wall-time baseline -> BENCH_engine.json
     engine_baseline.main(quick=quick)
+    # cold/warm planning + batched-vs-loop -> BENCH_planning.json
+    planning_baseline.main(smoke=quick)
 
 
 if __name__ == "__main__":

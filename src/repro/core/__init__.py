@@ -12,11 +12,12 @@ from .api import (  # noqa: F401
     TCResult,
     available_schedules,
     count_triangles,
+    count_triangles_many,
     get_schedule,
     make_grid_mesh,
     register_schedule,
 )
 from .graph import Graph, triangle_count_oracle  # noqa: F401
-from .generators import erdos_renyi, named_graph, rmat  # noqa: F401
-from .plan import TCPlan, analytic_plan, build_plan  # noqa: F401
+from .generators import erdos_renyi, graph_from_spec, named_graph, rmat  # noqa: F401
+from .plan import TCPlan, analytic_plan, as_plan, build_plan  # noqa: F401
 from .preprocess import degree_order, preprocess  # noqa: F401

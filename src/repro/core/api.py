@@ -1,15 +1,23 @@
 """Top-level triangle-counting API.
 
 ``count_triangles(graph, mesh=...)`` runs the full pipeline of the paper:
-degree-order preprocessing -> 2D-cyclic plan -> schedule -> global count,
-on whatever mesh is supplied (including a 1x1 mesh for single-device use).
+host planning (ingest → relabel → decompose → pack → stage, cached —
+DESIGN.md §3) -> schedule -> global count, on whatever mesh is supplied
+(including a 1x1 mesh for single-device use).  The bundled runners plan
+through :mod:`repro.pipeline`, so repeated counts of an already-seen
+graph hit the content-addressed plan cache and skip planning, staging,
+and retracing entirely; ``count_triangles_many`` batches several graphs
+into one compiled engine call.
 
 Schedules resolve via a registry: :func:`register_schedule` makes a new
 schedule one registration away (DESIGN.md §6) — the bundled ones are
 ``cannon`` (the paper), ``summa`` (rectangular/elastic), and ``oned``
 (the 1D baseline the paper beats).  The per-block count path is selected
 with ``method`` (any registered CSR kernel, plus the ``dense`` and
-``tile`` operand-store paths on the Cannon schedule).
+``tile`` operand-store paths on the Cannon schedule).  Runners receive
+the *raw* graph plus the relabel options on the :class:`RunContext`
+(``reorder``/``cyclic_p``) — relabeling happens inside the pipeline so
+the cache can skip it.
 """
 from __future__ import annotations
 
@@ -23,12 +31,12 @@ import numpy as np
 from .. import compat
 from . import cannon as cannon_mod
 from .graph import Graph
-from .plan import TCPlan, build_plan
-from .preprocess import preprocess
+from .plan import TCPlan
 
 __all__ = [
     "TCResult",
     "count_triangles",
+    "count_triangles_many",
     "make_grid_mesh",
     "register_schedule",
     "get_schedule",
@@ -71,11 +79,19 @@ class ScheduleSpec:
     :class:`RunContext` of the current ``count_triangles`` call.
     ``build_fn`` exposes the raw engine-fn builder for dry runs /
     lowering-only callers (benchmarks, roofline).
+
+    ``plans_itself`` marks runners that route the *raw* graph through
+    :mod:`repro.pipeline` themselves (reading ``ctx.reorder`` /
+    ``ctx.cyclic_p`` / ``ctx.cache``), which is what lets cache hits
+    skip the relabel too.  Runners registered without it keep the
+    pre-pipeline contract: ``count_triangles`` relabels the graph
+    before dispatch and hands them the preprocessed graph.
     """
 
     name: str
     runner: Callable
     build_fn: Optional[Callable] = None
+    plans_itself: bool = False
 
 
 @dataclasses.dataclass
@@ -87,6 +103,12 @@ class RunContext:
     probe_shorter: bool
     count_dtype: object
     plan: Optional[TCPlan] = None
+    # pipeline options: runners plan the *raw* graph through
+    # repro.pipeline with these, so cache hits skip the relabel too
+    reorder: bool = True
+    cyclic_p: Optional[int] = None
+    cache: Optional[object] = None  # PlanCache; None -> default_cache()
+    artifact: Optional[object] = None  # PlanArtifact set by the runner
     # set via mark_counting(): host-side planning/staging before this
     # point is reported as preprocess time, not count time
     counting_started_at: Optional[float] = None
@@ -94,16 +116,35 @@ class RunContext:
     def mark_counting(self) -> None:
         self.counting_started_at = time.perf_counter()
 
+    def memo(self, key, build: Callable):
+        """Per-artifact build-once helper (falls through when the runner
+        has no artifact, e.g. a caller-supplied plan)."""
+        if self.artifact is None:
+            return build()
+        return self.artifact.memo(key, build)
+
 
 _SCHEDULES: Dict[str, ScheduleSpec] = {}
 
 
 def register_schedule(
-    name: str, runner: Callable, *, build_fn: Optional[Callable] = None
+    name: str,
+    runner: Callable,
+    *,
+    build_fn: Optional[Callable] = None,
+    plans_itself: bool = False,
 ) -> None:
     """Register a schedule; ``count_triangles(..., schedule=name)`` then
-    resolves to ``runner``.  Overwrites any previous registration."""
-    _SCHEDULES[name] = ScheduleSpec(name=name, runner=runner, build_fn=build_fn)
+    resolves to ``runner``.  Overwrites any previous registration.
+
+    Pass ``plans_itself=True`` only if the runner plans the raw graph
+    through :mod:`repro.pipeline` (honoring ``ctx.reorder`` /
+    ``ctx.cyclic_p``); otherwise it receives the already-relabeled
+    graph, as before the pipeline existed.
+    """
+    _SCHEDULES[name] = ScheduleSpec(
+        name=name, runner=runner, build_fn=build_fn, plans_itself=plans_itself
+    )
 
 
 def get_schedule(name: str) -> ScheduleSpec:
@@ -123,93 +164,150 @@ def available_schedules():
 # bundled schedule runners
 # ----------------------------------------------------------------------
 def _run_cannon(graph: Graph, mesh, ctx: RunContext):
-    plan = ctx.plan
-    if plan is None:
-        plan = build_plan(graph, ctx.q, skew=True, chunk=ctx.chunk)
+    plan = ctx.plan  # a caller-supplied plan is already relabeled and
+    if plan is None:  # wins over the pipeline (reorder/cyclic_p unused)
+        from ..pipeline import plan_cannon
+
+        ctx.artifact = plan_cannon(
+            graph,
+            ctx.q,
+            chunk=ctx.chunk,
+            reorder=ctx.reorder,
+            cyclic_p=ctx.cyclic_p,
+            # blocks are only consumed by the tile join (and search2's
+            # bucketizer, which the planner forces); skipping them keeps
+            # cached artifacts lean on the common CSR paths
+            keep_blocks=(ctx.method == "tile"),
+            bucketize=(ctx.method == "search2"),
+            cache=ctx.cache,
+        )
+        plan = ctx.artifact.plan
 
     if ctx.method == "dense":
         from .cannon import build_cannon_dense_fn
 
-        dense = plan.dense_blocks()
+        dense = ctx.memo("dense_blocks", plan.dense_blocks)
+        staged = ctx.memo(
+            "dense_staged",
+            lambda: {k: jnp.asarray(v) for k, v in dense.items()},
+        )
         ctx.mark_counting()
-        fn = build_cannon_dense_fn(plan, mesh)
-        total = int(fn(**{k: jnp.asarray(v) for k, v in dense.items()}))
-        return total, plan
+        fn = ctx.memo(
+            ("dense_fn", mesh), lambda: build_cannon_dense_fn(plan, mesh)
+        )
+        return int(fn(**staged)), plan
     if ctx.method == "tile":
         import jax
 
         from .cannon import build_cannon_tile_fn
         from .tiles import build_tile_plan
 
-        tp = build_tile_plan(plan)
-        ctx.mark_counting()
+        tp = ctx.memo("tile_plan", lambda: build_tile_plan(plan))
+        staged = ctx.memo(
+            "tile_staged",
+            lambda: {k: jnp.asarray(v) for k, v in tp.device_arrays().items()},
+        )
         # interpret mode only off-TPU: Mosaic lowering needs real hardware,
         # and silently interpreting on TPU would be orders of magnitude slow
-        fn = build_cannon_tile_fn(
-            plan, tp, mesh,
-            interpret=jax.default_backend() != "tpu",
-            count_dtype=ctx.count_dtype,
+        interpret = jax.default_backend() != "tpu"
+        ctx.mark_counting()
+        fn = ctx.memo(
+            ("tile_fn", mesh, interpret, str(ctx.count_dtype)),
+            lambda: build_cannon_tile_fn(
+                plan, tp, mesh, interpret=interpret,
+                count_dtype=ctx.count_dtype,
+            ),
         )
-        total = int(fn(**{k: jnp.asarray(v) for k, v in tp.device_arrays().items()}))
-        return total, plan
+        return int(fn(**staged)), plan
 
     if ctx.method == "search2" and not hasattr(plan, "n_long"):
         from .plan import bucketize_plan
 
         plan = bucketize_plan(plan)
 
-    arrays = plan.device_arrays()
     pod_axis = None
     if ctx.npods > 1:
-        arrays = cannon_mod.pod_stack_arrays(arrays, ctx.npods, plan.q)
         pod_axis = "pod"
+        staged = ctx.memo(
+            ("pod_staged", ctx.npods),
+            lambda: {
+                k: jnp.asarray(v)
+                for k, v in cannon_mod.pod_stack_arrays(
+                    plan.device_arrays(), ctx.npods, plan.q
+                ).items()
+            },
+        )
+    elif ctx.artifact is not None:
+        staged = ctx.artifact.staged()
+    else:
+        staged = {k: jnp.asarray(v) for k, v in plan.device_arrays().items()}
     ctx.mark_counting()
-    fn = cannon_mod.build_cannon_fn(
-        plan,
-        mesh,
-        pod_axis=pod_axis,
-        method=ctx.method,
-        probe_shorter=ctx.probe_shorter,
-        count_dtype=ctx.count_dtype,
+    fn = ctx.memo(
+        ("fn", mesh, ctx.method, ctx.probe_shorter, str(ctx.count_dtype),
+         pod_axis),
+        lambda: cannon_mod.build_cannon_fn(
+            plan,
+            mesh,
+            pod_axis=pod_axis,
+            method=ctx.method,
+            probe_shorter=ctx.probe_shorter,
+            count_dtype=ctx.count_dtype,
+        ),
     )
-    total = int(fn(**{k: jnp.asarray(v) for k, v in arrays.items()}))
-    return total, plan
+    return int(fn(**staged)), plan
 
 
 def _run_summa(graph: Graph, mesh, ctx: RunContext):
-    from .summa import build_summa_fn, build_summa_plan
+    from ..pipeline import plan_summa
+    from .summa import build_summa_fn
 
     names = list(mesh.axis_names)
     r, c = mesh.shape[names[-2]], mesh.shape[names[-1]]
-    splan = build_summa_plan(graph, r, c, chunk=ctx.chunk)
-    ctx.mark_counting()
-    fn = build_summa_fn(
-        splan,
-        mesh,
-        method=ctx.method,
-        probe_shorter=ctx.probe_shorter,
-        count_dtype=ctx.count_dtype,
+    ctx.artifact = plan_summa(
+        graph, r, c, chunk=ctx.chunk, reorder=ctx.reorder,
+        cyclic_p=ctx.cyclic_p, cache=ctx.cache,
     )
-    total = int(fn(**{k: jnp.asarray(v) for k, v in splan.device_arrays().items()}))
-    return total, splan
+    splan = ctx.artifact.plan
+    staged = ctx.artifact.staged()
+    ctx.mark_counting()
+    fn = ctx.memo(
+        ("fn", mesh, ctx.method, ctx.probe_shorter, str(ctx.count_dtype)),
+        lambda: build_summa_fn(
+            splan,
+            mesh,
+            method=ctx.method,
+            probe_shorter=ctx.probe_shorter,
+            count_dtype=ctx.count_dtype,
+        ),
+    )
+    return int(fn(**staged)), splan
 
 
 def _run_oned(graph: Graph, mesh, ctx: RunContext):
-    from .onedim import build_oned_fn, build_oned_plan
+    from ..pipeline import plan_oned
+    from .onedim import build_oned_fn
 
     p = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
     flat_mesh = compat.make_mesh((p,), ("flat",))
-    oplan = build_oned_plan(graph, p, chunk=ctx.chunk)
-    ctx.mark_counting()
-    fn = build_oned_fn(
-        oplan,
-        flat_mesh,
-        method=ctx.method,
-        probe_shorter=ctx.probe_shorter,
-        count_dtype=ctx.count_dtype,
+    ctx.artifact = plan_oned(
+        graph, p, chunk=ctx.chunk, reorder=ctx.reorder,
+        cyclic_p=ctx.cyclic_p, cache=ctx.cache,
     )
-    total = int(fn(**{k: jnp.asarray(v) for k, v in oplan.device_arrays().items()}))
-    return total, oplan
+    oplan = ctx.artifact.plan
+    staged = ctx.artifact.staged()
+    ctx.mark_counting()
+    fn = ctx.memo(
+        ("fn", flat_mesh, ctx.method, ctx.probe_shorter,
+         str(ctx.count_dtype)),
+        lambda: build_oned_fn(
+            oplan,
+            flat_mesh,
+            method=ctx.method,
+            probe_shorter=ctx.probe_shorter,
+            count_dtype=ctx.count_dtype,
+        ),
+    )
+    return int(fn(**staged)), oplan
 
 
 def _register_bundled():
@@ -217,9 +315,15 @@ def _register_bundled():
     from .onedim import build_oned_fn
     from .summa import build_summa_fn
 
-    register_schedule("cannon", _run_cannon, build_fn=build_cannon_fn)
-    register_schedule("summa", _run_summa, build_fn=build_summa_fn)
-    register_schedule("oned", _run_oned, build_fn=build_oned_fn)
+    register_schedule(
+        "cannon", _run_cannon, build_fn=build_cannon_fn, plans_itself=True
+    )
+    register_schedule(
+        "summa", _run_summa, build_fn=build_summa_fn, plans_itself=True
+    )
+    register_schedule(
+        "oned", _run_oned, build_fn=build_oned_fn, plans_itself=True
+    )
 
 
 _register_bundled()
@@ -239,8 +343,10 @@ def count_triangles(
     probe_shorter: bool = True,
     chunk: int = 512,
     reorder: bool = True,
+    cyclic_p: Optional[int] = None,
     count_dtype=None,
     plan: Optional[TCPlan] = None,
+    cache=None,
 ) -> TCResult:
     """Count triangles with the paper's 2D algorithm.
 
@@ -248,13 +354,14 @@ def count_triangles(
     identical code path).  ``schedule`` resolves via the registry (see
     :func:`available_schedules`); ``method`` picks the count kernel
     ("search", "search2", "global", and on Cannon also "dense"/"tile").
+    ``cyclic_p`` enables the paper's initial cyclic redistribution
+    (§5.3 step 1) as the pipeline's first relabel stage.  Planning goes
+    through the content-addressed plan cache (``cache=None`` uses the
+    process-wide default — pass a ``repro.pipeline.PlanCache`` to
+    isolate, or one with ``maxsize=0`` to disable): repeated counts of
+    an already-seen graph skip relabel/plan/stage/compile entirely.
     """
     t0 = time.perf_counter()
-    if reorder:
-        g2, _ = preprocess(graph)
-    else:
-        g2 = graph
-
     if mesh is None:
         q = q or 1
         mesh = make_grid_mesh(q, npods=npods)
@@ -268,6 +375,12 @@ def count_triangles(
         count_dtype = compat.default_count_dtype()
 
     spec = get_schedule(schedule)
+    if not spec.plans_itself and (reorder or cyclic_p is not None):
+        # pre-pipeline runner contract: hand it the relabeled graph
+        from ..pipeline import relabel_stage
+
+        graph, _ = relabel_stage(graph, reorder=reorder, cyclic_p=cyclic_p)
+        reorder, cyclic_p = False, None
     ctx = RunContext(
         q=q,
         npods=npods,
@@ -276,8 +389,11 @@ def count_triangles(
         probe_shorter=probe_shorter,
         count_dtype=count_dtype,
         plan=plan,
+        reorder=reorder,
+        cyclic_p=cyclic_p,
+        cache=cache,
     )
-    total, out_plan = spec.runner(g2, mesh, ctx)
+    total, out_plan = spec.runner(graph, mesh, ctx)
     total = compat.check_count_overflow(total, count_dtype)
     t2 = time.perf_counter()
     # host-side planning/staging counts as preprocessing (paper's ppt),
@@ -293,3 +409,16 @@ def count_triangles(
         schedule=schedule,
         grid=(npods, q, q) if npods > 1 else (q, q),
     )
+
+
+def count_triangles_many(graphs, mesh=None, **kwargs):
+    """Count triangles of many graphs in one compiled engine call.
+
+    Thin re-export of :func:`repro.pipeline.count_triangles_many` (the
+    batched front-end): graphs are padded to shared shapes, stacked on a
+    leading batch axis, and run through the engine once; results match
+    the per-graph :func:`count_triangles` totals exactly.
+    """
+    from ..pipeline import count_triangles_many as _many
+
+    return _many(graphs, mesh, **kwargs)

@@ -80,6 +80,12 @@ def _cannon_parts(plan, mesh, *, row_axis, col_axis, pod_axis):
     return axes, CannonSchedule(q=plan.q, axes=axes, npods=npods)
 
 
+def _coerce(plan):
+    from .plan import as_plan
+
+    return as_plan(plan)
+
+
 def build_cannon_fn(
     plan,
     mesh,
@@ -94,11 +100,16 @@ def build_cannon_fn(
     reduce_global: bool = True,
     tile_kernel_mode: Optional[str] = None,
     compress_lengths: bool = False,
+    batched: bool = False,
 ):
     """Build the jitted SPMD counting function for ``plan`` on ``mesh``.
 
-    Returns a callable ``fn(**device_arrays)`` yielding the global triangle
-    count (scalar) or per-device counts if ``reduce_global=False``.
+    ``plan`` may be a raw :class:`~repro.core.plan.TCPlan` or a pipeline
+    :class:`~repro.pipeline.artifact.PlanArtifact`.  Returns a callable
+    ``fn(**device_arrays)`` yielding the global triangle count (scalar)
+    or per-device counts if ``reduce_global=False``; with
+    ``batched=True`` the arrays carry a leading batch axis and the call
+    returns per-graph counts (see ``engine.build_engine_fn``).
     ``method``: any registered CSR kernel — ``"search"`` (flat padding),
     ``"search2"`` (two-level length-bucketed — §Perf H1a; requires
     ``bucketize_plan``), ``"global"`` (gather-free keys).
@@ -107,6 +118,7 @@ def build_cannon_fn(
     bytes by ~(nb*2)/(nb*4+nnz*4).
     """
     del tile_kernel_mode  # tile path has its own builder below
+    plan = _coerce(plan)
     axes, schedule = _cannon_parts(
         plan, mesh, row_axis=row_axis, col_axis=col_axis, pod_axis=pod_axis
     )
@@ -129,6 +141,7 @@ def build_cannon_fn(
         mesh, axes, store, schedule,
         count_dtype=count_dtype,
         reduction=Reduction(global_sum=reduce_global),
+        batched=batched,
     )
 
 
@@ -150,6 +163,7 @@ def build_cannon_stepper(
     resumes mid-loop (EXPERIMENTS.md §Fault-tolerance).  Same engine body
     as :func:`build_cannon_fn` — only the loop owner differs.
     """
+    plan = _coerce(plan)
     axes, schedule = _cannon_parts(
         plan, mesh, row_axis=row_axis, col_axis=col_axis, pod_axis=None
     )
@@ -186,6 +200,7 @@ def build_cannon_tile_fn(
     ``interpret=False`` to run the Mosaic-lowered kernel.
     """
     del tile_plan  # shapes travel with the device arrays
+    plan = _coerce(plan)
     axes, schedule = _cannon_parts(
         plan, mesh, row_axis=row_axis, col_axis=col_axis, pod_axis=None
     )
@@ -208,6 +223,7 @@ def build_cannon_dense_fn(
     reduce_global: bool = True,
 ):
     """Dense-operand Cannon (oracle path): blocks as 0/1 float matrices."""
+    plan = _coerce(plan)
     axes, schedule = _cannon_parts(
         plan, mesh, row_axis=row_axis, col_axis=col_axis, pod_axis=pod_axis
     )

@@ -25,7 +25,15 @@ import numpy as np
 
 from .graph import Graph
 
-__all__ = ["BlockCSR", "cyclic_blocks", "block_of", "local_index"]
+__all__ = [
+    "BlockCSR",
+    "CyclicCOO",
+    "cyclic_coo",
+    "blocks_from_coo",
+    "cyclic_blocks",
+    "block_of",
+    "local_index",
+]
 
 
 def block_of(i: np.ndarray, j: np.ndarray, r: int, c: int):
@@ -63,12 +71,45 @@ class BlockCSR:
         return int(np.max(np.diff(self.indptr), initial=0))
 
 
-def cyclic_blocks(graph: Graph, r: int, c: int) -> List[List[BlockCSR]]:
-    """Decompose U(graph) into an ``r x c`` grid of cyclic blocks.
+@dataclasses.dataclass(frozen=True)
+class CyclicCOO:
+    """One lexsorted pass over the 2D-cyclic decomposition of U.
 
-    Assumes the graph is already degree-ordered (the decomposition is valid
-    regardless; balance relies on the ordering).  Returns ``blocks[x][y]``.
+    The single sort by ``(block id, local row, local col)`` is everything
+    the packers need: per-block slices are contiguous (``starts``), the
+    per-block CSR indptr is a row-count cumsum (``rowcnt``), and block-local
+    COO scatter offsets are ``arange(m) - starts[bid_s]``.  This replaces
+    the per-block bincount/cumsum loops that used to run q×q times.
     """
+
+    r: int
+    c: int
+    rows_loc: int  # local rows per block = ceil(n / r)
+    cols_loc: int  # local cols per block = ceil(n / c)
+    bid_s: np.ndarray  # (m,) block id = bx * c + by, sorted
+    li_s: np.ndarray  # (m,) local row, sorted within block
+    lj_s: np.ndarray  # (m,) local col, sorted within (block, row)
+    counts: np.ndarray  # (r*c,) nnz per block
+    starts: np.ndarray  # (r*c + 1,) prefix offsets into the sorted arrays
+    rowcnt: np.ndarray  # (r*c, rows_loc) nnz per (block, local row)
+
+    @property
+    def nnz_max(self) -> int:
+        return int(self.counts.max()) if self.counts.size else 0
+
+    @property
+    def row_len_max(self) -> int:
+        return int(self.rowcnt.max()) if self.rowcnt.size else 0
+
+    def offsets(self) -> np.ndarray:
+        """Position of each sorted entry within its block."""
+        return np.arange(self.bid_s.shape[0], dtype=np.int64) - self.starts[
+            self.bid_s
+        ]
+
+
+def cyclic_coo(graph: Graph, r: int, c: int) -> CyclicCOO:
+    """The lexsort pass: sort U's edges by (block, local row, local col)."""
     n = graph.n
     rows_loc = -(-n // r)
     cols_loc = -(-n // c)
@@ -77,34 +118,59 @@ def cyclic_blocks(graph: Graph, r: int, c: int) -> List[List[BlockCSR]]:
     bx, by = block_of(i, j, r, c)
     li, lj = local_index(i, j, r, c)
 
-    # bucket edges by block id, then build each block's CSR in one pass
     bid = bx * c + by
     order = np.lexsort((lj, li, bid))
     bid_s, li_s, lj_s = bid[order], li[order], lj[order]
-    boundaries = np.searchsorted(bid_s, np.arange(r * c + 1))
+    counts = np.bincount(bid_s, minlength=r * c)
+    starts = np.zeros(r * c + 1, dtype=np.int64)
+    np.cumsum(counts, out=starts[1:])
+    rowcnt = np.bincount(
+        bid_s * rows_loc + li_s, minlength=r * c * rows_loc
+    ).reshape(r * c, rows_loc)
+    return CyclicCOO(
+        r=r,
+        c=c,
+        rows_loc=rows_loc,
+        cols_loc=cols_loc,
+        bid_s=bid_s,
+        li_s=li_s,
+        lj_s=lj_s,
+        counts=counts,
+        starts=starts,
+        rowcnt=rowcnt,
+    )
 
+
+def blocks_from_coo(coo: CyclicCOO) -> List[List[BlockCSR]]:
+    """Materialize ``BlockCSR`` views of a sorted pass (cheap slicing)."""
+    r, c = coo.r, coo.c
     out: List[List[BlockCSR]] = []
     for x in range(r):
         row_blocks = []
         for y in range(c):
             b = x * c + y
-            lo, hi = boundaries[b], boundaries[b + 1]
-            rows = li_s[lo:hi]
-            cols = lj_s[lo:hi]
-            counts = np.bincount(rows, minlength=rows_loc)
-            indptr = np.zeros(rows_loc + 1, dtype=np.int64)
-            np.cumsum(counts, out=indptr[1:])
-            active = np.nonzero(counts)[0]
+            lo, hi = coo.starts[b], coo.starts[b + 1]
+            indptr = np.zeros(coo.rows_loc + 1, dtype=np.int64)
+            np.cumsum(coo.rowcnt[b], out=indptr[1:])
             row_blocks.append(
                 BlockCSR(
                     bx=x,
                     by=y,
-                    n_rows=rows_loc,
-                    n_cols=cols_loc,
+                    n_rows=coo.rows_loc,
+                    n_cols=coo.cols_loc,
                     indptr=indptr,
-                    indices=cols.astype(np.int64),
-                    active_rows=active.astype(np.int64),
+                    indices=coo.lj_s[lo:hi].astype(np.int64),
+                    active_rows=np.nonzero(coo.rowcnt[b])[0].astype(np.int64),
                 )
             )
         out.append(row_blocks)
     return out
+
+
+def cyclic_blocks(graph: Graph, r: int, c: int) -> List[List[BlockCSR]]:
+    """Decompose U(graph) into an ``r x c`` grid of cyclic blocks.
+
+    Assumes the graph is already degree-ordered (the decomposition is valid
+    regardless; balance relies on the ordering).  Returns ``blocks[x][y]``.
+    """
+    return blocks_from_coo(cyclic_coo(graph, r, c))

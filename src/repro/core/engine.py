@@ -1,5 +1,5 @@
 """Unified schedule engine: one pluggable runtime for every distributed
-count (DESIGN.md §3-§6).
+count (DESIGN.md §4-§6).
 
 A distributed triangle count is expressed as the composition
 
@@ -649,31 +649,62 @@ def build_engine_fn(
     *,
     count_dtype=jnp.int32,
     reduction: Optional[Reduction] = None,
+    batched: bool = False,
 ):
     """Generate the jitted SPMD counting function for one composition.
 
     Returns ``call(**device_arrays)`` (also accepts positional arrays in
     ``call.ordered`` order) yielding the global count scalar, or
     per-device counts with ``Reduction(global_sum=False)``.
+
+    ``batched=True`` builds the multi-graph variant: every device array
+    carries an unsharded leading batch axis (graphs padded to shared
+    maxima and stacked by :mod:`repro.pipeline.batch`), the schedule
+    runs per graph under one ``lax.map`` inside the same ``shard_map``,
+    and the call returns the ``(batch,)`` vector of global counts — one
+    compiled executable and one dispatch for the whole batch.
     """
     reduction = reduction or Reduction()
     ordered = list(store.names)
     specs = store.in_specs(axes)
     ctx = _Ctx(axes)
 
-    def spmd(*args):
-        local = store.localize(dict(zip(ordered, args)), axes)
+    def core(local):
         carry0, body, nsteps = schedule.make_scan(store, local, ctx)
         _, per_step = jax.lax.scan(body, carry0, jnp.arange(nsteps))
         total = jnp.sum(per_step, dtype=count_dtype)
         return reduction.apply(total, axes)
 
+    if batched:
+        assert reduction.global_sum, (
+            "batched engine returns per-graph global counts"
+        )
+
+        def spmd(*args):
+            named = dict(zip(ordered, args))
+            # strip the size-1 mesh block dims that follow the batch axis
+            local = {
+                k: v.reshape((v.shape[0],) + v.shape[1 + store.lead(k, axes):])
+                for k, v in named.items()
+            }
+            return jax.lax.map(core, local)
+
+        in_specs = tuple(P(None, *specs[k]) for k in ordered)
+        out_specs = P(None)
+    else:
+
+        def spmd(*args):
+            return core(store.localize(dict(zip(ordered, args)), axes))
+
+        in_specs = tuple(specs[k] for k in ordered)
+        out_specs = reduction.out_specs(axes)
+
     fn = jax.jit(
         compat.shard_map(
             spmd,
             mesh=mesh,
-            in_specs=tuple(specs[k] for k in ordered),
-            out_specs=reduction.out_specs(axes),
+            in_specs=in_specs,
+            out_specs=out_specs,
             check_vma=False,
         )
     )

@@ -18,7 +18,13 @@ import numpy as np
 
 from .graph import Graph
 
-__all__ = ["rmat", "erdos_renyi", "named_graph", "GRAPH500_PARAMS"]
+__all__ = [
+    "rmat",
+    "erdos_renyi",
+    "named_graph",
+    "graph_from_spec",
+    "GRAPH500_PARAMS",
+]
 
 GRAPH500_PARAMS = (0.57, 0.19, 0.19, 0.05)
 
@@ -93,3 +99,76 @@ def named_graph(which: str) -> Graph:
             5, [0, 0, 1, 1, 2], [1, 2, 2, 3, 4], name="bull"
         )
     raise ValueError(f"unknown graph {which!r}")
+
+
+def graph_from_spec(spec: str) -> Graph:
+    """Parse a command-line graph spec (shared by tc_run / serve / benches).
+
+    Formats: ``rmat:<scale>[,<edge_factor>[,<seed>]]`` |
+    ``er:<n>,<avg_degree>[,<seed>]`` | ``named:<id>`` | ``<id>`` (a bare
+    named-graph id such as ``karate``).
+    """
+    kind, _, rest = spec.partition(":")
+    if kind == "rmat":
+        parts = rest.split(",")
+        return rmat(
+            int(parts[0]),
+            int(parts[1]) if len(parts) > 1 else 16,
+            seed=int(parts[2]) if len(parts) > 2 else 0,
+        )
+    if kind == "er":
+        parts = rest.split(",")
+        return erdos_renyi(
+            int(parts[0]),
+            float(parts[1]),
+            seed=int(parts[2]) if len(parts) > 2 else 0,
+        )
+    if kind == "named":
+        return named_graph(rest)
+    if not rest:  # bare named-graph id
+        return named_graph(kind)
+    raise ValueError(f"unknown graph spec {spec!r}")
+
+
+_NAMED_IDS = ("triangle", "k4", "k10", "path", "star", "karate", "bull")
+
+
+def _spec_is_wellformed(spec: str) -> bool:
+    """Cheap format check of one spec — no graph is built."""
+    kind, _, rest = spec.partition(":")
+    parts = rest.split(",")
+    try:
+        if kind == "rmat":
+            return 1 <= len(parts) <= 3 and all(int(p) >= 0 for p in parts)
+        if kind == "er":
+            if len(parts) not in (2, 3):
+                return False
+            int(parts[0]), float(parts[1])
+            return len(parts) == 2 or int(parts[2]) >= 0
+    except ValueError:
+        return False
+    if kind == "named":
+        return rest in _NAMED_IDS
+    return not rest and kind in _NAMED_IDS
+
+
+def split_specs(specs: str) -> list:
+    """Split a spec *list* string into individual spec strings.
+
+    Specs are separated by ``;`` (unambiguous, since specs may contain
+    comma parameters: ``rmat:10,8,1;karate``).  Without a ``;`` the
+    whole string is tried as a single spec first — so ``rmat:10,8,1``
+    stays one graph — and only if it is not well-formed is it
+    comma-split (``rmat:10,karate`` works; mixing comma parameters and
+    comma separators needs ``;``).
+    """
+    if ";" in specs:
+        return [s for s in specs.split(";") if s]
+    if _spec_is_wellformed(specs):
+        return [specs]
+    return [s for s in specs.split(",") if s]
+
+
+def graphs_from_specs(specs: str) -> list:
+    """Parse a spec list (see :func:`split_specs`) into graphs."""
+    return [graph_from_spec(s) for s in split_specs(specs)]

@@ -66,65 +66,16 @@ class OneDPlan:
 def build_oned_plan(graph: Graph, p: int, *, chunk: int = 512) -> OneDPlan:
     """1D-cyclic row partition + owner-grouped task lists.
 
-    Adjacency columns are stored as (owner, local) pairs sorted by global
-    id; since the probe compares k values between two rows, we keep global
-    k ids (int32) — both fragments live in the same global column space.
+    Adjacency columns are stored sorted by global id; since the probe
+    compares k values between two rows, we keep global k ids (int32) —
+    both fragments live in the same global column space.  Delegates to
+    the pipeline's vectorized packer
+    (:func:`repro.pipeline.stages.pack_oned_plan`) — one sort-and-
+    scatter per structure, no per-edge Python loop.
     """
-    n, m = graph.n, graph.m
-    nb = -(-n // p)
-    i = graph.edges[:, 0]
-    j = graph.edges[:, 1]
-    own = i % p
+    from ..pipeline.stages import pack_oned_plan
 
-    # per-device CSR over local rows, global sorted cols
-    indptr = np.zeros((p, nb + 1), dtype=INT)
-    nnz_dev = np.bincount(own, minlength=p)
-    nnz_pad = max(1, int(nnz_dev.max()))
-    indices = np.full((p, nnz_pad), n + 1, dtype=INT)
-    order = np.lexsort((j, i))
-    i_s, j_s = i[order], j[order]
-    own_s = i_s % p
-    for d in range(p):
-        sel = own_s == d
-        li = i_s[sel] // p
-        cols = j_s[sel]
-        counts = np.bincount(li, minlength=nb)
-        np.cumsum(counts, out=indptr[d, 1:])
-        indices[d, : cols.shape[0]] = cols.astype(INT)
-
-    # task groups: device d = i%p, group o = j%p
-    gcnt = np.zeros((p, p), dtype=np.int64)
-    np.add.at(gcnt, (i % p, j % p), 1)
-    gmax = max(1, int(gcnt.max()))
-    t_i = np.zeros((p, p, gmax), dtype=INT)
-    t_j = np.zeros((p, p, gmax), dtype=INT)
-    t_cnt = np.zeros((p, p), dtype=INT)
-    fill = np.zeros((p, p), dtype=np.int64)
-    for ii, jj in zip(i, j):
-        d, o = int(ii % p), int(jj % p)
-        k = fill[d, o]
-        t_i[d, o, k] = ii // p
-        t_j[d, o, k] = jj // p
-        fill[d, o] += 1
-    t_cnt[:, :] = fill.astype(INT)
-
-    u = graph.upper_csr()
-    dmax = max(1, int(np.max(np.diff(u.indptr), initial=0)))
-    return OneDPlan(
-        n=n,
-        m=m,
-        p=p,
-        nb=nb,
-        nnz_pad=nnz_pad,
-        gmax=gmax,
-        dmax=dmax,
-        chunk=min(chunk, gmax),
-        indptr=indptr,
-        indices=indices,
-        t_i=t_i,
-        t_j=t_j,
-        t_cnt=t_cnt,
-    )
+    return pack_oned_plan(graph, p, chunk=chunk)
 
 
 def build_oned_fn(
@@ -135,6 +86,7 @@ def build_oned_fn(
     method: str = "search",
     count_dtype=jnp.int32,
     probe_shorter: bool = True,
+    batched: bool = False,
 ):
     """Ring algorithm over a 1D view of the mesh.
 
@@ -151,7 +103,9 @@ def build_oned_fn(
         RingSchedule,
         make_csr_kernel,
     )
+    from .plan import as_plan
 
+    plan = as_plan(plan)
     p = plan.p
     if axis is None:
         sizes = {a: mesh.shape[a] for a in mesh.axis_names}
@@ -171,5 +125,5 @@ def build_oned_fn(
     store = OneDCSRStore(kernel, p=p)
     schedule = RingSchedule(p=p, axes=axes)
     return engine.build_engine_fn(
-        mesh, axes, store, schedule, count_dtype=count_dtype
+        mesh, axes, store, schedule, count_dtype=count_dtype, batched=batched
     )

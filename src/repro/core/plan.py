@@ -31,7 +31,15 @@ import numpy as np
 from .decomp import BlockCSR, cyclic_blocks
 from .graph import Graph
 
-__all__ = ["TCPlan", "build_plan", "analytic_plan", "PlanStats"]
+__all__ = ["TCPlan", "build_plan", "analytic_plan", "PlanStats", "as_plan"]
+
+
+def as_plan(obj):
+    """Coerce a pipeline :class:`~repro.pipeline.artifact.PlanArtifact`
+    (or a raw plan) to its plan object — every engine builder accepts
+    either."""
+    inner = getattr(obj, "plan", None)
+    return obj if inner is None else inner
 
 INT = np.int32
 
@@ -165,6 +173,39 @@ def build_plan(
     ``skew=True`` applies Cannon's initial alignment at placement time;
     ``skew=False`` yields the canonical placement used by SUMMA (A at
     ``(x, y) -> U_{x,y}``, B at ``(x, y) -> U_{y,x}``).
+
+    The implementation is the pipeline's vectorized packer
+    (:func:`repro.pipeline.stages.pack_tc_plan`): one lexsorted pass
+    emits the stacked arrays directly.  :func:`_build_plan_loops` keeps
+    the original per-block loop semantics as the byte-level reference
+    the packer is tested against.
+    """
+    from ..pipeline.stages import pack_tc_plan
+
+    return pack_tc_plan(
+        graph,
+        q,
+        skew=skew,
+        chunk=chunk,
+        with_stats=with_stats,
+        keep_blocks=keep_blocks,
+    )
+
+
+def _build_plan_loops(
+    graph: Graph,
+    q: int,
+    *,
+    skew: bool = True,
+    chunk: int = 512,
+    with_stats: bool = True,
+    keep_blocks: bool = True,
+) -> TCPlan:
+    """Loop-based reference planner (the pre-pipeline implementation).
+
+    Retained verbatim so ``tests/test_pipeline.py`` can pin the
+    vectorized packer to byte-identical output; not used on any runtime
+    path.
     """
     n, m = graph.n, graph.m
     nb = -(-n // q)
@@ -275,6 +316,7 @@ def bucketize_plan(plan: TCPlan, d_small: int = 32) -> TCPlan:
     ``dmax / avg_len`` padded-probe waste on power-law graphs.
     Returns a new plan with ``n_long``/``d_small`` attributes set.
     """
+    plan = as_plan(plan)
     assert plan.blocks is not None
     q = plan.q
     rowlen = {

@@ -4,8 +4,10 @@ Steps, mirroring the paper:
 
 1. *initial cyclic redistribution* — in our SPMD formulation the host
    planner feeds pre-placed blocks, so the "redistribution" is a relabeling
-   choice; the cyclic relabel used for load balancing is available via
-   :func:`cyclic_relabel`.
+   choice; :func:`cyclic_relabel` implements it and the planning pipeline
+   wires it in as the optional first relabel stage
+   (``count_triangles(..., cyclic_p=p)`` /
+   ``repro.pipeline.stages.relabel_stage``).
 2. *reorder vertices in non-decreasing degree* via counting sort.  The host
    path (:func:`degree_order`) is a stable counting sort; the distributed
    formulation the paper describes (local histograms, global max-degree
@@ -35,19 +37,12 @@ def degree_order(graph: Graph) -> np.ndarray:
     """Return ``perm`` with ``perm[v]`` = new id of vertex ``v``.
 
     Vertices are ranked by non-decreasing degree; ties broken by original
-    id (stable counting sort, exactly the paper's relabeling).
+    id (stable sort — the same ranks the paper's counting sort yields).
     """
     deg = graph.degrees()
-    # counting sort: bucket offsets by degree, stable within-bucket by id
-    counts = np.bincount(deg)
-    offsets = np.zeros_like(counts)
-    np.cumsum(counts[:-1], out=offsets[1:])
-    # stable: iterate ids in order within each bucket via argsort on (deg, id)
     order = np.argsort(deg, kind="stable")  # vertex ids sorted by degree
     perm = np.empty(graph.n, dtype=np.int64)
     perm[order] = np.arange(graph.n, dtype=np.int64)
-    # offsets kept for parity checks with the distributed formulation
-    del offsets
     return perm
 
 
@@ -56,10 +51,17 @@ def cyclic_relabel(n: int, p: int) -> np.ndarray:
 
     Vertex ``v`` (owned contiguously in a 1D input distribution) moves to
     position ``(v % p) * ceil(n/p) + v // p`` — round-robin over ranks.
+    When ``p`` does not divide ``n`` the trailing slots of the last rank's
+    chunk are empty; they are compacted away so the result is a true
+    permutation of ``[0, n)`` (safe for :meth:`Graph.relabel`), identical
+    to the raw positions whenever ``p | n``.
     """
     chunk = -(-n // p)
     v = np.arange(n, dtype=np.int64)
-    return (v % p) * chunk + v // p
+    pos = (v % p) * chunk + v // p
+    perm = np.empty(n, dtype=np.int64)
+    perm[np.argsort(pos)] = v
+    return perm
 
 
 def preprocess(graph: Graph) -> Tuple[Graph, np.ndarray]:
@@ -111,9 +113,18 @@ def distributed_degree_rank(degrees, axis_name: str):
         jnp.where((jnp.arange(p) < idx)[:, None], all_hists, 0), axis=0
     )
 
-    # (e) stable within-shard offsets: #earlier local vertices of same degree
-    onehot = jax.nn.one_hot(degrees, nbuckets, dtype=jnp.int32)
-    within = jnp.cumsum(onehot, axis=0) - onehot
-    within_count = jnp.take_along_axis(within, degrees[:, None], 1)[:, 0]
+    # (e) stable within-shard offsets: #earlier local vertices of same
+    # degree.  Sort-based rank instead of a one-hot/cumsum matrix: the
+    # one-hot materialized a (chunk, n+1) intermediate — O(n_local × n)
+    # memory — where a stable argsort plus the shard's own exclusive
+    # bucket starts gives the same rank in O(n_local log n_local) time
+    # and O(n_local + n) memory.
+    nloc = degrees.shape[0]
+    order = jnp.argsort(degrees, stable=True)
+    pos = jnp.zeros(nloc, dtype=jnp.int32).at[order].set(
+        jnp.arange(nloc, dtype=jnp.int32)
+    )
+    local_starts = jnp.cumsum(hist) - hist
+    within_count = pos - local_starts[degrees]
 
     return bucket_starts[degrees] + before[degrees] + within_count

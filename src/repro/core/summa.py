@@ -28,7 +28,6 @@ from typing import Dict
 import jax.numpy as jnp
 import numpy as np
 
-from .decomp import cyclic_blocks
 from .graph import Graph
 
 INT = np.int32
@@ -80,68 +79,13 @@ class SummaPlan:
 
 
 def build_summa_plan(graph: Graph, r: int, c: int, *, chunk: int = 512) -> SummaPlan:
-    n, m = graph.n, graph.m
-    nb_r = -(-n // r)
-    nb_c = -(-n // c)
-    npan = -(-c // r)
+    """SUMMA planner — delegates to the pipeline's vectorized packer
+    (:func:`repro.pipeline.stages.pack_summa_plan`): A/mask blocks from
+    one ``(r, c)`` lexsort pass, B panels gathered from one ``(c, c)``
+    pass, no per-block loops."""
+    from ..pipeline.stages import pack_summa_plan
 
-    ablocks = cyclic_blocks(graph, r, c)  # A and mask
-    bblocks = cyclic_blocks(graph, c, c)  # B (rows j%c, cols k%c)
-
-    a_nnz_pad = max(1, max(ablocks[x][y].nnz for x in range(r) for y in range(c)))
-    b_nnz_pad = max(1, max(bblocks[y][k].nnz for y in range(c) for k in range(c)))
-    tmax = a_nnz_pad
-
-    a_indptr = np.zeros((r, c, nb_r + 1), dtype=INT)
-    a_indices = np.full((r, c, a_nnz_pad), nb_c, dtype=INT)
-    m_ti = np.zeros((r, c, tmax), dtype=INT)
-    m_tj = np.zeros((r, c, tmax), dtype=INT)
-    m_cnt = np.zeros((r, c), dtype=INT)
-    for x in range(r):
-        for y in range(c):
-            blk = ablocks[x][y]
-            a_indptr[x, y] = blk.indptr.astype(INT)
-            a_indices[x, y, : blk.nnz] = blk.indices.astype(INT)
-            rows = np.repeat(np.arange(blk.n_rows, dtype=INT), np.diff(blk.indptr))
-            m_ti[x, y, : rows.shape[0]] = rows
-            m_tj[x, y, : blk.nnz] = blk.indices.astype(INT)
-            m_cnt[x, y] = blk.nnz
-
-    b_indptr = np.zeros((r, c, npan, nb_c + 1), dtype=INT)
-    b_indices = np.full((r, c, npan, b_nnz_pad), nb_c, dtype=INT)
-    for y in range(c):
-        for kc in range(c):
-            x, slot = kc % r, kc // r
-            blk = bblocks[y][kc]
-            b_indptr[x, y, slot] = blk.indptr.astype(INT)
-            b_indices[x, y, slot, : blk.nnz] = blk.indices.astype(INT)
-
-    dmax = max(
-        1,
-        max(ablocks[x][y].max_row_len() for x in range(r) for y in range(c)),
-        max(bblocks[y][k].max_row_len() for y in range(c) for k in range(c)),
-    )
-    return SummaPlan(
-        n=n,
-        m=m,
-        r=r,
-        c=c,
-        nb_r=nb_r,
-        nb_c=nb_c,
-        npan=npan,
-        a_nnz_pad=a_nnz_pad,
-        b_nnz_pad=b_nnz_pad,
-        tmax=tmax,
-        dmax=dmax,
-        chunk=min(chunk, tmax),
-        a_indptr=a_indptr,
-        a_indices=a_indices,
-        b_indptr=b_indptr,
-        b_indices=b_indices,
-        m_ti=m_ti,
-        m_tj=m_tj,
-        m_cnt=m_cnt,
-    )
+    return pack_summa_plan(graph, r, c, chunk=chunk)
 
 
 def build_summa_fn(
@@ -154,6 +98,7 @@ def build_summa_fn(
     probe_shorter: bool = True,
     count_dtype=jnp.int32,
     reduce_global: bool = True,
+    batched: bool = False,
 ):
     """Thin engine configuration: SummaSchedule × SummaCSRStore × kernel."""
     from . import engine
@@ -164,7 +109,9 @@ def build_summa_fn(
         SummaSchedule,
         make_csr_kernel,
     )
+    from .plan import as_plan
 
+    plan = as_plan(plan)
     axes = GridAxes(row_axis, col_axis)
     kernel = make_csr_kernel(
         method,
@@ -180,4 +127,5 @@ def build_summa_fn(
         mesh, axes, store, schedule,
         count_dtype=count_dtype,
         reduction=Reduction(global_sum=reduce_global),
+        batched=batched,
     )

@@ -88,7 +88,12 @@ class TilePlan:
 
 
 def build_tile_plan(plan: TCPlan) -> TilePlan:
-    """Build tile stores + joins from a planned graph (needs plan.blocks)."""
+    """Build tile stores + joins from a planned graph (needs plan.blocks).
+
+    Accepts a raw :class:`TCPlan` or a pipeline ``PlanArtifact``."""
+    from .plan import as_plan
+
+    plan = as_plan(plan)
     assert plan.blocks is not None, "build_plan(..., keep_blocks=True) required"
     q = plan.q
     blocks = plan.blocks

@@ -1,19 +1,86 @@
-"""Serving driver: batched KV-cached greedy decode for LM archs.
+"""Serving drivers.
+
+LM mode — batched KV-cached greedy decode for LM archs:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b-smoke \
         --batch 4 --gen 16
+
+Triangle-count mode — repeated batched counts over a working set of
+graphs, the heavy-traffic shape the planning pipeline is built for
+(content-addressed plan cache + one compiled engine call per batch;
+round 0 is the cold plan+compile, later rounds are pure dispatch):
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        "--tc-graphs" "rmat:10;rmat:10,8,1;karate" --grid 1 --rounds 5
 """
 import argparse
 import time
 
 
+def _serve_tc(args):
+    from ..core.generators import graphs_from_specs
+    from ..pipeline import count_triangles_many, default_cache
+
+    graphs = graphs_from_specs(args.tc_graphs)
+    expected = None
+    res = None
+    for rnd in range(args.rounds):
+        t0 = time.perf_counter()
+        res = count_triangles_many(
+            graphs,
+            q=args.grid,
+            schedule=args.schedule,
+            method=args.method,
+        )
+        dt = time.perf_counter() - t0
+        print(
+            f"round {rnd}: triangles={res.triangles} in {dt*1e3:.1f}ms "
+            f"({len(graphs)/dt:.1f} graphs/s, "
+            f"{'warm' if res.cache_hit else 'cold'})"
+        )
+        if args.verify:
+            # exact host oracle — O(m·d) sequential, small graphs only
+            if expected is None:
+                from ..core import triangle_count_oracle
+
+                expected = [triangle_count_oracle(g) for g in graphs]
+            if res.triangles != expected:
+                raise SystemExit(
+                    f"count mismatch: {res.triangles} != {expected}"
+                )
+    stats = default_cache().stats
+    print(
+        f"plan cache: {stats['hits']} hits / {stats['misses']} misses"
+        + (
+            f", batched padding overhead {res.padding_overhead:.2f}"
+            if res is not None
+            else ""
+        )
+    )
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--tc-graphs", default=None,
+                    help="';'-separated graph specs: serve repeated "
+                         "batched triangle counts instead of an LM")
+    ap.add_argument("--grid", type=int, default=1)
+    ap.add_argument("--schedule", default="cannon")
+    ap.add_argument("--method", default="search")
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--verify", action="store_true",
+                    help="check every round against the exact host "
+                         "oracle (small graphs only)")
     args = ap.parse_args()
+
+    if args.tc_graphs:
+        return _serve_tc(args)
+    if not args.arch:
+        raise SystemExit("pass --arch (LM serving) or --tc-graphs")
 
     import jax
     import jax.numpy as jnp

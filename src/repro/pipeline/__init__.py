@@ -1,0 +1,38 @@
+"""Staged host-planning pipeline (DESIGN.md §3).
+
+Public surface:
+
+* :func:`plan_cannon` / :func:`plan_summa` / :func:`plan_oned` — cached
+  pipeline drivers (ingest → relabel → decompose → pack → stage)
+  returning a :class:`PlanArtifact`.
+* :class:`PlanCache` / :func:`graph_digest` / :func:`default_cache` —
+  the content-addressed plan cache (§10.5).
+* :func:`count_triangles_many` — batched front-end: many graphs, one
+  compiled engine call.
+* :mod:`.stages` — the individual stage functions (vectorized packers,
+  relabel composition) for callers assembling their own pipelines.
+"""
+from .artifact import PlanArtifact  # noqa: F401
+from .batch import ManyResult, count_triangles_many  # noqa: F401
+from .cache import (  # noqa: F401
+    PlanCache,
+    default_cache,
+    graph_digest,
+    set_default_cache,
+)
+from .planner import plan_cannon, plan_oned, plan_summa  # noqa: F401
+from .stages import relabel_stage  # noqa: F401
+
+__all__ = [
+    "relabel_stage",
+    "PlanArtifact",
+    "PlanCache",
+    "ManyResult",
+    "count_triangles_many",
+    "default_cache",
+    "set_default_cache",
+    "graph_digest",
+    "plan_cannon",
+    "plan_summa",
+    "plan_oned",
+]

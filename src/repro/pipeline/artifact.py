@@ -1,0 +1,81 @@
+"""The single product of the host planning pipeline (DESIGN.md §3).
+
+A :class:`PlanArtifact` bundles everything one planned graph needs to be
+counted repeatedly: the relabeled host graph, the composed relabeling
+permutation, the device-ready plan (``TCPlan`` / ``SummaPlan`` /
+``OneDPlan``), per-stage wall times, and a memo space where the runners
+park derived state (staged ``jnp`` arrays, compiled engine fns, tile
+plans) so a cache hit skips *all* per-call host work — planning, host→
+device staging, and retracing.
+
+Artifacts are what the schedule runners and engine builders consume;
+``repro.core.plan.as_plan`` coerces an artifact (or a raw plan) to its
+plan object, so every ``build_*_fn`` accepts either.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from ..core.graph import Graph
+
+__all__ = ["PlanArtifact"]
+
+
+@dataclasses.dataclass
+class PlanArtifact:
+    """One planned graph, ready for repeated counting.
+
+    ``kind`` names the plan family ("cannon" | "summa" | "oned");
+    ``digest`` is the content digest of the *input* graph (pre-relabel),
+    ``key`` the full cache key this artifact is stored under.
+    """
+
+    kind: str
+    digest: str
+    key: Tuple
+    graph: Graph  # relabeled graph actually planned
+    perm: Optional[np.ndarray]  # composed relabeling, old id -> new id
+    plan: Any  # TCPlan | SummaPlan | OneDPlan
+    stage_seconds: Dict[str, float] = dataclasses.field(default_factory=dict)
+    cache_hit: bool = False
+    _memo: Dict = dataclasses.field(default_factory=dict, repr=False)
+    _memo_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False
+    )
+
+    # ------------------------------------------------------------------
+    def device_arrays(self) -> Dict[str, np.ndarray]:
+        return self.plan.device_arrays()
+
+    def memo(self, key, build: Callable):
+        """Build-once storage for derived per-artifact state.
+
+        Used by the runners for staged arrays, compiled engine fns (keyed
+        by mesh/method/dtype), tile plans, and dense blocks — everything
+        that would otherwise be recomputed or retraced on every count of
+        an already-planned graph.  Locked, so serving threads sharing a
+        cached artifact build (and trace/compile) each entry once.
+        """
+        with self._memo_lock:
+            if key not in self._memo:
+                self._memo[key] = build()
+            return self._memo[key]
+
+    def staged(self) -> Dict:
+        """Device-staged (``jnp``) plan arrays, memoized (the pipeline's
+        ``stage`` step); records its first-call wall time."""
+        import time
+
+        import jax.numpy as jnp
+
+        def build():
+            t0 = time.perf_counter()
+            out = {k: jnp.asarray(v) for k, v in self.device_arrays().items()}
+            self.stage_seconds["stage"] = time.perf_counter() - t0
+            return out
+
+        return self.memo("staged_arrays", build)

@@ -1,0 +1,122 @@
+"""Content-addressed plan cache (DESIGN.md §10.5).
+
+Planning is addressed by *content*, not identity: the cache key starts
+with :func:`graph_digest` — a blake2b over the canonicalized edge set —
+so two structurally identical graphs hit the same entry no matter how
+they were constructed, and any edge edit changes the digest and misses.
+The rest of the key is the full planning configuration (kind, grid,
+chunk, relabel options, …) supplied by the planner drivers.
+
+One :class:`PlanCache` instance stores every pipeline product —
+relabel results, plan artifacts, and batched programs — under
+namespaced keys, so ``clear()`` is a single switch and the hit/miss
+stats describe the whole planning stack.  The default process-wide
+cache (:func:`default_cache`) is what ``count_triangles`` uses when no
+cache is passed; serving processes can hold their own instance.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+from collections import OrderedDict
+from typing import Any, Hashable, Optional
+
+import numpy as np
+
+from ..core.graph import Graph
+
+__all__ = ["PlanCache", "graph_digest", "default_cache", "set_default_cache"]
+
+
+def graph_digest(graph: Graph) -> str:
+    """Content digest of a graph: blake2b over (n, sorted edge keys).
+
+    Canonicalizes via the packed key ``lo * n + hi`` (edges are already
+    stored as ``(min, max)``) sorted ascending, so edge *order* never
+    affects the digest — only the edge *set* and vertex count do.
+    """
+    n = np.int64(graph.n)
+    key = graph.edges[:, 0] * n + graph.edges[:, 1]
+    # Graph.from_edges emits keys already ascending (np.unique); only
+    # hand-built edge lists pay the sort
+    if key.size and not np.all(key[1:] > key[:-1]):
+        key = np.sort(key)
+    h = hashlib.blake2b(digest_size=16)
+    h.update(int(n).to_bytes(8, "little"))
+    h.update(np.ascontiguousarray(key).tobytes())
+    return h.hexdigest()
+
+
+class PlanCache:
+    """Thread-safe LRU over pipeline products.
+
+    ``maxsize=0`` disables caching (every ``get`` misses, ``put`` is a
+    no-op) — useful for benchmarking the cold path.
+
+    Eviction is entry-count-based, not byte-based, and cached artifacts
+    pin whatever they have memoized — including staged *device* arrays
+    and compiled executables — until evicted.  Size ``maxsize`` to the
+    working set of distinct (graph, config) pairs the process actually
+    serves (the default stays small for exactly that reason — a process
+    looping over many huge graphs would otherwise silently retain them
+    all); for one-shot batch jobs prefer ``maxsize=0``.
+    """
+
+    def __init__(self, maxsize: int = 8):
+        self.maxsize = int(maxsize)
+        self._entries: OrderedDict[Hashable, Any] = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: Hashable) -> Optional[Any]:
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return self._entries[key]
+            self.misses += 1
+            return None
+
+    def put(self, key: Hashable, value: Any) -> None:
+        if self.maxsize <= 0:
+            return
+        with self._lock:
+            self._entries[key] = value
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def stats(self) -> dict:
+        return dict(
+            size=len(self._entries),
+            maxsize=self.maxsize,
+            hits=self.hits,
+            misses=self.misses,
+            evictions=self.evictions,
+        )
+
+
+_DEFAULT = PlanCache()
+
+
+def default_cache() -> PlanCache:
+    """The process-wide cache used when callers pass ``cache=None``."""
+    return _DEFAULT
+
+
+def set_default_cache(cache: PlanCache) -> PlanCache:
+    """Swap the process-wide cache (returns the previous one)."""
+    global _DEFAULT
+    prev, _DEFAULT = _DEFAULT, cache
+    return prev

@@ -1,0 +1,174 @@
+"""Cached pipeline drivers: one call = ingest → relabel → decompose →
+pack (→ stage, lazily), all behind the content-addressed cache.
+
+``plan_cannon`` / ``plan_summa`` / ``plan_oned`` are what the schedule
+runners in :mod:`repro.core.api` call; each returns a
+:class:`~repro.pipeline.artifact.PlanArtifact`.  Repeated counts of the
+same (or merely re-labeled / re-ordered-edge) graph hit the cache at the
+digest and skip every stage; the relabel result is cached separately so
+different schedules planning the same graph share the degree ordering.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from ..core.graph import Graph
+from ..core.plan import bucketize_plan
+from .artifact import PlanArtifact
+from .cache import PlanCache, default_cache, graph_digest
+from .stages import (
+    pack_oned_plan,
+    pack_summa_plan,
+    pack_tc_plan,
+    relabel_stage,
+)
+
+__all__ = ["plan_cannon", "plan_summa", "plan_oned", "relabel_cached"]
+
+
+def relabel_cached(
+    graph: Graph,
+    digest: str,
+    *,
+    reorder: bool,
+    cyclic_p: Optional[int],
+    cache: PlanCache,
+):
+    """Relabel stage behind the cache: shared across plan kinds."""
+    key = ("relabel", digest, reorder, cyclic_p)
+    hit = cache.get(key)
+    if hit is not None:
+        return hit
+    out = relabel_stage(graph, reorder=reorder, cyclic_p=cyclic_p)
+    cache.put(key, out)
+    return out
+
+
+def _drive(kind, graph, key_tail, cache, pack):
+    """Shared driver: ingest (digest + cache probe) then relabel + pack."""
+    cache = cache if cache is not None else default_cache()
+    seconds = {}
+    t0 = time.perf_counter()
+    digest = graph_digest(graph)
+    seconds["ingest"] = time.perf_counter() - t0
+
+    key = (kind, digest) + key_tail
+    art = cache.get(key)
+    if art is not None:
+        art.cache_hit = True
+        return art
+
+    art = pack(digest, key, seconds, cache)
+    art.stage_seconds.update(seconds)
+    cache.put(key, art)
+    return art
+
+
+def plan_cannon(
+    graph: Graph,
+    q: int,
+    *,
+    skew: bool = True,
+    chunk: int = 512,
+    reorder: bool = True,
+    cyclic_p: Optional[int] = None,
+    with_stats: bool = True,
+    keep_blocks: bool = True,
+    bucketize: bool = False,
+    d_small: int = 32,
+    cache: Optional[PlanCache] = None,
+) -> PlanArtifact:
+    """Plan the 2D-cyclic (Cannon family) execution of ``graph`` on a
+    ``q x q`` grid, through the cache.
+
+    ``bucketize=True`` stores the §Perf H1a long/short-reordered plan
+    (for ``method="search2"``) under its own cache entry."""
+
+    def pack(digest, key, seconds, cache_):
+        t0 = time.perf_counter()
+        g2, perm = relabel_cached(
+            graph, digest, reorder=reorder, cyclic_p=cyclic_p, cache=cache_
+        )
+        seconds["relabel"] = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        plan = pack_tc_plan(
+            g2,
+            q,
+            skew=skew,
+            chunk=chunk,
+            with_stats=with_stats,
+            keep_blocks=keep_blocks or bucketize,
+        )
+        if bucketize:
+            plan = bucketize_plan(plan, d_small=d_small)
+        seconds["decompose+pack"] = time.perf_counter() - t1
+        return PlanArtifact(
+            kind="cannon", digest=digest, key=key, graph=g2, perm=perm,
+            plan=plan,
+        )
+
+    tail = (
+        q, skew, chunk, reorder, cyclic_p, with_stats, keep_blocks,
+        bucketize, d_small if bucketize else None,
+    )
+    return _drive("cannon", graph, tail, cache, pack)
+
+
+def plan_summa(
+    graph: Graph,
+    r: int,
+    c: int,
+    *,
+    chunk: int = 512,
+    reorder: bool = True,
+    cyclic_p: Optional[int] = None,
+    cache: Optional[PlanCache] = None,
+) -> PlanArtifact:
+    """Plan the SUMMA execution on an ``r x c`` grid, through the cache."""
+
+    def pack(digest, key, seconds, cache_):
+        t0 = time.perf_counter()
+        g2, perm = relabel_cached(
+            graph, digest, reorder=reorder, cyclic_p=cyclic_p, cache=cache_
+        )
+        seconds["relabel"] = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        plan = pack_summa_plan(g2, r, c, chunk=chunk)
+        seconds["decompose+pack"] = time.perf_counter() - t1
+        return PlanArtifact(
+            kind="summa", digest=digest, key=key, graph=g2, perm=perm,
+            plan=plan,
+        )
+
+    tail = (r, c, chunk, reorder, cyclic_p)
+    return _drive("summa", graph, tail, cache, pack)
+
+
+def plan_oned(
+    graph: Graph,
+    p: int,
+    *,
+    chunk: int = 512,
+    reorder: bool = True,
+    cyclic_p: Optional[int] = None,
+    cache: Optional[PlanCache] = None,
+) -> PlanArtifact:
+    """Plan the 1D-ring baseline over ``p`` devices, through the cache."""
+
+    def pack(digest, key, seconds, cache_):
+        t0 = time.perf_counter()
+        g2, perm = relabel_cached(
+            graph, digest, reorder=reorder, cyclic_p=cyclic_p, cache=cache_
+        )
+        seconds["relabel"] = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        plan = pack_oned_plan(g2, p, chunk=chunk)
+        seconds["decompose+pack"] = time.perf_counter() - t1
+        return PlanArtifact(
+            kind="oned", digest=digest, key=key, graph=g2, perm=perm,
+            plan=plan,
+        )
+
+    tail = (p, chunk, reorder, cyclic_p)
+    return _drive("oned", graph, tail, cache, pack)

@@ -1,0 +1,326 @@
+"""Composable host-planning stages (DESIGN.md §3).
+
+The pipeline is  **ingest → relabel → decompose → pack → stage**:
+
+* *ingest*    — content-digest the input graph (:mod:`.cache`);
+* *relabel*   — optional cyclic redistribution (paper §5.3 step 1) then
+  degree ordering (step 2), composed into one permutation;
+* *decompose* — the single lexsort pass over the 2D-cyclic decomposition
+  (:func:`repro.core.decomp.cyclic_coo`);
+* *pack*      — emit the stacked, padded device arrays **directly** from
+  the sorted pass (this module): one cumsum for every indptr, one
+  scatter for every index/task array — no per-block Python loops;
+* *stage*     — host→device conversion, memoized on the artifact
+  (:meth:`repro.pipeline.artifact.PlanArtifact.staged`).
+
+The packers here are the real implementations behind
+``repro.core.plan.build_plan``, ``repro.core.summa.build_summa_plan``
+and ``repro.core.onedim.build_oned_plan``; the byte-level layout
+contract (padding fills, dtypes, orderings) is pinned by
+``tests/test_pipeline.py`` against the retained loop reference.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..core.decomp import CyclicCOO, blocks_from_coo, cyclic_coo
+from ..core.graph import Graph
+from ..core.onedim import OneDPlan
+from ..core.plan import INT, PlanStats, TCPlan
+from ..core.preprocess import cyclic_relabel, degree_order
+from ..core.summa import SummaPlan
+
+__all__ = [
+    "relabel_stage",
+    "emit_block_arrays",
+    "pack_tc_plan",
+    "pack_summa_plan",
+    "pack_oned_plan",
+]
+
+
+# ======================================================================
+# relabel
+# ======================================================================
+def relabel_stage(
+    graph: Graph,
+    *,
+    reorder: bool = True,
+    cyclic_p: Optional[int] = None,
+) -> Tuple[Graph, Optional[np.ndarray]]:
+    """Paper §5.3 steps 1-2 as one composed permutation.
+
+    ``cyclic_p`` applies the initial cyclic redistribution over ``p``
+    ranks first (optional — a relabeling choice in our SPMD setting);
+    ``reorder`` then ranks vertices by non-decreasing degree.  Returns
+    the relabeled graph and the composed ``perm`` (old id → new id), or
+    ``(graph, None)`` when both steps are off.
+    """
+    perm: Optional[np.ndarray] = None
+    g = graph
+    if cyclic_p is not None:
+        perm = cyclic_relabel(g.n, cyclic_p)
+        g = g.relabel(perm, name=g.name + f"+cyc{cyclic_p}")
+    if reorder:
+        dperm = degree_order(g)
+        g = g.relabel(dperm, name=g.name + "+degord")
+        perm = dperm if perm is None else dperm[perm]
+    return g, perm
+
+
+# ======================================================================
+# pack: canonical stacked block arrays from one sorted pass
+# ======================================================================
+def emit_block_arrays(
+    coo: CyclicCOO, nnz_pad: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Stacked ``(r, c, nb+1)`` indptr and ``(r, c, nnz_pad)`` indices.
+
+    One cumsum (indptr) and one scatter (indices) over the whole sorted
+    pass; padding positions hold the ``cols_loc`` sentinel (beyond any
+    valid local column id) so padded rows stay sorted for the
+    binary-search probe.
+    """
+    rc = coo.r * coo.c
+    nb = coo.rows_loc
+    indptr = np.zeros((rc, nb + 1), dtype=INT)
+    np.cumsum(coo.rowcnt, axis=1, out=indptr[:, 1:])
+    indices = np.full((rc, nnz_pad), coo.cols_loc, dtype=INT)
+    indices[coo.bid_s, coo.offsets()] = coo.lj_s
+    return (
+        indptr.reshape(coo.r, coo.c, nb + 1),
+        indices.reshape(coo.r, coo.c, nnz_pad),
+    )
+
+
+def _emit_tasks(
+    coo: CyclicCOO, tmax: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-block task lists ``(m_ti, m_tj, m_cnt)`` by direct scatter."""
+    rc = coo.r * coo.c
+    m_ti = np.zeros((rc, tmax), dtype=INT)
+    m_tj = np.zeros((rc, tmax), dtype=INT)
+    offs = coo.offsets()
+    m_ti[coo.bid_s, offs] = coo.li_s
+    m_tj[coo.bid_s, offs] = coo.lj_s
+    return (
+        m_ti.reshape(coo.r, coo.c, tmax),
+        m_tj.reshape(coo.r, coo.c, tmax),
+        coo.counts.reshape(coo.r, coo.c).astype(INT),
+    )
+
+
+def _tc_plan_stats(coo: CyclicCOO, q: int, nnz_pad: int, tmax: int, m: int):
+    """Balance statistics (paper Tables 3/4 analogues) from the sorted
+    pass — fragment lengths come straight from ``rowcnt``."""
+    rowcnt3 = coo.rowcnt.reshape(q, q, coo.rows_loc)
+    tasks = coo.counts.reshape(q, q).astype(np.int64)
+    probe = np.zeros((q, q, q), dtype=np.int64)
+    itasks = 0
+    for x in range(q):
+        for y in range(q):
+            b = x * q + y
+            lo, hi = coo.starts[b], coo.starts[b + 1]
+            rows = coo.li_s[lo:hi]
+            cols = coo.lj_s[lo:hi]
+            for s in range(q):
+                z = (x + y + s) % q
+                la = rowcnt3[x, z][rows]
+                lb = rowcnt3[y, z][cols]
+                both = (la > 0) & (lb > 0)
+                itasks += int(both.sum())
+                probe[x, y, s] = int(np.minimum(la, lb)[both].sum())
+    tot_idx = q * q * nnz_pad
+    return PlanStats(
+        tasks_per_device=tasks,
+        nnz_per_block=tasks.copy(),
+        probe_work_per_device_shift=probe,
+        task_imbalance=float(tasks.max() / max(1.0, tasks.mean())),
+        probe_imbalance=float(
+            probe.sum(axis=2).max() / max(1.0, probe.sum(axis=2).mean())
+        ),
+        intersection_tasks_total=itasks,
+        padding_fraction_indices=float(1.0 - m / max(1, tot_idx)),
+        padding_fraction_tasks=float(1.0 - m / max(1, q * q * tmax)),
+    )
+
+
+def pack_tc_plan(
+    graph: Graph,
+    q: int,
+    *,
+    skew: bool = True,
+    chunk: int = 512,
+    with_stats: bool = True,
+    keep_blocks: bool = True,
+    coo: Optional[CyclicCOO] = None,
+) -> TCPlan:
+    """Vectorized 2D-cyclic planner: the decompose+pack stages for the
+    Cannon/2.5D family (see :func:`repro.core.plan.build_plan` for the
+    placement semantics it implements).
+
+    Emits the stacked ``(q, q, ...)`` device arrays directly from one
+    lexsorted pass: the canonical block family is packed once and the
+    (skewed) A/B placements are fancy-indexed gathers of it.
+    """
+    n, m = graph.n, graph.m
+    if coo is None:
+        coo = cyclic_coo(graph, q, q)
+    nb = coo.rows_loc
+    nnz_pad = max(1, coo.nnz_max)
+    tmax = nnz_pad
+
+    c_ptr, c_idx = emit_block_arrays(coo, nnz_pad)
+    x = np.arange(q)[:, None]
+    y = np.arange(q)[None, :]
+    if skew:
+        z = (x + y) % q
+        a_indptr, a_indices = c_ptr[x, z], c_idx[x, z]
+        b_indptr, b_indices = c_ptr[y, z], c_idx[y, z]
+    else:
+        a_indptr, a_indices = c_ptr.copy(), c_idx.copy()
+        b_indptr, b_indices = c_ptr[y, x], c_idx[y, x]
+
+    m_ti, m_tj, m_cnt = _emit_tasks(coo, tmax)
+    dmax = max(1, coo.row_len_max)
+
+    stats = _tc_plan_stats(coo, q, nnz_pad, tmax, m) if with_stats else None
+    blocks = blocks_from_coo(coo) if keep_blocks else None
+
+    return TCPlan(
+        n=n,
+        m=m,
+        q=q,
+        nb=nb,
+        nnz_pad=nnz_pad,
+        tmax=tmax,
+        dmax=dmax,
+        chunk=min(chunk, tmax),
+        a_indptr=a_indptr,
+        a_indices=a_indices,
+        b_indptr=b_indptr,
+        b_indices=b_indices,
+        m_ti=m_ti,
+        m_tj=m_tj,
+        m_cnt=m_cnt,
+        stats=stats,
+        blocks=blocks,
+    )
+
+
+def pack_summa_plan(
+    graph: Graph, r: int, c: int, *, chunk: int = 512
+) -> SummaPlan:
+    """Vectorized SUMMA planner (semantics of
+    :func:`repro.core.summa.build_summa_plan`): A/mask blocks from one
+    ``(r, c)`` pass, B panels gathered from one ``(c, c)`` pass."""
+    n, m = graph.n, graph.m
+    nb_r = -(-n // r)
+    nb_c = -(-n // c)
+    npan = -(-c // r)
+
+    acoo = cyclic_coo(graph, r, c)
+    bcoo = cyclic_coo(graph, c, c)
+    a_nnz_pad = max(1, acoo.nnz_max)
+    b_nnz_pad = max(1, bcoo.nnz_max)
+    tmax = a_nnz_pad
+
+    a_indptr, a_indices = emit_block_arrays(acoo, a_nnz_pad)
+    m_ti, m_tj, m_cnt = _emit_tasks(acoo, tmax)
+
+    cb_ptr, cb_idx = emit_block_arrays(bcoo, b_nnz_pad)
+    b_indptr = np.zeros((r, c, npan, nb_c + 1), dtype=INT)
+    b_indices = np.full((r, c, npan, b_nnz_pad), nb_c, dtype=INT)
+    for kc in range(c):  # panel owner mapping: kc -> (row kc % r, slot kc // r)
+        b_indptr[kc % r, :, kc // r] = cb_ptr[:, kc]
+        b_indices[kc % r, :, kc // r] = cb_idx[:, kc]
+
+    dmax = max(1, acoo.row_len_max, bcoo.row_len_max)
+    return SummaPlan(
+        n=n,
+        m=m,
+        r=r,
+        c=c,
+        nb_r=nb_r,
+        nb_c=nb_c,
+        npan=npan,
+        a_nnz_pad=a_nnz_pad,
+        b_nnz_pad=b_nnz_pad,
+        tmax=tmax,
+        dmax=dmax,
+        chunk=min(chunk, tmax),
+        a_indptr=a_indptr,
+        a_indices=a_indices,
+        b_indptr=b_indptr,
+        b_indices=b_indices,
+        m_ti=m_ti,
+        m_tj=m_tj,
+        m_cnt=m_cnt,
+    )
+
+
+def pack_oned_plan(graph: Graph, p: int, *, chunk: int = 512) -> OneDPlan:
+    """Vectorized 1D planner (semantics of
+    :func:`repro.core.onedim.build_oned_plan`): the per-device row CSR
+    and the owner-grouped task lists are both single-sort scatters —
+    the old per-edge Python fill loop is gone."""
+    n, m = graph.n, graph.m
+    nb = -(-n // p)
+    i = graph.edges[:, 0]
+    j = graph.edges[:, 1]
+    own = i % p
+
+    # per-device CSR over local rows, global sorted cols
+    order = np.lexsort((j, i, own))
+    i_s, j_s, own_s = i[order], j[order], own[order]
+    dev_cnt = np.bincount(own_s, minlength=p)
+    nnz_pad = max(1, int(dev_cnt.max()) if m else 0)
+    dev_starts = np.zeros(p + 1, dtype=np.int64)
+    np.cumsum(dev_cnt, out=dev_starts[1:])
+    rowcnt = np.bincount(own_s * nb + i_s // p, minlength=p * nb).reshape(p, nb)
+    indptr = np.zeros((p, nb + 1), dtype=INT)
+    np.cumsum(rowcnt, axis=1, out=indptr[:, 1:])
+    indices = np.full((p, nnz_pad), n + 1, dtype=INT)
+    indices[own_s, np.arange(m, dtype=np.int64) - dev_starts[own_s]] = j_s
+
+    # task groups: device d = i%p, group o = j%p (stable in edge order)
+    gid = own * p + j % p
+    gorder = np.argsort(gid, kind="stable")
+    gid_s = gid[gorder]
+    gcnt = np.bincount(gid_s, minlength=p * p)
+    gmax = max(1, int(gcnt.max()) if m else 0)
+    gstarts = np.zeros(p * p + 1, dtype=np.int64)
+    np.cumsum(gcnt, out=gstarts[1:])
+    goffs = np.arange(m, dtype=np.int64) - gstarts[gid_s]
+    t_i = np.zeros((p * p, gmax), dtype=INT)
+    t_j = np.zeros((p * p, gmax), dtype=INT)
+    t_i[gid_s, goffs] = i[gorder] // p
+    t_j[gid_s, goffs] = j[gorder] // p
+
+    dmax = max(1, int(rowcnt.max()) if m else 0)
+    return OneDPlan(
+        n=n,
+        m=m,
+        p=p,
+        nb=nb,
+        nnz_pad=nnz_pad,
+        gmax=gmax,
+        dmax=dmax,
+        chunk=min(chunk, gmax),
+        indptr=indptr,
+        indices=indices,
+        t_i=t_i.reshape(p, p, gmax),
+        t_j=t_j.reshape(p, p, gmax),
+        t_cnt=gcnt.reshape(p, p).astype(INT),
+    )
+
+
+def timed(name: str, seconds: dict, fn, *args, **kwargs):
+    """Run one stage, recording its wall time under ``name``."""
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    seconds[name] = time.perf_counter() - t0
+    return out

@@ -135,3 +135,36 @@ def test_custom_schedule_registration():
         from repro.core.api import _SCHEDULES
 
         _SCHEDULES.pop("seven", None)
+
+
+def test_legacy_runner_receives_relabeled_graph():
+    """Runners registered without ``plans_itself`` keep the pre-pipeline
+    contract: ``count_triangles`` relabels before dispatch, so
+    ``reorder=True`` still applies the paper's §5.3 degree ordering."""
+    import numpy as np
+
+    from repro.core.api import register_schedule
+    from repro.pipeline import relabel_stage
+
+    seen = {}
+
+    def runner(graph, mesh, ctx):
+        seen["graph"] = graph
+        # the relabel options were consumed before dispatch
+        assert ctx.reorder is False and ctx.cyclic_p is None
+        return 0, None
+
+    register_schedule("legacy", runner)
+    try:
+        g = _graph("karate")
+        expected, _ = relabel_stage(g, reorder=True, cyclic_p=None)
+
+        count_triangles(g, q=1, schedule="legacy", reorder=True)
+        np.testing.assert_array_equal(seen["graph"].edges, expected.edges)
+
+        count_triangles(g, q=1, schedule="legacy", reorder=False)
+        np.testing.assert_array_equal(seen["graph"].edges, g.edges)
+    finally:
+        from repro.core.api import _SCHEDULES
+
+        _SCHEDULES.pop("legacy", None)
