@@ -2,10 +2,21 @@
 
 Records ``BENCH_engine.json`` — per-schedule triangle-count wall-time
 (tct_seconds, plus preprocess ppt_seconds) on RMAT scales 12-16 at q=3
-(9 XLA host devices per subprocess) — so subsequent perf PRs have a
-trajectory to compare against.
+(9 XLA host devices per subprocess), each cell annotated with the
+engine's sparsity-skip accounting (``skipped_steps`` of
+``schedule_steps`` per-(device, step) mask entries) — plus a
+``block_sparse`` fixture section measuring the two engine levers in
+isolation:
+
+* ``skip``    — masked vs unmasked wall-time on a block-diagonal graph
+  (``cliques:3,60``) where all but q of the q^3 (device, shift) pairs
+  are provably empty;
+* ``overlap`` — double-buffered vs single-buffered Cannon body on the
+  same fixture (communication/compute overlap).
 
     python -m benchmarks.engine_baseline [--quick] [--out BENCH_engine.json]
+    python -m benchmarks.engine_baseline --smoke   # CI guard: fails if the
+        masked engine miscounts or skips zero steps on the fixture
 """
 from __future__ import annotations
 
@@ -19,6 +30,74 @@ GRID = 3  # q=3 -> 9 ranks
 SCALES_FULL = [12, 13, 14, 15, 16]
 SCALES_QUICK = [12, 13]
 SCHEDULES = ["cannon", "summa", "oned"]
+BLOCK_SPARSE_GRAPH = "cliques:3,60"
+
+
+def _cell(r: dict) -> dict:
+    cell = dict(
+        tct_seconds=r["tct_seconds"],
+        ppt_seconds=r["ppt_seconds"],
+        triangles=r["triangles"],
+    )
+    if "schedule_steps" in r:
+        cell["schedule_steps"] = r["schedule_steps"]
+        cell["skipped_steps"] = r["skipped_steps"]
+    return cell
+
+
+def block_sparse_fixture(graph: str = BLOCK_SPARSE_GRAPH, grid: int = GRID):
+    """Measure the skip and overlap levers in isolation on the
+    block-diagonal fixture; verifies every variant against the oracle."""
+    runs = {
+        "masked": (),
+        "unmasked": ("--no-skip-mask",),
+        "single_buffer": ("--no-double-buffer",),
+    }
+    out = {"graph": graph, "grid": grid}
+    counts = {}
+    for name, extra in runs.items():
+        # --repeat 3: tct is the warm third count (pure dispatch) so the
+        # skip/overlap comparison is not drowned in trace+compile time
+        r = run_tc_subprocess(
+            graph, grid, extra=("--verify", "--repeat", "3") + extra
+        )
+        counts[name] = r["triangles"]
+        out[name] = _cell(r)
+        print(csv_row(f"engine/block_sparse/{name}", r["tct_seconds"] * 1e6,
+                      f"triangles={r['triangles']}"))
+    assert len(set(counts.values())) == 1, (
+        f"masked engine miscounts on {graph}: {counts}"
+    )
+    out["skip"] = dict(
+        skipped_steps=out["masked"]["skipped_steps"],
+        schedule_steps=out["masked"]["schedule_steps"],
+        tct_masked=out["masked"]["tct_seconds"],
+        tct_unmasked=out["unmasked"]["tct_seconds"],
+    )
+    out["overlap"] = dict(
+        tct_double_buffer=out["masked"]["tct_seconds"],
+        tct_single_buffer=out["single_buffer"]["tct_seconds"],
+    )
+    return out
+
+
+def smoke() -> dict:
+    """CI guard: the masked+double-buffered engine must count the
+    block-sparse fixture correctly (asserted via --verify inside each
+    subprocess and cross-variant agreement here) and must actually skip
+    steps on it."""
+    bs = block_sparse_fixture()
+    skipped = bs["skip"]["skipped_steps"]
+    if skipped <= 0:
+        raise SystemExit(
+            f"engine smoke FAILED: skipped_steps={skipped} on the "
+            f"block-sparse fixture {bs['graph']} (expected > 0)"
+        )
+    print(
+        f"# engine smoke ok: {skipped}/{bs['skip']['schedule_steps']} "
+        "device-steps skipped, all variants agree"
+    )
+    return bs
 
 
 def run(quick: bool = False, out: str = "BENCH_engine.json") -> dict:
@@ -34,11 +113,7 @@ def run(quick: bool = False, out: str = "BENCH_engine.json") -> dict:
         graph = f"rmat:{scale}"
         for sched in SCHEDULES:
             r = run_tc_subprocess(graph, GRID, schedule=sched)
-            cell = dict(
-                tct_seconds=r["tct_seconds"],
-                ppt_seconds=r["ppt_seconds"],
-                triangles=r["triangles"],
-            )
+            cell = _cell(r)
             report["schedules"][sched][str(scale)] = cell
             print(
                 csv_row(
@@ -51,6 +126,7 @@ def run(quick: bool = False, out: str = "BENCH_engine.json") -> dict:
             report["schedules"][s][str(scale)]["triangles"] for s in SCHEDULES
         }
         assert len(counts) == 1, f"schedules disagree at scale {scale}: {counts}"
+    report["block_sparse"] = block_sparse_fixture()
     with open(out, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
     print(f"# wrote {out}")
@@ -66,4 +142,7 @@ if __name__ == "__main__":
     out = "BENCH_engine.json"
     if "--out" in argv:
         out = argv[argv.index("--out") + 1]
-    main(quick="--quick" in argv or "--full" not in argv, out=out)
+    if "--smoke" in argv:
+        smoke()
+    else:
+        main(quick="--quick" in argv or "--full" not in argv, out=out)

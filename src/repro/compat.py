@@ -31,6 +31,7 @@ import jax.numpy as jnp
 __all__ = [
     "AxisType",
     "axis_size",
+    "canonical_count_dtype",
     "check_count_overflow",
     "cost_analysis",
     "default_count_dtype",
@@ -164,6 +165,22 @@ def default_count_dtype():
     """int64 when x64 is enabled, else int32 (callers must then guard the
     final count with :func:`check_count_overflow`)."""
     return jnp.int64 if x64_enabled() else jnp.int32
+
+
+def canonical_count_dtype(dtype=None):
+    """Resolve a requested count dtype to what this process supports.
+
+    ``None`` means :func:`default_count_dtype`.  An explicit int64 request
+    under x64-off is canonicalized to int32 *here*, once, at the build
+    boundary — XLA would truncate it anyway, but doing it eagerly keeps
+    every ``jnp.zeros``/``astype`` in the kernels warning-free, which in
+    turn lets the test suite treat the "Explicitly requested dtype ...
+    truncated" UserWarning as an error (an accidental-truncation tripwire).
+    The int32 fallback stays guarded by :func:`check_count_overflow`.
+    """
+    if dtype is None:
+        return default_count_dtype()
+    return jnp.dtype(jax.dtypes.canonicalize_dtype(jnp.dtype(dtype)))
 
 
 _INT32_MAX = 2**31 - 1

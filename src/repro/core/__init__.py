@@ -18,6 +18,13 @@ from .api import (  # noqa: F401
     register_schedule,
 )
 from .graph import Graph, triangle_count_oracle  # noqa: F401
-from .generators import erdos_renyi, graph_from_spec, named_graph, rmat  # noqa: F401
+from .generators import (  # noqa: F401
+    erdos_renyi,
+    graph_from_spec,
+    named_graph,
+    residue_cliques,
+    rmat,
+    star,
+)
 from .plan import TCPlan, analytic_plan, as_plan, build_plan  # noqa: F401
 from .preprocess import degree_order, preprocess  # noqa: F401

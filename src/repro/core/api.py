@@ -103,6 +103,10 @@ class RunContext:
     probe_shorter: bool
     count_dtype: object
     plan: Optional[TCPlan] = None
+    # engine knobs: sparsity-aware step skipping (None = auto from the
+    # plan's staged masks) and the double-buffered Cannon scan body
+    use_step_mask: Optional[bool] = None
+    double_buffer: bool = True
     # pipeline options: runners plan the *raw* graph through
     # repro.pipeline with these, so cache hits skip the relabel too
     reorder: bool = True
@@ -193,7 +197,12 @@ def _run_cannon(graph: Graph, mesh, ctx: RunContext):
         )
         ctx.mark_counting()
         fn = ctx.memo(
-            ("dense_fn", mesh), lambda: build_cannon_dense_fn(plan, mesh)
+            ("dense_fn", mesh, ctx.use_step_mask, ctx.double_buffer),
+            lambda: build_cannon_dense_fn(
+                plan, mesh,
+                use_step_mask=ctx.use_step_mask,
+                double_buffer=ctx.double_buffer,
+            ),
         )
         return int(fn(**staged)), plan
     if ctx.method == "tile":
@@ -212,10 +221,13 @@ def _run_cannon(graph: Graph, mesh, ctx: RunContext):
         interpret = jax.default_backend() != "tpu"
         ctx.mark_counting()
         fn = ctx.memo(
-            ("tile_fn", mesh, interpret, str(ctx.count_dtype)),
+            ("tile_fn", mesh, interpret, str(ctx.count_dtype),
+             ctx.use_step_mask, ctx.double_buffer),
             lambda: build_cannon_tile_fn(
                 plan, tp, mesh, interpret=interpret,
                 count_dtype=ctx.count_dtype,
+                use_step_mask=ctx.use_step_mask,
+                double_buffer=ctx.double_buffer,
             ),
         )
         return int(fn(**staged)), plan
@@ -244,7 +256,7 @@ def _run_cannon(graph: Graph, mesh, ctx: RunContext):
     ctx.mark_counting()
     fn = ctx.memo(
         ("fn", mesh, ctx.method, ctx.probe_shorter, str(ctx.count_dtype),
-         pod_axis),
+         pod_axis, ctx.use_step_mask, ctx.double_buffer),
         lambda: cannon_mod.build_cannon_fn(
             plan,
             mesh,
@@ -252,6 +264,8 @@ def _run_cannon(graph: Graph, mesh, ctx: RunContext):
             method=ctx.method,
             probe_shorter=ctx.probe_shorter,
             count_dtype=ctx.count_dtype,
+            use_step_mask=ctx.use_step_mask,
+            double_buffer=ctx.double_buffer,
         ),
     )
     return int(fn(**staged)), plan
@@ -271,13 +285,15 @@ def _run_summa(graph: Graph, mesh, ctx: RunContext):
     staged = ctx.artifact.staged()
     ctx.mark_counting()
     fn = ctx.memo(
-        ("fn", mesh, ctx.method, ctx.probe_shorter, str(ctx.count_dtype)),
+        ("fn", mesh, ctx.method, ctx.probe_shorter, str(ctx.count_dtype),
+         ctx.use_step_mask),
         lambda: build_summa_fn(
             splan,
             mesh,
             method=ctx.method,
             probe_shorter=ctx.probe_shorter,
             count_dtype=ctx.count_dtype,
+            use_step_mask=ctx.use_step_mask,
         ),
     )
     return int(fn(**staged)), splan
@@ -298,13 +314,14 @@ def _run_oned(graph: Graph, mesh, ctx: RunContext):
     ctx.mark_counting()
     fn = ctx.memo(
         ("fn", flat_mesh, ctx.method, ctx.probe_shorter,
-         str(ctx.count_dtype)),
+         str(ctx.count_dtype), ctx.use_step_mask),
         lambda: build_oned_fn(
             oplan,
             flat_mesh,
             method=ctx.method,
             probe_shorter=ctx.probe_shorter,
             count_dtype=ctx.count_dtype,
+            use_step_mask=ctx.use_step_mask,
         ),
     )
     return int(fn(**staged)), oplan
@@ -346,6 +363,8 @@ def count_triangles(
     cyclic_p: Optional[int] = None,
     count_dtype=None,
     plan: Optional[TCPlan] = None,
+    use_step_mask: Optional[bool] = None,
+    double_buffer: bool = True,
     cache=None,
 ) -> TCResult:
     """Count triangles with the paper's 2D algorithm.
@@ -355,7 +374,11 @@ def count_triangles(
     :func:`available_schedules`); ``method`` picks the count kernel
     ("search", "search2", "global", and on Cannon also "dense"/"tile").
     ``cyclic_p`` enables the paper's initial cyclic redistribution
-    (§5.3 step 1) as the pipeline's first relabel stage.  Planning goes
+    (§5.3 step 1) as the pipeline's first relabel stage.
+    ``use_step_mask`` controls sparsity-aware step skipping (None =
+    auto: on when the plan staged ``step_keep`` masks; False forces the
+    unmasked engine); ``double_buffer`` selects Cannon's
+    communication-overlapped scan body.  Planning goes
     through the content-addressed plan cache (``cache=None`` uses the
     process-wide default — pass a ``repro.pipeline.PlanCache`` to
     isolate, or one with ``maxsize=0`` to disable): repeated counts of
@@ -389,6 +412,8 @@ def count_triangles(
         probe_shorter=probe_shorter,
         count_dtype=count_dtype,
         plan=plan,
+        use_step_mask=use_step_mask,
+        double_buffer=double_buffer,
         reorder=reorder,
         cyclic_p=cyclic_p,
         cache=cache,

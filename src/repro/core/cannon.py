@@ -58,7 +58,9 @@ def pod_stack_arrays(arrays: Dict, npods: int, q: int) -> Dict:
 
     ``A0_t[x, y] = A0[x, (y+t) % q]`` and ``B0_t[x, y] = B0[(x+t) % q, y]``
     put pod ``t`` at Cannon skew offset ``t`` so it can execute shifts
-    ``t, t+npods, ...`` only.
+    ``t, t+npods, ...`` only.  The planner's ``step_keep`` mask is
+    pod-strided the same way: pod ``t``'s local step ``s`` is global
+    shift ``t + s * npods``, so its mask slice is ``step_keep[..., t::npods]``.
     """
     import numpy as np
 
@@ -71,13 +73,20 @@ def pod_stack_arrays(arrays: Dict, npods: int, q: int) -> Dict:
         out[key] = np.stack(
             [np.roll(arrays[key], -t, axis=0) for t in range(npods)]
         )
+    if "step_keep" in arrays:
+        out["step_keep"] = np.stack(
+            [arrays["step_keep"][:, :, t::npods] for t in range(npods)]
+        )
     return out
 
 
-def _cannon_parts(plan, mesh, *, row_axis, col_axis, pod_axis):
+def _cannon_parts(plan, mesh, *, row_axis, col_axis, pod_axis,
+                  double_buffer=True):
     axes = GridAxes(row_axis, col_axis, pod_axis)
     npods = mesh.shape[pod_axis] if pod_axis else 1
-    return axes, CannonSchedule(q=plan.q, axes=axes, npods=npods)
+    return axes, CannonSchedule(
+        q=plan.q, axes=axes, npods=npods, double_buffer=double_buffer
+    )
 
 
 def _coerce(plan):
@@ -101,6 +110,8 @@ def build_cannon_fn(
     tile_kernel_mode: Optional[str] = None,
     compress_lengths: bool = False,
     batched: bool = False,
+    use_step_mask: Optional[bool] = None,
+    double_buffer: bool = True,
 ):
     """Build the jitted SPMD counting function for ``plan`` on ``mesh``.
 
@@ -116,11 +127,18 @@ def build_cannon_fn(
     ``compress_lengths`` (§Perf H1b) ships row *lengths as uint16 pairs*
     instead of the int32 indptr inside the shift blob, cutting shifted
     bytes by ~(nb*2)/(nb*4+nnz*4).
+    ``use_step_mask=None`` auto-enables sparsity-aware step skipping
+    when the plan carries ``step_keep``; ``double_buffer`` selects the
+    communication-overlapped two-generation scan body (default on).
     """
     del tile_kernel_mode  # tile path has its own builder below
     plan = _coerce(plan)
+    from .plan import resolve_step_mask
+
+    use_step_mask = resolve_step_mask(plan, use_step_mask)
     axes, schedule = _cannon_parts(
-        plan, mesh, row_axis=row_axis, col_axis=col_axis, pod_axis=pod_axis
+        plan, mesh, row_axis=row_axis, col_axis=col_axis, pod_axis=pod_axis,
+        double_buffer=double_buffer,
     )
     kernel = make_csr_kernel(
         method,
@@ -142,6 +160,7 @@ def build_cannon_fn(
         count_dtype=count_dtype,
         reduction=Reduction(global_sum=reduce_global),
         batched=batched,
+        use_step_mask=use_step_mask,
     )
 
 
@@ -154,18 +173,28 @@ def build_cannon_stepper(
     method: str = "search",
     probe_shorter: bool = True,
     count_dtype=jnp.int32,
+    use_step_mask: Optional[bool] = None,
+    double_buffer: bool = True,
 ):
     """Shift-at-a-time Cannon for fault-tolerant runs.
 
-    Returns ``one_shift(state, masks) -> state`` (jitted SPMD) where state
-    = (a_ptr, a_idx, b_ptr, b_idx, partial_counts).  The host loop owns
-    the shift index, checkpointing state between shifts so a restarted job
-    resumes mid-loop (EXPERIMENTS.md §Fault-tolerance).  Same engine body
-    as :func:`build_cannon_fn` — only the loop owner differs.
+    Returns ``one_shift(state, masks, step=s) -> state`` (jitted SPMD)
+    where ``state = (*carry_arrays, partial_counts)`` — with the default
+    double-buffered schedule the carry is two payload generations
+    ``(a_ptr, a_idx, b_ptr, b_idx) x 2``, built once from the plan
+    arrays by ``one_shift.prime`` (which issues the prologue shift).
+    The host loop owns the shift index, checkpointing state between
+    shifts so a restarted job resumes mid-loop (EXPERIMENTS.md
+    §Fault-tolerance).  Same engine body as :func:`build_cannon_fn` —
+    only the loop owner differs.
     """
     plan = _coerce(plan)
+    from .plan import resolve_step_mask
+
+    use_step_mask = resolve_step_mask(plan, use_step_mask)
     axes, schedule = _cannon_parts(
-        plan, mesh, row_axis=row_axis, col_axis=col_axis, pod_axis=None
+        plan, mesh, row_axis=row_axis, col_axis=col_axis, pod_axis=None,
+        double_buffer=double_buffer,
     )
     kernel = make_csr_kernel(
         method,
@@ -175,9 +204,13 @@ def build_cannon_stepper(
         count_dtype=count_dtype,
     )
     store = CSRStore(kernel, use_blob=False)
-    # count_dtype binds only the kernel; the accumulator dtype follows the
-    # caller's acc array (the checkpointed state owns it)
-    return engine.build_engine_stepper(mesh, axes, store, schedule)
+    # count_dtype binds the kernel and the masked-step zero; the
+    # accumulator dtype follows the caller's acc array (the checkpointed
+    # state owns it)
+    return engine.build_engine_stepper(
+        mesh, axes, store, schedule,
+        count_dtype=count_dtype, use_step_mask=use_step_mask,
+    )
 
 
 def build_cannon_tile_fn(
@@ -191,24 +224,33 @@ def build_cannon_tile_fn(
     interpret: bool = True,
     count_dtype=jnp.int32,
     reduce_global: bool = True,
+    use_step_mask: Optional[bool] = None,
+    double_buffer: bool = True,
 ):
     """Cannon schedule with the Pallas bit-tile kernel as the count path.
 
     Tile stores shift exactly like the CSR blobs; the per-(device, shift)
     active-triple lists are static (planner-joined) and drive the kernel's
     scalar-prefetch grid.  ``interpret=True`` validates on CPU; on TPU pass
-    ``interpret=False`` to run the Mosaic-lowered kernel.
+    ``interpret=False`` to run the Mosaic-lowered kernel.  The skip mask
+    comes from the *CSR* plan (``plan.step_keep``); callers stage it
+    alongside the tile arrays.
     """
     del tile_plan  # shapes travel with the device arrays
     plan = _coerce(plan)
+    from .plan import resolve_step_mask
+
+    use_step_mask = resolve_step_mask(plan, use_step_mask)
     axes, schedule = _cannon_parts(
-        plan, mesh, row_axis=row_axis, col_axis=col_axis, pod_axis=None
+        plan, mesh, row_axis=row_axis, col_axis=col_axis, pod_axis=None,
+        double_buffer=double_buffer,
     )
     store = TileStore(mode=mode, interpret=interpret, count_dtype=count_dtype)
     return engine.build_engine_fn(
         mesh, axes, store, schedule,
         count_dtype=count_dtype,
         reduction=Reduction(global_sum=reduce_global),
+        use_step_mask=use_step_mask,
     )
 
 
@@ -221,15 +263,22 @@ def build_cannon_dense_fn(
     pod_axis: Optional[str] = None,
     acc_dtype=jnp.float32,
     reduce_global: bool = True,
+    use_step_mask: Optional[bool] = None,
+    double_buffer: bool = True,
 ):
     """Dense-operand Cannon (oracle path): blocks as 0/1 float matrices."""
     plan = _coerce(plan)
+    from .plan import resolve_step_mask
+
+    use_step_mask = resolve_step_mask(plan, use_step_mask)
     axes, schedule = _cannon_parts(
-        plan, mesh, row_axis=row_axis, col_axis=col_axis, pod_axis=pod_axis
+        plan, mesh, row_axis=row_axis, col_axis=col_axis, pod_axis=pod_axis,
+        double_buffer=double_buffer,
     )
     store = DenseStore(acc_dtype=acc_dtype)
     return engine.build_engine_fn(
         mesh, axes, store, schedule,
         count_dtype=acc_dtype,
         reduction=Reduction(global_sum=reduce_global),
+        use_step_mask=use_step_mask,
     )

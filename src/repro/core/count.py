@@ -24,8 +24,38 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["count_pair_dense", "count_pair_search", "gather_rows"]
+from .. import compat
+
+__all__ = [
+    "aug_key_dtype",
+    "count_pair_dense",
+    "count_pair_search",
+    "gather_rows",
+]
+
+
+def aug_key_dtype(base: int):
+    """Dtype wide enough for row-encoded keys ``row * base + col``.
+
+    Rows and cols are block-local (``< base``), so the largest key is
+    ``base**2 - 1``.  int32 covers ``base <= 46340``; beyond that the key
+    needs int64 — and if x64 is off, jax would *silently truncate* the
+    ``astype(int64)`` back to int32, wrapping keys into collisions and
+    corrupting counts (the historical bug this guard exists for).  Fail
+    loudly instead of returning garbage.
+    """
+    if base * base - 1 <= np.iinfo(np.int32).max:
+        return jnp.int32
+    if not compat.x64_enabled():
+        raise OverflowError(
+            f"row-encoded intersection keys for block size nb={base - 1} "
+            "exceed int32 (row * base + col needs int64); enable x64 "
+            "(jax.config.update('jax_enable_x64', True)) to use the "
+            "'global'/'search2' count paths on blocks this large"
+        )
+    return jnp.int64
 
 
 def count_pair_dense(a_dense, b_dense, m_dense, *, acc_dtype=jnp.float32):
@@ -169,11 +199,13 @@ def count_pair_search_global(
     tvalid_c = pos0 < tcount
     sentinel = base - 1  # never a valid column id
 
+    key_dtype = aug_key_dtype(base)
+
     def one_chunk(acc, args):
         rows_i, rows_j, valid = args
         a_vals, a_len = gather_rows(a_indptr, a_indices, rows_i, dpad, sentinel)
-        keys = rows_j[:, None].astype(jnp.int64) * base + a_vals.astype(
-            jnp.int64
+        keys = rows_j[:, None].astype(key_dtype) * base + a_vals.astype(
+            key_dtype
         )
         pos = jnp.searchsorted(aug_b, keys.reshape(-1)).reshape(keys.shape)
         hit = (
@@ -193,6 +225,7 @@ def build_aug_keys(b_indptr, b_indices):
     """Row-encoded global key array for count_pair_search_global."""
     nb = b_indptr.shape[0] - 1
     base = nb + 1
+    key_dtype = aug_key_dtype(base)
     nnz = b_indices.shape[0]
     row_of = (
         jnp.searchsorted(
@@ -200,7 +233,7 @@ def build_aug_keys(b_indptr, b_indices):
         )
         - 1
     )
-    return row_of.astype(jnp.int64) * base + b_indices.astype(jnp.int64)
+    return row_of.astype(key_dtype) * base + b_indices.astype(key_dtype)
 
 
 def count_pair_search_two_level(

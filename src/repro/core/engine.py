@@ -59,8 +59,10 @@ __all__ = [
     "RingSchedule",
     "Reduction",
     "CSR_KERNELS",
+    "MASK_NAME",
     "register_csr_kernel",
     "make_csr_kernel",
+    "masked_count",
     "build_engine_fn",
     "build_engine_stepper",
     "shift_perm",
@@ -511,17 +513,78 @@ class _Ctx:
         return jax.lax.axis_index(name)
 
 
-class ShiftSchedule:
-    """Permutation structure: yields ``(carry0, body, nsteps)`` for the
-    shared ``lax.scan`` driver; ``body(carry, step) -> (carry', count)``."""
+MASK_NAME = "step_keep"
 
-    def make_scan(self, store: OperandStore, local: Dict, ctx: _Ctx):
+
+def masked_count(store, state, local, step, ctx, step_keep, count_dtype):
+    """One schedule step's count, short-circuited by the planner's mask.
+
+    ``step_keep`` is the device-local ``(nsteps,)`` bool vector staged by
+    the planner (True = this step's incoming block pair can contribute);
+    ``lax.cond`` with the traced predicate skips the whole count kernel
+    on masked-off steps.  Collectives (ppermute shifts, SUMMA's psum
+    broadcasts) must stay *outside* — every device participates in the
+    exchange even when its own count is skipped, so the SPMD program
+    stays uniform.
+    """
+    if step_keep is None:
+        return store.count(state, local, step, ctx)
+    return jax.lax.cond(
+        step_keep[step],
+        lambda: store.count(state, local, step, ctx),
+        lambda: jnp.zeros((), jnp.dtype(count_dtype)),
+    )
+
+
+class ShiftSchedule:
+    """Permutation structure for the shared ``lax.scan`` driver.
+
+    Split into three hooks so the full-scan engine and the host-driven
+    fault-tolerance stepper share one body:
+
+    * ``init_carry(store, local, ctx)`` — the scan carry at step 0
+      (may issue prologue collectives, e.g. Cannon's first in-flight
+      shift when double-buffered);
+    * ``carry_template(payload)`` — the carry's pytree *structure* only
+      (no computation; the stepper uses it to rebuild the carry from
+      host-checkpointed leaves);
+    * ``make_body(store, local, ctx, step_keep=..., count_dtype=...)`` —
+      ``body(carry, step) -> (carry', count)``, consuming the planner's
+      per-step skip mask via :func:`masked_count`.
+
+    ``make_scan`` composes them into the ``(carry0, body, nsteps)``
+    triple the engine's scan driver consumes.
+    """
+
+    def init_carry(self, store: OperandStore, local: Dict, ctx: _Ctx):
+        return store.payload(local)
+
+    def carry_template(self, payload):
+        return payload
+
+    def make_body(self, store: OperandStore, local: Dict, ctx: _Ctx, *,
+                  step_keep=None, count_dtype=jnp.int32):
         raise NotImplementedError
+
+    def make_scan(self, store: OperandStore, local: Dict, ctx: _Ctx, *,
+                  step_keep=None, count_dtype=jnp.int32):
+        body = self.make_body(
+            store, local, ctx, step_keep=step_keep, count_dtype=count_dtype
+        )
+        return self.init_carry(store, local, ctx), body, self.nsteps
 
 
 @dataclasses.dataclass
 class CannonSchedule(ShiftSchedule):
     """Cannon's q-step {count, shift-A-left, shift-B-up} rotation.
+
+    ``double_buffer=True`` (default) runs the communication-overlapped
+    body: the carry holds *two* payload generations ``(cur, inflight)``
+    — ``cur`` is counted at step ``s`` while ``inflight`` (step s+1's
+    blocks, requested one step earlier) is already being shifted toward
+    step s+2.  Count and collective touch disjoint buffers, so the
+    overlap is structural, not a scheduling hope.  Costs one extra
+    (discarded) shift at the end of the rotation.
 
     Multi-pod (2.5D): blocks are replicated over the pod axis, pod ``t``
     starts at skew offset ``t`` (see ``pod_stack_arrays``) and executes
@@ -531,32 +594,65 @@ class CannonSchedule(ShiftSchedule):
     q: int
     axes: GridAxes
     npods: int = 1
+    double_buffer: bool = True
 
     @property
     def nsteps(self) -> int:
         assert self.q % self.npods == 0, "pods must divide the grid dimension"
         return self.q // self.npods
 
-    def make_scan(self, store, local, ctx):
+    def _shift(self, payload):
         perm = shift_perm(self.q, self.npods)
-        carry0 = store.payload(local)
+        a_state, b_state = payload
+        return (
+            tree_ppermute(a_state, self.axes.col, perm),
+            tree_ppermute(b_state, self.axes.row, perm),
+        )
 
-        def body(carry, s):
-            a_state, b_state = carry
-            # issue the shift for the *next* step first: independent of
-            # the local count, so XLA may overlap collective + compute.
-            a_next = tree_ppermute(a_state, self.axes.col, perm)
-            b_next = tree_ppermute(b_state, self.axes.row, perm)
-            c = store.count((a_state, b_state), local, s, ctx)
-            return (a_next, b_next), c
+    def init_carry(self, store, local, ctx):
+        payload = store.payload(local)
+        if not self.double_buffer:
+            return payload
+        # prologue: put step 1's blocks in flight before step 0 counts
+        return (payload, self._shift(payload))
 
-        return carry0, body, self.nsteps
+    def carry_template(self, payload):
+        return (payload, payload) if self.double_buffer else payload
+
+    def make_body(self, store, local, ctx, *, step_keep=None,
+                  count_dtype=jnp.int32):
+        if self.double_buffer:
+
+            def body(carry, s):
+                cur, inflight = carry
+                # issue step s+2's shift from the independent buffer
+                # BEFORE counting step s — collective ∥ intersection.
+                nxt = self._shift(inflight)
+                c = masked_count(
+                    store, cur, local, s, ctx, step_keep, count_dtype
+                )
+                return (inflight, nxt), c
+
+        else:
+
+            def body(carry, s):
+                nxt = self._shift(carry)
+                c = masked_count(
+                    store, carry, local, s, ctx, step_keep, count_dtype
+                )
+                return nxt, c
+
+        return body
 
 
 @dataclasses.dataclass
 class SummaSchedule(ShiftSchedule):
     """SUMMA broadcast rounds on an ``r x c`` grid: ``c`` steps, each a
-    one-hot-psum panel broadcast realized by the store's ``select``."""
+    one-hot-psum panel broadcast realized by the store's ``select``.
+
+    The broadcast itself is unconditional (every device contributes to
+    the psum); only the count is skip-masked.
+    """
 
     r: int
     c: int
@@ -566,14 +662,16 @@ class SummaSchedule(ShiftSchedule):
     def nsteps(self) -> int:
         return self.c
 
-    def make_scan(self, store, local, ctx):
-        carry0 = store.payload(local)  # () — nothing travels
-
+    def make_body(self, store, local, ctx, *, step_keep=None,
+                  count_dtype=jnp.int32):
         def body(carry, z):
             state = store.select(local, z, ctx)
-            return carry, store.count(state, local, z, ctx)
+            c = masked_count(
+                store, state, local, z, ctx, step_keep, count_dtype
+            )
+            return carry, c
 
-        return carry0, body, self.nsteps
+        return body
 
 
 @dataclasses.dataclass
@@ -588,15 +686,18 @@ class RingSchedule(ShiftSchedule):
     def nsteps(self) -> int:
         return self.p
 
-    def make_scan(self, store, local, ctx):
+    def make_body(self, store, local, ctx, *, step_keep=None,
+                  count_dtype=jnp.int32):
         perm = shift_perm(self.p, 1)
-        carry0 = store.payload(local)
 
         def body(carry, t):
             nxt = tree_ppermute(carry, self.axes.axis, perm)
-            return nxt, store.count(carry, local, t, ctx)
+            c = masked_count(
+                store, carry, local, t, ctx, step_keep, count_dtype
+            )
+            return nxt, c
 
-        return carry0, body, self.nsteps
+        return body
 
 
 # ======================================================================
@@ -650,12 +751,19 @@ def build_engine_fn(
     count_dtype=jnp.int32,
     reduction: Optional[Reduction] = None,
     batched: bool = False,
+    use_step_mask: bool = False,
 ):
     """Generate the jitted SPMD counting function for one composition.
 
     Returns ``call(**device_arrays)`` (also accepts positional arrays in
     ``call.ordered`` order) yielding the global count scalar, or
     per-device counts with ``Reduction(global_sum=False)``.
+
+    ``use_step_mask=True`` adds a ``step_keep`` device array to the call
+    (the planner's per-device per-step skip mask, sharded like the grid:
+    ``(..., nsteps)`` bools behind ``P(*axes.all)``); the schedule body
+    then short-circuits the count kernel on masked-off steps via
+    ``lax.cond`` while still performing every exchange collectively.
 
     ``batched=True`` builds the multi-graph variant: every device array
     carries an unsharded leading batch axis (graphs padded to shared
@@ -665,12 +773,20 @@ def build_engine_fn(
     compiled executable and one dispatch for the whole batch.
     """
     reduction = reduction or Reduction()
-    ordered = list(store.names)
+    count_dtype = compat.canonical_count_dtype(count_dtype)
+    ordered = list(store.names) + ([MASK_NAME] if use_step_mask else [])
     specs = store.in_specs(axes)
+    mask_lead = len(axes.all)
+    if use_step_mask:
+        specs = dict(specs, **{MASK_NAME: P(*axes.all)})
     ctx = _Ctx(axes)
 
     def core(local):
-        carry0, body, nsteps = schedule.make_scan(store, local, ctx)
+        local = dict(local)
+        keep = local.pop(MASK_NAME, None)
+        carry0, body, nsteps = schedule.make_scan(
+            store, local, ctx, step_keep=keep, count_dtype=count_dtype
+        )
         _, per_step = jax.lax.scan(body, carry0, jnp.arange(nsteps))
         total = jnp.sum(per_step, dtype=count_dtype)
         return reduction.apply(total, axes)
@@ -682,11 +798,16 @@ def build_engine_fn(
 
         def spmd(*args):
             named = dict(zip(ordered, args))
+            keep = named.pop(MASK_NAME, None)
             # strip the size-1 mesh block dims that follow the batch axis
             local = {
                 k: v.reshape((v.shape[0],) + v.shape[1 + store.lead(k, axes):])
                 for k, v in named.items()
             }
+            if keep is not None:
+                local[MASK_NAME] = keep.reshape(
+                    (keep.shape[0],) + keep.shape[1 + mask_lead:]
+                )
             return jax.lax.map(core, local)
 
         in_specs = tuple(P(None, *specs[k]) for k in ordered)
@@ -694,7 +815,12 @@ def build_engine_fn(
     else:
 
         def spmd(*args):
-            return core(store.localize(dict(zip(ordered, args)), axes))
+            named = dict(zip(ordered, args))
+            keep = named.pop(MASK_NAME, None)
+            local = store.localize(named, axes)
+            if keep is not None:
+                local[MASK_NAME] = _squeeze(keep, mask_lead)
+            return core(local)
 
         in_specs = tuple(specs[k] for k in ordered)
         out_specs = reduction.out_specs(axes)
@@ -716,54 +842,118 @@ def build_engine_stepper(
     axes,
     store: OperandStore,
     schedule: ShiftSchedule,
+    *,
+    count_dtype=jnp.int32,
+    use_step_mask: bool = False,
 ):
     """One-schedule-step-at-a-time variant for fault-tolerant runs.
 
-    Reuses the exact scan body of ``schedule`` but executes a single step
-    per call with the carry held by the *host* as explicit arrays, so the
-    host loop owns the shift index and can checkpoint state between
-    shifts (a restarted job resumes mid-loop).
+    Reuses the exact scan body of ``schedule`` (``make_body``) but
+    executes a single step per call with the scan *carry* held by the
+    host as explicit arrays, so the host loop owns the shift index and
+    can checkpoint state between shifts (a restarted job resumes
+    mid-loop).  With a double-buffered :class:`CannonSchedule` the carry
+    is two payload generations — both buffers checkpoint and round-trip
+    exactly like any other state arrays.
 
     Requires a store whose payload is identity-structured (raw arrays,
     e.g. ``CSRStore(use_blob=False)``) so checkpointed state round-trips
-    exactly.  Returns ``one_shift(state, statics) -> state`` where
-    ``state = (*operand_arrays, acc)`` and ``statics`` maps the store's
-    static names.
+    exactly.  Returns ``one_shift(state, statics, step=0) -> state``
+    where ``state = (*carry_arrays, acc)`` and ``statics`` maps the
+    store's static names (plus ``"step_keep"`` when ``use_step_mask``).
+    ``one_shift.prime(operand_arrays) -> carry_arrays`` builds the
+    step-0 carry (including any prologue shift the schedule issues);
+    ``one_shift.n_carry`` is the number of carry arrays.
     """
-    ordered = list(store.names)
+    import numpy as np
+
+    count_dtype = compat.canonical_count_dtype(count_dtype)
+    ordered_statics = list(store.static_names)
     specs = store.in_specs(axes)
     ctx = _Ctx(axes)
-    n_op = len(store.operand_names)
-    op_spec = specs[store.operand_names[0]]
+    op_names = list(store.operand_names)
+    op_spec = specs[op_names[0]]
+    lead = store.lead(op_names[0], axes)
+    mask_lead = len(axes.all)
 
-    def spmd(*args):
-        named = dict(zip(ordered, args[:-1]))
-        acc = _squeeze(args[-1], store.lead(store.operand_names[0], axes))
-        local = store.localize(named, axes)
-        carry0, body, _ = schedule.make_scan(store, local, ctx)
-        carry_next, c = body(carry0, jnp.zeros((), jnp.int32))
-        leaves = jax.tree.flatten(carry_next)[0]
-        assert len(leaves) == n_op, (
+    # carry pytree *structure* from a computation-free dummy payload —
+    # only identity-structured stores qualify (same restriction as the
+    # checkpoint round-trip itself).
+    try:
+        dummy = store.payload({k: np.zeros((), np.int32) for k in op_names})
+        treedef = jax.tree.structure(schedule.carry_template(dummy))
+    except Exception as e:  # noqa: BLE001
+        raise ValueError(
             "stepper requires an identity-structured payload "
             "(e.g. CSRStore(use_blob=False))"
+        ) from e
+    n_state = treedef.num_leaves
+
+    one = lambda a: a.reshape((1,) * lead + a.shape)
+
+    def spmd(*args):
+        carry_leaves = [_squeeze(a, lead) for a in args[:n_state]]
+        pos = n_state
+        statics = dict(zip(ordered_statics, args[pos:pos + len(ordered_statics)]))
+        pos += len(ordered_statics)
+        keep = None
+        if use_step_mask:
+            keep = _squeeze(args[pos], mask_lead)
+            pos += 1
+        acc = _squeeze(args[pos], lead)
+        step = args[pos + 1]
+        local = store.localize(statics, axes)
+        carry = jax.tree.unflatten(treedef, carry_leaves)
+        body = schedule.make_body(
+            store, local, ctx, step_keep=keep, count_dtype=count_dtype
         )
-        lead = store.lead(store.operand_names[0], axes)
-        one = lambda a: a.reshape((1,) * lead + a.shape)
+        carry_next, c = body(carry, step)
+        leaves = jax.tree.flatten(carry_next)[0]
         return tuple(one(x) for x in leaves) + (one(acc + c),)
 
+    static_specs = tuple(specs[k] for k in ordered_statics)
+    mask_specs = (P(*axes.all),) if use_step_mask else ()
     fn = jax.jit(
         compat.shard_map(
             spmd,
             mesh=mesh,
-            in_specs=tuple(specs[k] for k in ordered) + (op_spec,),
-            out_specs=(op_spec,) * (n_op + 1),
+            in_specs=(op_spec,) * n_state + static_specs + mask_specs
+            + (op_spec, P()),
+            out_specs=(op_spec,) * (n_state + 1),
             check_vma=False,
         )
     )
 
-    def one_shift(state, statics):
-        *operands, acc = state
-        args = list(operands) + [statics[k] for k in store.static_names] + [acc]
+    def spmd_prime(*args):
+        local = store.localize(dict(zip(op_names, args)), axes)
+        carry0 = schedule.init_carry(store, local, ctx)
+        leaves = jax.tree.flatten(carry0)[0]
+        assert len(leaves) == n_state, (
+            "stepper requires an identity-structured payload "
+            "(e.g. CSRStore(use_blob=False))"
+        )
+        return tuple(one(x) for x in leaves)
+
+    prime_fn = jax.jit(
+        compat.shard_map(
+            spmd_prime,
+            mesh=mesh,
+            in_specs=tuple(specs[k] for k in op_names),
+            out_specs=(op_spec,) * n_state,
+            check_vma=False,
+        )
+    )
+
+    def one_shift(state, statics, step=0):
+        *carry, acc = state
+        args = list(carry) + [statics[k] for k in ordered_statics]
+        if use_step_mask:
+            args.append(statics[MASK_NAME])
+        args += [acc, jnp.asarray(step, jnp.int32)]
         return fn(*args)
 
+    one_shift.prime = lambda operands: prime_fn(
+        *(operands[k] for k in op_names)
+    )
+    one_shift.n_carry = n_state
     return one_shift

@@ -21,6 +21,8 @@ from .graph import Graph
 __all__ = [
     "rmat",
     "erdos_renyi",
+    "star",
+    "residue_cliques",
     "named_graph",
     "graph_from_spec",
     "GRAPH500_PARAMS",
@@ -74,6 +76,46 @@ def erdos_renyi(n: int, avg_degree: float, seed: int = 0, name=None) -> Graph:
     return g
 
 
+def star(n: int, name=None) -> Graph:
+    """Hub-and-spoke graph on ``n`` vertices (0 triangles).
+
+    Under the 2D cyclic decomposition every edge lands in the hub's
+    block column, leaving most blocks empty — a skip-mask stressor.
+    """
+    assert n >= 2
+    src = np.zeros(n - 1, dtype=np.int64)
+    dst = np.arange(1, n, dtype=np.int64)
+    return Graph.from_edges(n, src, dst, name=name or f"star-{n}")
+
+
+def residue_cliques(k: int, size: int, name=None) -> Graph:
+    """Block-diagonal fixture: ``k`` disjoint cliques of ``size`` vertices,
+    clique ``r`` on the residue class ``{v : v % k == r}``.
+
+    On a ``k x k`` grid every edge satisfies ``i ≡ j (mod k)``, so only
+    the diagonal blocks of the cyclic decomposition are non-empty and
+    each diagonal device has exactly one live Cannon shift — the other
+    ``k^3 - k`` (device, shift) pairs are skippable.  Triangle count is
+    ``k * C(size, 3)`` (non-zero, unlike a star), so a miscounting
+    masked engine cannot hide.
+    """
+    assert k >= 1 and size >= 1
+    n = k * size
+    members = np.arange(size, dtype=np.int64)
+    iu, ju = np.triu_indices(size, k=1)
+    src, dst = [], []
+    for r in range(k):
+        verts = members * k + r  # residue class r, local order preserved
+        src.append(verts[iu])
+        dst.append(verts[ju])
+    return Graph.from_edges(
+        n,
+        np.concatenate(src) if src else np.zeros(0, np.int64),
+        np.concatenate(dst) if dst else np.zeros(0, np.int64),
+        name=name or f"cliques-{k}x{size}",
+    )
+
+
 def named_graph(which: str) -> Graph:
     """Small graphs with known triangle counts for unit tests."""
     if which == "triangle":
@@ -105,10 +147,16 @@ def graph_from_spec(spec: str) -> Graph:
     """Parse a command-line graph spec (shared by tc_run / serve / benches).
 
     Formats: ``rmat:<scale>[,<edge_factor>[,<seed>]]`` |
-    ``er:<n>,<avg_degree>[,<seed>]`` | ``named:<id>`` | ``<id>`` (a bare
-    named-graph id such as ``karate``).
+    ``er:<n>,<avg_degree>[,<seed>]`` | ``star:<n>`` |
+    ``cliques:<k>,<size>`` (block-diagonal skip-mask fixture) |
+    ``named:<id>`` | ``<id>`` (a bare named-graph id such as ``karate``).
     """
     kind, _, rest = spec.partition(":")
+    if kind == "star":
+        return star(int(rest))
+    if kind == "cliques":
+        parts = rest.split(",")
+        return residue_cliques(int(parts[0]), int(parts[1]))
     if kind == "rmat":
         parts = rest.split(",")
         return rmat(
@@ -145,6 +193,10 @@ def _spec_is_wellformed(spec: str) -> bool:
                 return False
             int(parts[0]), float(parts[1])
             return len(parts) == 2 or int(parts[2]) >= 0
+        if kind == "star":
+            return len(parts) == 1 and int(parts[0]) >= 2
+        if kind == "cliques":
+            return len(parts) == 2 and all(int(p) >= 1 for p in parts)
     except ValueError:
         return False
     if kind == "named":

@@ -44,15 +44,20 @@ class OneDPlan:
     t_i: np.ndarray  # (p, p, gmax) local i
     t_j: np.ndarray  # (p, p, gmax) local j (= j // p)
     t_cnt: np.ndarray  # (p, p)
+    # (p, p) bool: True = device d counts at ring step t
+    step_keep: "np.ndarray | None" = None
 
     def device_arrays(self) -> Dict[str, np.ndarray]:
-        return dict(
+        out = dict(
             indptr=self.indptr,
             indices=self.indices,
             t_i=self.t_i,
             t_j=self.t_j,
             t_cnt=self.t_cnt,
         )
+        if self.step_keep is not None:
+            out["step_keep"] = self.step_keep
+        return out
 
     def shape_structs(self):
         import jax
@@ -87,6 +92,7 @@ def build_oned_fn(
     count_dtype=jnp.int32,
     probe_shorter: bool = True,
     batched: bool = False,
+    use_step_mask: "bool | None" = None,
 ):
     """Ring algorithm over a 1D view of the mesh.
 
@@ -103,9 +109,10 @@ def build_oned_fn(
         RingSchedule,
         make_csr_kernel,
     )
-    from .plan import as_plan
+    from .plan import as_plan, resolve_step_mask
 
     plan = as_plan(plan)
+    use_step_mask = resolve_step_mask(plan, use_step_mask)
     p = plan.p
     if axis is None:
         sizes = {a: mesh.shape[a] for a in mesh.axis_names}
@@ -125,5 +132,6 @@ def build_oned_fn(
     store = OneDCSRStore(kernel, p=p)
     schedule = RingSchedule(p=p, axes=axes)
     return engine.build_engine_fn(
-        mesh, axes, store, schedule, count_dtype=count_dtype, batched=batched
+        mesh, axes, store, schedule, count_dtype=count_dtype,
+        batched=batched, use_step_mask=use_step_mask,
     )

@@ -31,7 +31,14 @@ import numpy as np
 from .decomp import BlockCSR, cyclic_blocks
 from .graph import Graph
 
-__all__ = ["TCPlan", "build_plan", "analytic_plan", "PlanStats", "as_plan"]
+__all__ = [
+    "TCPlan",
+    "build_plan",
+    "analytic_plan",
+    "PlanStats",
+    "as_plan",
+    "resolve_step_mask",
+]
 
 
 def as_plan(obj):
@@ -40,6 +47,23 @@ def as_plan(obj):
     either."""
     inner = getattr(obj, "plan", None)
     return obj if inner is None else inner
+
+
+def resolve_step_mask(plan, use_step_mask) -> bool:
+    """Resolve a builder's ``use_step_mask`` request against the plan.
+
+    ``None`` auto-enables skipping iff the planner staged ``step_keep``
+    masks; an explicit ``True`` on a mask-less plan is an error (the
+    engine would have nothing to consume).
+    """
+    has = getattr(plan, "step_keep", None) is not None
+    if use_step_mask is None:
+        return has
+    if use_step_mask and not has:
+        raise ValueError(
+            "plan carries no step_keep masks; re-plan with step_masks=True"
+        )
+    return bool(use_step_mask)
 
 INT = np.int32
 
@@ -89,10 +113,14 @@ class TCPlan:
     stats: Optional[PlanStats] = None
     # canonical (un-skewed) blocks kept for SUMMA / 1D comparisons
     blocks: Optional[List[List[BlockCSR]]] = None
+    # (q, q, q) bool per-(device, shift) skip mask: True = the incoming
+    # block pair can contribute (sparsity-aware step skipping); None for
+    # un-skewed (SUMMA-placement) or analytic plans
+    step_keep: Optional[np.ndarray] = None
 
     # ------------------------------------------------------------------
     def device_arrays(self) -> Dict[str, np.ndarray]:
-        return dict(
+        out = dict(
             a_indptr=self.a_indptr,
             a_indices=self.a_indices,
             b_indptr=self.b_indptr,
@@ -101,6 +129,9 @@ class TCPlan:
             m_tj=self.m_tj,
             m_cnt=self.m_cnt,
         )
+        if self.step_keep is not None:
+            out["step_keep"] = self.step_keep
+        return out
 
     def shape_structs(self):
         """jax.ShapeDtypeStruct stand-ins for every device array.
@@ -138,7 +169,10 @@ class TCPlan:
                         arr[x, y, r, cols] = 1.0
                 cnt = self.m_cnt[x, y]
                 msk[x, y, self.m_ti[x, y, :cnt], self.m_tj[x, y, :cnt]] = 1.0
-        return dict(a_dense=a, b_dense=b, m_dense=msk)
+        out = dict(a_dense=a, b_dense=b, m_dense=msk)
+        if self.step_keep is not None:
+            out["step_keep"] = self.step_keep
+        return out
 
 
 def _stack_blocks(
@@ -167,6 +201,7 @@ def build_plan(
     chunk: int = 512,
     with_stats: bool = True,
     keep_blocks: bool = True,
+    step_masks: bool = True,
 ) -> TCPlan:
     """Plan the 2D-cyclic execution of a *degree-ordered* graph on q x q.
 
@@ -189,6 +224,7 @@ def build_plan(
         chunk=chunk,
         with_stats=with_stats,
         keep_blocks=keep_blocks,
+        step_masks=step_masks,
     )
 
 
@@ -200,6 +236,7 @@ def _build_plan_loops(
     chunk: int = 512,
     with_stats: bool = True,
     keep_blocks: bool = True,
+    step_masks: bool = True,
 ) -> TCPlan:
     """Loop-based reference planner (the pre-pipeline implementation).
 
@@ -243,6 +280,7 @@ def _build_plan_loops(
 
     dmax = max(1, max(blocks[x][y].max_row_len() for x in range(q) for y in range(q)))
 
+    probe = None
     stats = None
     if with_stats:
         tasks = np.array(
@@ -284,6 +322,28 @@ def _build_plan_loops(
             padding_fraction_tasks=float(1.0 - m / max(1, q * q * tmax)),
         )
 
+    # per-(device, shift) skip mask — loop reference of the vectorized
+    # derivation in pipeline.stages (see DESIGN.md §4): device (x, y) at
+    # shift s holds A = U_{x,z} and B = U_{y,z} with z = (x+y+s) % q, so
+    # the step contributes only if the task list and both incoming
+    # blocks are non-empty (refined to exact per-shift probe work when
+    # stats were computed).
+    step_keep = None
+    if skew and step_masks:
+        step_keep = np.zeros((q, q, q), dtype=bool)
+        for x in range(q):
+            for y in range(q):
+                for s in range(q):
+                    z = (x + y + s) % q
+                    k = (
+                        m_cnt[x, y] > 0
+                        and blocks[x][z].nnz > 0
+                        and blocks[y][z].nnz > 0
+                    )
+                    if probe is not None:
+                        k = k and probe[x, y, s] > 0
+                    step_keep[x, y, s] = k
+
     return TCPlan(
         n=n,
         m=m,
@@ -302,6 +362,7 @@ def _build_plan_loops(
         m_cnt=m_cnt,
         stats=stats,
         blocks=blocks if keep_blocks else None,
+        step_keep=step_keep,
     )
 
 

@@ -57,9 +57,11 @@ class SummaPlan:
     m_ti: np.ndarray  # (r, c, tmax)
     m_tj: np.ndarray  # (r, c, tmax)
     m_cnt: np.ndarray  # (r, c)
+    # (r, c, c) bool: True = device (x, y) counts at broadcast round z
+    step_keep: "np.ndarray | None" = None
 
     def device_arrays(self) -> Dict[str, np.ndarray]:
-        return dict(
+        out = dict(
             a_indptr=self.a_indptr,
             a_indices=self.a_indices,
             b_indptr=self.b_indptr,
@@ -68,6 +70,9 @@ class SummaPlan:
             m_tj=self.m_tj,
             m_cnt=self.m_cnt,
         )
+        if self.step_keep is not None:
+            out["step_keep"] = self.step_keep
+        return out
 
     def shape_structs(self):
         import jax
@@ -99,8 +104,13 @@ def build_summa_fn(
     count_dtype=jnp.int32,
     reduce_global: bool = True,
     batched: bool = False,
+    use_step_mask: "bool | None" = None,
 ):
-    """Thin engine configuration: SummaSchedule × SummaCSRStore × kernel."""
+    """Thin engine configuration: SummaSchedule × SummaCSRStore × kernel.
+
+    ``use_step_mask=None`` auto-enables sparsity-aware step skipping
+    when the plan carries ``step_keep`` masks.
+    """
     from . import engine
     from .engine import (
         GridAxes,
@@ -109,9 +119,10 @@ def build_summa_fn(
         SummaSchedule,
         make_csr_kernel,
     )
-    from .plan import as_plan
+    from .plan import as_plan, resolve_step_mask
 
     plan = as_plan(plan)
+    use_step_mask = resolve_step_mask(plan, use_step_mask)
     axes = GridAxes(row_axis, col_axis)
     kernel = make_csr_kernel(
         method,
@@ -128,4 +139,5 @@ def build_summa_fn(
         count_dtype=count_dtype,
         reduction=Reduction(global_sum=reduce_global),
         batched=batched,
+        use_step_mask=use_step_mask,
     )

@@ -77,14 +77,20 @@ class TilePlan:
     triples: np.ndarray  # (q, q, q, trip_pad, 4) int32  [x, y, shift]
 
     stats: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # propagated from the parent TCPlan so the tile path stages the same
+    # (q, q, q) skip mask as the CSR paths
+    step_keep: "np.ndarray | None" = None
 
     def device_arrays(self) -> Dict[str, np.ndarray]:
-        return dict(
+        out = dict(
             a_tiles=self.a_tiles,
             b_tiles=self.b_tiles,
             m_tiles=self.m_tiles,
             triples=self.triples,
         )
+        if self.step_keep is not None:
+            out["step_keep"] = self.step_keep
+        return out
 
 
 def build_tile_plan(plan: TCPlan) -> TilePlan:
@@ -176,6 +182,7 @@ def build_tile_plan(plan: TCPlan) -> TilePlan:
         b_tiles=b_tiles,
         m_tiles=m_tiles,
         triples=triples,
+        step_keep=plan.step_keep,
         stats=dict(
             total_active_tiles=float(total_tiles),
             triples_total=float(ntrips),

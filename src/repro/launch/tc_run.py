@@ -31,6 +31,14 @@ def main():
                     help="enable §Perf H1a+H1b (bucketed probes + "
                          "uint16-length blobs)")
     ap.add_argument("--no-probe-shorter", action="store_true")
+    ap.add_argument("--no-skip-mask", action="store_true",
+                    help="disable sparsity-aware step skipping")
+    ap.add_argument("--no-double-buffer", action="store_true",
+                    help="disable the communication-overlapped Cannon body")
+    ap.add_argument("--repeat", type=int, default=1,
+                    help="count this many times (plan-cache warm after the "
+                         "first); tct_seconds reports the LAST run, i.e. "
+                         "warm dispatch without trace/compile")
     ap.add_argument("--verify", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--fail-at-shift", type=int, default=None,
@@ -100,17 +108,30 @@ def main():
             fn = build_cannon_fn(
                 bplan, mesh, method="search2", compress_lengths=True,
                 count_dtype=compat.default_count_dtype(),
+                use_step_mask=False if args.no_skip_mask else None,
+                double_buffer=not args.no_double_buffer,
             )
-            total = int(
-                fn(**{k: jnp.asarray(v) for k, v in bplan.device_arrays().items()})
-            )
+            staged = {
+                k: jnp.asarray(v) for k, v in bplan.device_arrays().items()
+            }
+            t_run = t1o  # repeat==1 keeps build+trace inside tct, as before
+            for i in range(max(1, args.repeat)):
+                if i:
+                    t_run = time.perf_counter()
+                total = int(fn(**staged))
             report.update(
                 triangles=total,
                 ppt_seconds=round(t1o - t0, 4),
-                tct_seconds=round(time.perf_counter() - t1o, 4),
+                tct_seconds=round(time.perf_counter() - t_run, 4),
                 optimized=True,
                 bucket_reduction=round(bplan.bucket_stats["reduction"], 3),
             )
+            sk = getattr(bplan, "step_keep", None)
+            if sk is not None:
+                report["schedule_steps"] = int(sk.size)
+                report["skipped_steps"] = (
+                    0 if args.no_skip_mask else int(sk.size - sk.sum())
+                )
             if args.verify:
                 from ..core import triangle_count_oracle
 
@@ -123,17 +144,20 @@ def main():
             print(_json.dumps(report) if args.json else
                   "\n".join(f"{k}: {v}" for k, v in report.items()))
             return
-        res = count_triangles(
-            g,
-            q=args.grid,
-            npods=args.pods,
-            schedule=args.schedule,
-            method=args.method,
-            chunk=args.chunk,
-            probe_shorter=not args.no_probe_shorter,
-            plan=plan,
-            reorder=plan is None,
-        )
+        for _ in range(max(1, args.repeat)):
+            res = count_triangles(
+                g,
+                q=args.grid,
+                npods=args.pods,
+                schedule=args.schedule,
+                method=args.method,
+                chunk=args.chunk,
+                probe_shorter=not args.no_probe_shorter,
+                plan=plan,
+                reorder=plan is None,
+                use_step_mask=False if args.no_skip_mask else None,
+                double_buffer=not args.no_double_buffer,
+            )
         report.update(
             triangles=res.triangles,
             ppt_seconds=round(res.preprocess_seconds, 4),
@@ -141,6 +165,13 @@ def main():
             total_seconds=round(time.perf_counter() - t0, 4),
             grid=res.grid,
         )
+        sk = getattr(res.plan, "step_keep", None)
+        if sk is not None:
+            # per-(device, step) mask entries the engine short-circuits
+            report["schedule_steps"] = int(sk.size)
+            report["skipped_steps"] = (
+                0 if args.no_skip_mask else int(sk.size - sk.sum())
+            )
         total = res.triangles
 
     if args.verify:
@@ -161,16 +192,23 @@ def _run_batched(args):
     from ..core import count_triangles_many, triangle_count_oracle
     from ..core.generators import graph_from_spec, split_specs
 
+    if args.no_skip_mask or args.no_double_buffer:
+        raise SystemExit(
+            "--no-skip-mask/--no-double-buffer are not supported with "
+            "--graphs (the batched engine always follows the plans' "
+            "staged masks); use single-graph runs to A/B the levers"
+        )
     specs = split_specs(args.graphs)
     graphs = [graph_from_spec(s) for s in specs]
     t0 = time.perf_counter()
-    res = count_triangles_many(
-        graphs,
-        q=args.grid,
-        schedule=args.schedule,
-        method=args.method,
-        chunk=args.chunk,
-    )
+    for _ in range(max(1, args.repeat)):  # later rounds hit the program cache
+        res = count_triangles_many(
+            graphs,
+            q=args.grid,
+            schedule=args.schedule,
+            method=args.method,
+            chunk=args.chunk,
+        )
     report = {
         "graphs": specs,
         "batch": res.batch,
@@ -194,11 +232,18 @@ def _run_batched(args):
 
 
 def _run_checkpointed(g, args):
-    """Shift-at-a-time execution with mid-loop checkpoint/restart."""
-    import jax
+    """Shift-at-a-time execution with mid-loop checkpoint/restart.
+
+    The checkpointed state is the engine's *scan carry* (with the
+    double-buffered Cannon body: two payload generations, built once by
+    ``stepper.prime``) plus the per-device partial counts; the host loop
+    owns the shift index and passes it to each step so the sparsity skip
+    mask stays aligned after a resume.
+    """
     import jax.numpy as jnp
     import numpy as np
 
+    from .. import compat
     from ..ckpt import CheckpointManager
     from ..core import build_plan, preprocess
     from ..core.api import make_grid_mesh
@@ -209,28 +254,38 @@ def _run_checkpointed(g, args):
     q = args.grid
     plan = build_plan(g2, q, chunk=args.chunk)
     mesh = make_grid_mesh(q)
-    stepper = build_cannon_stepper(plan, mesh)
+    stepper = build_cannon_stepper(
+        plan, mesh,
+        use_step_mask=False if args.no_skip_mask else None,
+        double_buffer=not args.no_double_buffer,
+    )
     arrays = {k: jnp.asarray(v) for k, v in plan.device_arrays().items()}
-    masks = {k: arrays[k] for k in ("m_ti", "m_tj", "m_cnt")}
+    statics = {
+        k: arrays[k]
+        for k in ("m_ti", "m_tj", "m_cnt", "step_keep")
+        if k in arrays
+    }
     t1 = time.perf_counter()
 
     mgr = CheckpointManager(args.ckpt_dir, keep=2, async_save=False)
-    state_like = dict(
-        a_ptr=arrays["a_indptr"],
-        a_idx=arrays["a_indices"],
-        b_ptr=arrays["b_indptr"],
-        b_idx=arrays["b_indices"],
-        acc=jnp.zeros((q, q), jnp.int64),
-    )
+    n_carry = stepper.n_carry
+    # shape/dtype template for restore: carry leaves are operand-shaped
+    # (two payload generations when double-buffered) — no need to run
+    # the prime dispatch just to describe the checkpoint structure
+    ops = [arrays[k] for k in ("a_indptr", "a_indices", "b_indptr",
+                               "b_indices")]
+    state_like = {f"carry{i}": ops[i % len(ops)] for i in range(n_carry)}
+    state_like["acc"] = jnp.zeros((q, q), compat.default_count_dtype())
     step0, restored, extra = mgr.restore_latest(state_like)
     if restored is not None:
         st = restored
         start = int(extra["shift"])
         print(f"resumed at shift {start}")
     else:
-        st = state_like
+        carry0 = stepper.prime(arrays)
+        st = {f"carry{i}": c for i, c in enumerate(carry0)}
+        st["acc"] = state_like["acc"]
         start = 0
-
     failed = {"done": False}
     for s in range(start, q):
         if (
@@ -245,12 +300,12 @@ def _run_checkpointed(g, args):
                 st = restored
                 s = int(extra["shift"])  # noqa: PLW2901
         out = stepper(
-            (st["a_ptr"], st["a_idx"], st["b_ptr"], st["b_idx"], st["acc"]),
-            masks,
+            tuple(st[f"carry{i}"] for i in range(n_carry)) + (st["acc"],),
+            statics,
+            step=s,
         )
-        st = dict(
-            a_ptr=out[0], a_idx=out[1], b_ptr=out[2], b_idx=out[3], acc=out[4]
-        )
+        st = {f"carry{i}": out[i] for i in range(n_carry)}
+        st["acc"] = out[n_carry]
         mgr.save(s + 1, st, extra={"shift": s + 1})
     total = int(np.asarray(st["acc"]).sum())
     t2 = time.perf_counter()

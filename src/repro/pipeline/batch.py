@@ -139,6 +139,8 @@ def _build_batch_program(
             m_tj=(tmax, 0),
             m_cnt=(plans[0].m_cnt.shape[-1], 0),
         )
+        if plans[0].step_keep is not None:
+            pads["step_keep"] = (q, False)  # (q, q, q) per graph, same q
         stacked = _stack(plans, pads)
         rep = dataclasses.replace(
             plans[0],
@@ -176,6 +178,8 @@ def _build_batch_program(
             m_tj=(tmax, 0),
             m_cnt=(plans[0].m_cnt.shape[-1], 0),
         )
+        if plans[0].step_keep is not None:
+            pads["step_keep"] = (c, False)  # (r, c, c) per graph
         stacked = _stack(plans, pads)
         rep = dataclasses.replace(
             plans[0],
@@ -205,6 +209,8 @@ def _build_batch_program(
             t_j=(gmax, 0),
             t_cnt=(plans[0].t_cnt.shape[-1], 0),
         )
+        if plans[0].step_keep is not None:
+            pads["step_keep"] = (p_ring, False)  # (p, p) per graph
         stacked = _stack(plans, pads)
         rep = dataclasses.replace(
             plans[0],

@@ -77,13 +77,17 @@ def plan_cannon(
     keep_blocks: bool = True,
     bucketize: bool = False,
     d_small: int = 32,
+    step_masks: bool = True,
     cache: Optional[PlanCache] = None,
 ) -> PlanArtifact:
     """Plan the 2D-cyclic (Cannon family) execution of ``graph`` on a
     ``q x q`` grid, through the cache.
 
     ``bucketize=True`` stores the §Perf H1a long/short-reordered plan
-    (for ``method="search2"``) under its own cache entry."""
+    (for ``method="search2"``) under its own cache entry;
+    ``step_masks`` stages the per-(device, shift) skip mask the engine
+    consumes for sparsity-aware step skipping (part of the cache key —
+    masked and unmasked artifacts are distinct entries)."""
 
     def pack(digest, key, seconds, cache_):
         t0 = time.perf_counter()
@@ -99,6 +103,7 @@ def plan_cannon(
             chunk=chunk,
             with_stats=with_stats,
             keep_blocks=keep_blocks or bucketize,
+            step_masks=step_masks,
         )
         if bucketize:
             plan = bucketize_plan(plan, d_small=d_small)
@@ -110,7 +115,7 @@ def plan_cannon(
 
     tail = (
         q, skew, chunk, reorder, cyclic_p, with_stats, keep_blocks,
-        bucketize, d_small if bucketize else None,
+        bucketize, d_small if bucketize else None, step_masks,
     )
     return _drive("cannon", graph, tail, cache, pack)
 
@@ -123,6 +128,7 @@ def plan_summa(
     chunk: int = 512,
     reorder: bool = True,
     cyclic_p: Optional[int] = None,
+    step_masks: bool = True,
     cache: Optional[PlanCache] = None,
 ) -> PlanArtifact:
     """Plan the SUMMA execution on an ``r x c`` grid, through the cache."""
@@ -134,14 +140,14 @@ def plan_summa(
         )
         seconds["relabel"] = time.perf_counter() - t0
         t1 = time.perf_counter()
-        plan = pack_summa_plan(g2, r, c, chunk=chunk)
+        plan = pack_summa_plan(g2, r, c, chunk=chunk, step_masks=step_masks)
         seconds["decompose+pack"] = time.perf_counter() - t1
         return PlanArtifact(
             kind="summa", digest=digest, key=key, graph=g2, perm=perm,
             plan=plan,
         )
 
-    tail = (r, c, chunk, reorder, cyclic_p)
+    tail = (r, c, chunk, reorder, cyclic_p, step_masks)
     return _drive("summa", graph, tail, cache, pack)
 
 
@@ -152,6 +158,7 @@ def plan_oned(
     chunk: int = 512,
     reorder: bool = True,
     cyclic_p: Optional[int] = None,
+    step_masks: bool = True,
     cache: Optional[PlanCache] = None,
 ) -> PlanArtifact:
     """Plan the 1D-ring baseline over ``p`` devices, through the cache."""
@@ -163,12 +170,12 @@ def plan_oned(
         )
         seconds["relabel"] = time.perf_counter() - t0
         t1 = time.perf_counter()
-        plan = pack_oned_plan(g2, p, chunk=chunk)
+        plan = pack_oned_plan(g2, p, chunk=chunk, step_masks=step_masks)
         seconds["decompose+pack"] = time.perf_counter() - t1
         return PlanArtifact(
             kind="oned", digest=digest, key=key, graph=g2, perm=perm,
             plan=plan,
         )
 
-    tail = (p, chunk, reorder, cyclic_p)
+    tail = (p, chunk, reorder, cyclic_p, step_masks)
     return _drive("oned", graph, tail, cache, pack)

@@ -36,6 +36,7 @@ from ..core.summa import SummaPlan
 __all__ = [
     "relabel_stage",
     "emit_block_arrays",
+    "cannon_step_keep",
     "pack_tc_plan",
     "pack_summa_plan",
     "pack_oned_plan",
@@ -148,6 +149,32 @@ def _tc_plan_stats(coo: CyclicCOO, q: int, nnz_pad: int, tmax: int, m: int):
     )
 
 
+def cannon_step_keep(
+    nnz_blocks: np.ndarray, m_cnt: np.ndarray, probe: Optional[np.ndarray]
+) -> np.ndarray:
+    """Per-(device, shift) skip mask for the pre-skewed Cannon rotation.
+
+    Device ``(x, y)`` at shift ``s`` holds ``A = U_{x,z}`` and
+    ``B = U_{y,z}`` with ``z = (x + y + s) % q``, so its count that step
+    is provably zero — and safe to skip — unless the device's task list
+    and *both* incoming blocks are non-empty.  When the planner computed
+    per-shift probe work (``with_stats``), the mask is refined to exact
+    zero-work steps (``probe == 0`` ⇒ every task has an empty fragment
+    side ⇒ count 0), which also prunes steps whose blocks are non-empty
+    but never intersect a task row.
+    """
+    q = m_cnt.shape[0]
+    x = np.arange(q)[:, None, None]
+    y = np.arange(q)[None, :, None]
+    s = np.arange(q)[None, None, :]
+    z = (x + y + s) % q
+    nz = nnz_blocks > 0
+    keep = (m_cnt > 0)[:, :, None] & nz[x, z] & nz[y, z]
+    if probe is not None:
+        keep &= probe > 0
+    return keep
+
+
 def pack_tc_plan(
     graph: Graph,
     q: int,
@@ -156,6 +183,7 @@ def pack_tc_plan(
     chunk: int = 512,
     with_stats: bool = True,
     keep_blocks: bool = True,
+    step_masks: bool = True,
     coo: Optional[CyclicCOO] = None,
 ) -> TCPlan:
     """Vectorized 2D-cyclic planner: the decompose+pack stages for the
@@ -190,6 +218,14 @@ def pack_tc_plan(
     stats = _tc_plan_stats(coo, q, nnz_pad, tmax, m) if with_stats else None
     blocks = blocks_from_coo(coo) if keep_blocks else None
 
+    step_keep = None
+    if skew and step_masks:
+        step_keep = cannon_step_keep(
+            coo.counts.reshape(q, q),
+            m_cnt,
+            stats.probe_work_per_device_shift if stats is not None else None,
+        )
+
     return TCPlan(
         n=n,
         m=m,
@@ -208,11 +244,13 @@ def pack_tc_plan(
         m_cnt=m_cnt,
         stats=stats,
         blocks=blocks,
+        step_keep=step_keep,
     )
 
 
 def pack_summa_plan(
-    graph: Graph, r: int, c: int, *, chunk: int = 512
+    graph: Graph, r: int, c: int, *, chunk: int = 512,
+    step_masks: bool = True,
 ) -> SummaPlan:
     """Vectorized SUMMA planner (semantics of
     :func:`repro.core.summa.build_summa_plan`): A/mask blocks from one
@@ -238,6 +276,16 @@ def pack_summa_plan(
         b_indptr[kc % r, :, kc // r] = cb_ptr[:, kc]
         b_indices[kc % r, :, kc // r] = cb_idx[:, kc]
 
+    step_keep = None
+    if step_masks:
+        # step z broadcasts A panel (x, z) and B panel (y, z): skip the
+        # count when the task list or either incoming panel is empty
+        a_nz = acoo.counts.reshape(r, c) > 0
+        b_nz = bcoo.counts.reshape(c, c) > 0
+        step_keep = (
+            (m_cnt > 0)[:, :, None] & a_nz[:, None, :] & b_nz[None, :, :]
+        )
+
     dmax = max(1, acoo.row_len_max, bcoo.row_len_max)
     return SummaPlan(
         n=n,
@@ -259,10 +307,13 @@ def pack_summa_plan(
         m_ti=m_ti,
         m_tj=m_tj,
         m_cnt=m_cnt,
+        step_keep=step_keep,
     )
 
 
-def pack_oned_plan(graph: Graph, p: int, *, chunk: int = 512) -> OneDPlan:
+def pack_oned_plan(
+    graph: Graph, p: int, *, chunk: int = 512, step_masks: bool = True
+) -> OneDPlan:
     """Vectorized 1D planner (semantics of
     :func:`repro.core.onedim.build_oned_plan`): the per-device row CSR
     and the owner-grouped task lists are both single-sort scatters —
@@ -300,6 +351,17 @@ def pack_oned_plan(graph: Graph, p: int, *, chunk: int = 512) -> OneDPlan:
     t_i[gid_s, goffs] = i[gorder] // p
     t_j[gid_s, goffs] = j[gorder] // p
 
+    step_keep = None
+    if step_masks:
+        # device d at ring step t holds owner o = (d + t) % p's rotating
+        # row block and counts its task group (d, o): skip when either
+        # the group or the incoming block is empty
+        d = np.arange(p)[:, None]
+        t = np.arange(p)[None, :]
+        o = (d + t) % p
+        t_cnt_pp = gcnt.reshape(p, p)
+        step_keep = (t_cnt_pp[d, o] > 0) & (dev_cnt[o] > 0)
+
     dmax = max(1, int(rowcnt.max()) if m else 0)
     return OneDPlan(
         n=n,
@@ -315,6 +377,7 @@ def pack_oned_plan(graph: Graph, p: int, *, chunk: int = 512) -> OneDPlan:
         t_i=t_i.reshape(p, p, gmax),
         t_j=t_j.reshape(p, p, gmax),
         t_cnt=gcnt.reshape(p, p).astype(INT),
+        step_keep=step_keep,
     )
 
 

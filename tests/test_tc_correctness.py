@@ -67,9 +67,9 @@ def test_dense_oracle_path_matches_search():
     g2, _ = preprocess(g)
     plan = build_plan(g2, 1)
     mesh = make_grid_mesh(1)
-    dense = plan.dense_blocks()
+    dense = plan.dense_blocks()  # includes the step_keep skip mask
     fn = build_cannon_dense_fn(plan, mesh)
-    got = int(fn(*(jnp.asarray(dense[k]) for k in ("a_dense", "b_dense", "m_dense"))))
+    got = int(fn(*(jnp.asarray(dense[k]) for k in fn.ordered)))
     assert got == triangle_count_oracle(g)
 
 
