@@ -22,6 +22,7 @@ from .generators import (  # noqa: F401
     erdos_renyi,
     graph_from_spec,
     named_graph,
+    powerlaw,
     residue_cliques,
     rmat,
     star,

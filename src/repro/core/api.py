@@ -53,6 +53,10 @@ class TCResult:
     method: str
     schedule: str
     grid: tuple
+    # skip-aware rebalance search report (set when rebalance_trials > 0
+    # and the schedule plans through the pipeline): best seed, baseline/
+    # best masked critical path, improvement, skipped steps
+    rebalance: Optional[dict] = None
 
 
 def make_grid_mesh(q: int, row_axis="data", col_axis="model", npods=1, pod_axis="pod"):
@@ -111,6 +115,9 @@ class RunContext:
     # repro.pipeline with these, so cache hits skip the relabel too
     reorder: bool = True
     cyclic_p: Optional[int] = None
+    # skip-aware rebalance (DESIGN.md §4.3): search this many relabeling
+    # seeds for the lowest masked critical path (0 = off)
+    rebalance_trials: int = 0
     cache: Optional[object] = None  # PlanCache; None -> default_cache()
     artifact: Optional[object] = None  # PlanArtifact set by the runner
     # set via mark_counting(): host-side planning/staging before this
@@ -183,6 +190,7 @@ def _run_cannon(graph: Graph, mesh, ctx: RunContext):
             # cached artifacts lean on the common CSR paths
             keep_blocks=(ctx.method == "tile"),
             bucketize=(ctx.method == "search2"),
+            rebalance_trials=ctx.rebalance_trials,
             cache=ctx.cache,
         )
         plan = ctx.artifact.plan
@@ -279,7 +287,8 @@ def _run_summa(graph: Graph, mesh, ctx: RunContext):
     r, c = mesh.shape[names[-2]], mesh.shape[names[-1]]
     ctx.artifact = plan_summa(
         graph, r, c, chunk=ctx.chunk, reorder=ctx.reorder,
-        cyclic_p=ctx.cyclic_p, cache=ctx.cache,
+        cyclic_p=ctx.cyclic_p, rebalance_trials=ctx.rebalance_trials,
+        cache=ctx.cache,
     )
     splan = ctx.artifact.plan
     staged = ctx.artifact.staged()
@@ -307,7 +316,8 @@ def _run_oned(graph: Graph, mesh, ctx: RunContext):
     flat_mesh = compat.make_mesh((p,), ("flat",))
     ctx.artifact = plan_oned(
         graph, p, chunk=ctx.chunk, reorder=ctx.reorder,
-        cyclic_p=ctx.cyclic_p, cache=ctx.cache,
+        cyclic_p=ctx.cyclic_p, rebalance_trials=ctx.rebalance_trials,
+        cache=ctx.cache,
     )
     oplan = ctx.artifact.plan
     staged = ctx.artifact.staged()
@@ -365,6 +375,7 @@ def count_triangles(
     plan: Optional[TCPlan] = None,
     use_step_mask: Optional[bool] = None,
     double_buffer: bool = True,
+    rebalance_trials: int = 0,
     cache=None,
 ) -> TCResult:
     """Count triangles with the paper's 2D algorithm.
@@ -378,7 +389,11 @@ def count_triangles(
     ``use_step_mask`` controls sparsity-aware step skipping (None =
     auto: on when the plan staged ``step_keep`` masks; False forces the
     unmasked engine); ``double_buffer`` selects Cannon's
-    communication-overlapped scan body.  Planning goes
+    communication-overlapped scan body.  ``rebalance_trials > 0`` runs
+    the skip-aware rebalance stage (DESIGN.md §4.3) during planning —
+    it needs a pipeline-backed schedule and a pipeline-made plan, so it
+    is rejected alongside a caller-supplied ``plan`` or a schedule
+    registered without ``plans_itself``.  Planning goes
     through the content-addressed plan cache (``cache=None`` uses the
     process-wide default — pass a ``repro.pipeline.PlanCache`` to
     isolate, or one with ``maxsize=0`` to disable): repeated counts of
@@ -398,6 +413,12 @@ def count_triangles(
         count_dtype = compat.default_count_dtype()
 
     spec = get_schedule(schedule)
+    if rebalance_trials and (plan is not None or not spec.plans_itself):
+        raise ValueError(
+            "rebalance_trials requires planning through the pipeline: "
+            "drop the caller-supplied plan and use a schedule registered "
+            "with plans_itself=True"
+        )
     if not spec.plans_itself and (reorder or cyclic_p is not None):
         # pre-pipeline runner contract: hand it the relabeled graph
         from ..pipeline import relabel_stage
@@ -416,6 +437,7 @@ def count_triangles(
         double_buffer=double_buffer,
         reorder=reorder,
         cyclic_p=cyclic_p,
+        rebalance_trials=rebalance_trials,
         cache=cache,
     )
     total, out_plan = spec.runner(graph, mesh, ctx)
@@ -433,6 +455,7 @@ def count_triangles(
         method=method,
         schedule=schedule,
         grid=(npods, q, q) if npods > 1 else (q, q),
+        rebalance=getattr(ctx.artifact, "rebalance", None),
     )
 
 

@@ -21,6 +21,7 @@ from .graph import Graph
 __all__ = [
     "rmat",
     "erdos_renyi",
+    "powerlaw",
     "star",
     "residue_cliques",
     "named_graph",
@@ -71,6 +72,36 @@ def erdos_renyi(n: int, avg_degree: float, seed: int = 0, name=None) -> Graph:
     src = rng.integers(0, n, size=2 * m)  # oversample to survive dedup
     dst = rng.integers(0, n, size=2 * m)
     g = Graph.from_edges(n, src, dst, name=name or f"er-{n}")
+    if g.m > m:
+        g = Graph(n=n, edges=g.edges[:m], name=g.name)
+    return g
+
+
+def powerlaw(
+    n: int,
+    alpha: float = 2.5,
+    avg_degree: float = 8.0,
+    seed: int = 0,
+    name=None,
+) -> Graph:
+    """Chung–Lu-style skewed-degree fixture, deterministic given ``seed``.
+
+    Endpoint ``v`` is drawn with probability ∝ ``(v + 1)^(-1/(alpha-1))``
+    (the expected-degree sequence of a power law with exponent ``alpha``),
+    so low ids become hubs and the degree distribution is heavy-tailed —
+    the imbalance regime where the skip-aware rebalancer has real ties to
+    break (many equal-degree leaves) *and* real stragglers to spread
+    (hub-heavy blocks).  Sampled edges are deduplicated/symmetrized like
+    :func:`erdos_renyi`.
+    """
+    assert alpha > 1.0, "powerlaw needs alpha > 1"
+    rng = np.random.default_rng(seed)
+    w = np.arange(1, n + 1, dtype=np.float64) ** (-1.0 / (alpha - 1.0))
+    p = w / w.sum()
+    m = int(avg_degree * n / 2)
+    src = rng.choice(n, size=2 * m, p=p)  # oversample to survive dedup
+    dst = rng.choice(n, size=2 * m, p=p)
+    g = Graph.from_edges(n, src, dst, name=name or f"powerlaw-{n}")
     if g.m > m:
         g = Graph(n=n, edges=g.edges[:m], name=g.name)
     return g
@@ -147,7 +178,9 @@ def graph_from_spec(spec: str) -> Graph:
     """Parse a command-line graph spec (shared by tc_run / serve / benches).
 
     Formats: ``rmat:<scale>[,<edge_factor>[,<seed>]]`` |
-    ``er:<n>,<avg_degree>[,<seed>]`` | ``star:<n>`` |
+    ``er:<n>,<avg_degree>[,<seed>]`` |
+    ``powerlaw:<n>,<alpha>[,<seed>]`` (skewed-degree rebalance fixture) |
+    ``star:<n>`` |
     ``cliques:<k>,<size>`` (block-diagonal skip-mask fixture) |
     ``named:<id>`` | ``<id>`` (a bare named-graph id such as ``karate``).
     """
@@ -157,6 +190,13 @@ def graph_from_spec(spec: str) -> Graph:
     if kind == "cliques":
         parts = rest.split(",")
         return residue_cliques(int(parts[0]), int(parts[1]))
+    if kind == "powerlaw":
+        parts = rest.split(",")
+        return powerlaw(
+            int(parts[0]),
+            float(parts[1]),
+            seed=int(parts[2]) if len(parts) > 2 else 0,
+        )
     if kind == "rmat":
         parts = rest.split(",")
         return rmat(
@@ -197,6 +237,12 @@ def _spec_is_wellformed(spec: str) -> bool:
             return len(parts) == 1 and int(parts[0]) >= 2
         if kind == "cliques":
             return len(parts) == 2 and all(int(p) >= 1 for p in parts)
+        if kind == "powerlaw":
+            if len(parts) not in (2, 3):
+                return False
+            if not (int(parts[0]) >= 2 and float(parts[1]) > 1.0):
+                return False
+            return len(parts) == 2 or int(parts[2]) >= 0
     except ValueError:
         return False
     if kind == "named":

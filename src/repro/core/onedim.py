@@ -46,6 +46,9 @@ class OneDPlan:
     t_cnt: np.ndarray  # (p, p)
     # (p, p) bool: True = device d counts at ring step t
     step_keep: "np.ndarray | None" = None
+    # per-step probe work (repro.core.plan.StepStats) when planned
+    # with_stats — consumed by the skip-aware rebalancer
+    stats: "object | None" = None
 
     def device_arrays(self) -> Dict[str, np.ndarray]:
         out = dict(

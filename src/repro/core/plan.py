@@ -36,6 +36,7 @@ __all__ = [
     "build_plan",
     "analytic_plan",
     "PlanStats",
+    "StepStats",
     "as_plan",
     "resolve_step_mask",
 ]
@@ -86,6 +87,20 @@ class PlanStats:
     intersection_tasks_total: int  # paper Table 4 metric
     padding_fraction_indices: float
     padding_fraction_tasks: float
+
+
+@dataclasses.dataclass
+class StepStats:
+    """Per-(device, step) probe work for the non-Cannon schedules.
+
+    The lean sibling of :class:`PlanStats`: just enough for the
+    skip-aware rebalancer's masked-critical-path cost model (DESIGN.md
+    §4.3) — SUMMA broadcast rounds carry a ``(r, c, c)`` array, the 1D
+    ring a ``(p, p)`` one; the last axis is always the schedule step.
+    """
+
+    probe_work_per_device_shift: np.ndarray  # (..., nsteps) int64
+    probe_imbalance: float  # max/avg of per-device total probe work
 
 
 @dataclasses.dataclass

@@ -59,6 +59,9 @@ class SummaPlan:
     m_cnt: np.ndarray  # (r, c)
     # (r, c, c) bool: True = device (x, y) counts at broadcast round z
     step_keep: "np.ndarray | None" = None
+    # per-round probe work (repro.core.plan.StepStats) when planned
+    # with_stats — consumed by the skip-aware rebalancer
+    stats: "object | None" = None
 
     def device_arrays(self) -> Dict[str, np.ndarray]:
         out = dict(

@@ -44,7 +44,9 @@ def main():
     ap.add_argument("--fail-at-shift", type=int, default=None,
                     help="inject one failure at this shift (FT demo)")
     ap.add_argument("--rebalance", type=int, default=0,
-                    help="planner rebalance trials (straggler mitigation)")
+                    help="skip-aware rebalance trials: search this many "
+                         "relabeling seeds for the lowest masked critical "
+                         "path (straggler mitigation, any schedule)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -69,6 +71,12 @@ def main():
             f"registered: {available_schedules()}"
         )
 
+    if args.rebalance and (args.graphs or args.ckpt_dir):
+        raise SystemExit(
+            "--rebalance is not supported with --graphs or --ckpt-dir; "
+            "rebalance single full-engine runs"
+        )
+
     if args.graphs:
         return _run_batched(args)
 
@@ -81,13 +89,6 @@ def main():
         report.update(timings)
     else:
         t0 = time.perf_counter()
-        plan = None
-        if args.rebalance:
-            from ..runtime.rebalance import rebalance_plan
-
-            g2, _ = preprocess(g)
-            plan, rb = rebalance_plan(g2, args.grid, trials=args.rebalance)
-            report["rebalance"] = rb["improvement"]
         if args.opt and args.schedule == "cannon":
             # §Perf H1a+H1b: bucketed probes + compressed shift blobs
             import jax.numpy as jnp
@@ -98,13 +99,23 @@ def main():
             from ..core.plan import bucketize_plan
 
             build_cannon_fn = get_schedule("cannon").build_fn
-            g2, _ = preprocess(g)
+            if args.rebalance:
+                from ..pipeline import plan_cannon
+
+                art = plan_cannon(
+                    g, args.grid, chunk=args.chunk, keep_blocks=True,
+                    rebalance_trials=args.rebalance,
+                )
+                report.update(_rebalance_fields(art.rebalance))
+                base_plan = art.plan
+            else:
+                g2, _ = preprocess(g)
+                base_plan = build_plan(g2, args.grid, chunk=args.chunk)
+            bplan = bucketize_plan(base_plan)
+            # host planning done: ppt = t1o - t0; engine build+trace stay
+            # inside tct for repeat==1, as before
             t1o = time.perf_counter()
-            bplan = bucketize_plan(
-                plan or build_plan(g2, args.grid, chunk=args.chunk)
-            )
-            mesh = make_grid_mesh(args.grid, npods=args.pods) \
-                if args.pods == 1 else make_grid_mesh(args.grid, npods=args.pods)
+            mesh = make_grid_mesh(args.grid, npods=args.pods)
             fn = build_cannon_fn(
                 bplan, mesh, method="search2", compress_lengths=True,
                 count_dtype=compat.default_count_dtype(),
@@ -114,7 +125,7 @@ def main():
             staged = {
                 k: jnp.asarray(v) for k, v in bplan.device_arrays().items()
             }
-            t_run = t1o  # repeat==1 keeps build+trace inside tct, as before
+            t_run = t1o
             for i in range(max(1, args.repeat)):
                 if i:
                     t_run = time.perf_counter()
@@ -126,12 +137,7 @@ def main():
                 optimized=True,
                 bucket_reduction=round(bplan.bucket_stats["reduction"], 3),
             )
-            sk = getattr(bplan, "step_keep", None)
-            if sk is not None:
-                report["schedule_steps"] = int(sk.size)
-                report["skipped_steps"] = (
-                    0 if args.no_skip_mask else int(sk.size - sk.sum())
-                )
+            report.update(_skip_fields(bplan, args.no_skip_mask))
             if args.verify:
                 from ..core import triangle_count_oracle
 
@@ -153,11 +159,12 @@ def main():
                 method=args.method,
                 chunk=args.chunk,
                 probe_shorter=not args.no_probe_shorter,
-                plan=plan,
-                reorder=plan is None,
                 use_step_mask=False if args.no_skip_mask else None,
                 double_buffer=not args.no_double_buffer,
+                rebalance_trials=args.rebalance,
             )
+        if res.rebalance is not None:
+            report.update(_rebalance_fields(res.rebalance))
         report.update(
             triangles=res.triangles,
             ppt_seconds=round(res.preprocess_seconds, 4),
@@ -165,13 +172,7 @@ def main():
             total_seconds=round(time.perf_counter() - t0, 4),
             grid=res.grid,
         )
-        sk = getattr(res.plan, "step_keep", None)
-        if sk is not None:
-            # per-(device, step) mask entries the engine short-circuits
-            report["schedule_steps"] = int(sk.size)
-            report["skipped_steps"] = (
-                0 if args.no_skip_mask else int(sk.size - sk.sum())
-            )
+        report.update(_skip_fields(res.plan, args.no_skip_mask))
         total = res.triangles
 
     if args.verify:
@@ -185,6 +186,38 @@ def main():
     else:
         for k, v in report.items():
             print(f"{k}: {v}")
+
+
+def _skip_fields(plan, no_skip_mask: bool) -> dict:
+    """Per-(device, step) skip-mask accounting shared by the --opt and
+    default report paths."""
+    sk = getattr(plan, "step_keep", None)
+    if sk is None:
+        return {}
+    return dict(
+        schedule_steps=int(sk.size),
+        skipped_steps=0 if no_skip_mask else int(sk.size - sk.sum()),
+    )
+
+
+def _rebalance_fields(rb: dict) -> dict:
+    """Flatten a pipeline rebalance report into tc_run report fields:
+    masked-critical-path improvement and the skipped-step delta vs the
+    seed-0 baseline."""
+    import math
+
+    impr = rb["improvement"]
+    return dict(
+        rebalance_trials=len(rb["trials"]),
+        rebalance_best_seed=rb["best_seed"],
+        rebalance_baseline_critical_path=rb["baseline_masked_critical_path"],
+        rebalance_masked_critical_path=rb["best_masked_critical_path"],
+        # inf (best path hit literal zero) is not valid JSON: emit null
+        rebalance_improvement=round(impr, 4) if math.isfinite(impr) else None,
+        rebalance_skipped_delta=(
+            rb["skipped_steps"] - rb["baseline_skipped_steps"]
+        ),
+    )
 
 
 def _run_batched(args):

@@ -21,10 +21,18 @@ from .cache import (  # noqa: F401
     set_default_cache,
 )
 from .planner import plan_cannon, plan_oned, plan_summa  # noqa: F401
+from .rebalance import (  # noqa: F401
+    masked_critical_path,
+    rebalance_stage,
+    rebalance_trial_perm,
+)
 from .stages import relabel_stage  # noqa: F401
 
 __all__ = [
     "relabel_stage",
+    "rebalance_stage",
+    "rebalance_trial_perm",
+    "masked_critical_path",
     "PlanArtifact",
     "PlanCache",
     "ManyResult",

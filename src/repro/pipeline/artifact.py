@@ -42,6 +42,11 @@ class PlanArtifact:
     plan: Any  # TCPlan | SummaPlan | OneDPlan
     stage_seconds: Dict[str, float] = dataclasses.field(default_factory=dict)
     cache_hit: bool = False
+    # skip-aware rebalance search report (DESIGN.md §4.3): trial history,
+    # winning seed, baseline/best masked critical path, skipped steps;
+    # None when the plan was not rebalanced.  The trials knob is part of
+    # ``key``, so rebalanced and plain artifacts never collide.
+    rebalance: Optional[dict] = None
     _memo: Dict = dataclasses.field(default_factory=dict, repr=False)
     _memo_lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False

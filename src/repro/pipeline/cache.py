@@ -89,6 +89,18 @@ class PlanCache:
                 self._entries.popitem(last=False)
                 self.evictions += 1
 
+    def memo(self, key: Hashable, build) -> Any:
+        """Get-or-build: return the cached value, building (outside the
+        lock) and storing it on a miss.  NOTE: concurrent misses may both
+        build; the last ``put`` wins — acceptable for pipeline products,
+        which are pure functions of their key."""
+        hit = self.get(key)
+        if hit is not None:
+            return hit
+        out = build()
+        self.put(key, out)
+        return out
+
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()

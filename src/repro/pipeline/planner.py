@@ -17,6 +17,7 @@ from ..core.graph import Graph
 from ..core.plan import bucketize_plan
 from .artifact import PlanArtifact
 from .cache import PlanCache, default_cache, graph_digest
+from .rebalance import rebalance_stage
 from .stages import (
     pack_oned_plan,
     pack_summa_plan,
@@ -36,13 +37,31 @@ def relabel_cached(
     cache: PlanCache,
 ):
     """Relabel stage behind the cache: shared across plan kinds."""
-    key = ("relabel", digest, reorder, cyclic_p)
-    hit = cache.get(key)
-    if hit is not None:
-        return hit
-    out = relabel_stage(graph, reorder=reorder, cyclic_p=cyclic_p)
-    cache.put(key, out)
-    return out
+    return cache.memo(
+        ("relabel", digest, reorder, cyclic_p),
+        lambda: relabel_stage(graph, reorder=reorder, cyclic_p=cyclic_p),
+    )
+
+
+def _rebalanced(g2, perm, trials, reorder, pack_trial, seconds):
+    """Run the rebalance stage between relabel and pack (no-op when off).
+
+    Trials pack lean (stats + masks only); the returned winner plan is
+    reused by callers whose flags match the trial flags, and re-packed
+    otherwise — so the stage composes with any pack configuration
+    (keep_blocks, bucketize, step_masks=False, ...).
+    """
+    if not trials:
+        return g2, perm, None, None
+    if not reorder:
+        raise ValueError(
+            "rebalance_trials requires reorder=True: trial relabelings "
+            "shuffle within equal-degree runs of the degree ordering"
+        )
+    t0 = time.perf_counter()
+    g2, perm, best_plan, report = rebalance_stage(g2, perm, trials, pack_trial)
+    seconds["rebalance"] = time.perf_counter() - t0
+    return g2, perm, best_plan, report
 
 
 def _drive(kind, graph, key_tail, cache, pack):
@@ -78,6 +97,7 @@ def plan_cannon(
     bucketize: bool = False,
     d_small: int = 32,
     step_masks: bool = True,
+    rebalance_trials: int = 0,
     cache: Optional[PlanCache] = None,
 ) -> PlanArtifact:
     """Plan the 2D-cyclic (Cannon family) execution of ``graph`` on a
@@ -87,7 +107,10 @@ def plan_cannon(
     (for ``method="search2"``) under its own cache entry;
     ``step_masks`` stages the per-(device, shift) skip mask the engine
     consumes for sparsity-aware step skipping (part of the cache key —
-    masked and unmasked artifacts are distinct entries)."""
+    masked and unmasked artifacts are distinct entries).
+    ``rebalance_trials > 0`` runs the skip-aware rebalance stage
+    (DESIGN.md §4.3) over that many relabeling seeds; the trials knob is
+    part of the cache key, the winning seed lands on the artifact."""
 
     def pack(digest, key, seconds, cache_):
         t0 = time.perf_counter()
@@ -95,27 +118,41 @@ def plan_cannon(
             graph, digest, reorder=reorder, cyclic_p=cyclic_p, cache=cache_
         )
         seconds["relabel"] = time.perf_counter() - t0
-        t1 = time.perf_counter()
-        plan = pack_tc_plan(
-            g2,
-            q,
-            skew=skew,
-            chunk=chunk,
-            with_stats=with_stats,
-            keep_blocks=keep_blocks or bucketize,
-            step_masks=step_masks,
+        g2, perm, best_plan, rb = _rebalanced(
+            g2, perm, rebalance_trials, reorder,
+            lambda gt: pack_tc_plan(
+                gt, q, skew=skew, chunk=chunk, with_stats=True,
+                keep_blocks=False, step_masks=True,
+            ),
+            seconds,
         )
-        if bucketize:
-            plan = bucketize_plan(plan, d_small=d_small)
+        t1 = time.perf_counter()
+        if best_plan is not None and (
+            with_stats and not (keep_blocks or bucketize) and step_masks
+        ):  # caller flags == trial flags: the winner pack is the plan
+            plan = best_plan
+        else:
+            plan = pack_tc_plan(
+                g2,
+                q,
+                skew=skew,
+                chunk=chunk,
+                with_stats=with_stats,
+                keep_blocks=keep_blocks or bucketize,
+                step_masks=step_masks,
+            )
+            if bucketize:
+                plan = bucketize_plan(plan, d_small=d_small)
         seconds["decompose+pack"] = time.perf_counter() - t1
         return PlanArtifact(
             kind="cannon", digest=digest, key=key, graph=g2, perm=perm,
-            plan=plan,
+            plan=plan, rebalance=rb,
         )
 
     tail = (
         q, skew, chunk, reorder, cyclic_p, with_stats, keep_blocks,
         bucketize, d_small if bucketize else None, step_masks,
+        rebalance_trials,
     )
     return _drive("cannon", graph, tail, cache, pack)
 
@@ -129,6 +166,7 @@ def plan_summa(
     reorder: bool = True,
     cyclic_p: Optional[int] = None,
     step_masks: bool = True,
+    rebalance_trials: int = 0,
     cache: Optional[PlanCache] = None,
 ) -> PlanArtifact:
     """Plan the SUMMA execution on an ``r x c`` grid, through the cache."""
@@ -139,15 +177,28 @@ def plan_summa(
             graph, digest, reorder=reorder, cyclic_p=cyclic_p, cache=cache_
         )
         seconds["relabel"] = time.perf_counter() - t0
+        g2, perm, best_plan, rb = _rebalanced(
+            g2, perm, rebalance_trials, reorder,
+            lambda gt: pack_summa_plan(
+                gt, r, c, chunk=chunk, step_masks=True, with_stats=True
+            ),
+            seconds,
+        )
         t1 = time.perf_counter()
-        plan = pack_summa_plan(g2, r, c, chunk=chunk, step_masks=step_masks)
+        if best_plan is not None and step_masks:
+            plan = best_plan  # caller flags == trial flags
+        else:
+            plan = pack_summa_plan(
+                g2, r, c, chunk=chunk, step_masks=step_masks,
+                with_stats=bool(rebalance_trials),
+            )
         seconds["decompose+pack"] = time.perf_counter() - t1
         return PlanArtifact(
             kind="summa", digest=digest, key=key, graph=g2, perm=perm,
-            plan=plan,
+            plan=plan, rebalance=rb,
         )
 
-    tail = (r, c, chunk, reorder, cyclic_p, step_masks)
+    tail = (r, c, chunk, reorder, cyclic_p, step_masks, rebalance_trials)
     return _drive("summa", graph, tail, cache, pack)
 
 
@@ -159,6 +210,7 @@ def plan_oned(
     reorder: bool = True,
     cyclic_p: Optional[int] = None,
     step_masks: bool = True,
+    rebalance_trials: int = 0,
     cache: Optional[PlanCache] = None,
 ) -> PlanArtifact:
     """Plan the 1D-ring baseline over ``p`` devices, through the cache."""
@@ -169,13 +221,26 @@ def plan_oned(
             graph, digest, reorder=reorder, cyclic_p=cyclic_p, cache=cache_
         )
         seconds["relabel"] = time.perf_counter() - t0
+        g2, perm, best_plan, rb = _rebalanced(
+            g2, perm, rebalance_trials, reorder,
+            lambda gt: pack_oned_plan(
+                gt, p, chunk=chunk, step_masks=True, with_stats=True
+            ),
+            seconds,
+        )
         t1 = time.perf_counter()
-        plan = pack_oned_plan(g2, p, chunk=chunk, step_masks=step_masks)
+        if best_plan is not None and step_masks:
+            plan = best_plan  # caller flags == trial flags
+        else:
+            plan = pack_oned_plan(
+                g2, p, chunk=chunk, step_masks=step_masks,
+                with_stats=bool(rebalance_trials),
+            )
         seconds["decompose+pack"] = time.perf_counter() - t1
         return PlanArtifact(
             kind="oned", digest=digest, key=key, graph=g2, perm=perm,
-            plan=plan,
+            plan=plan, rebalance=rb,
         )
 
-    tail = (p, chunk, reorder, cyclic_p, step_masks)
+    tail = (p, chunk, reorder, cyclic_p, step_masks, rebalance_trials)
     return _drive("oned", graph, tail, cache, pack)

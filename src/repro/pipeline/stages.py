@@ -29,7 +29,7 @@ import numpy as np
 from ..core.decomp import CyclicCOO, blocks_from_coo, cyclic_coo
 from ..core.graph import Graph
 from ..core.onedim import OneDPlan
-from ..core.plan import INT, PlanStats, TCPlan
+from ..core.plan import INT, PlanStats, StepStats, TCPlan
 from ..core.preprocess import cyclic_relabel, degree_order
 from ..core.summa import SummaPlan
 
@@ -37,6 +37,8 @@ __all__ = [
     "relabel_stage",
     "emit_block_arrays",
     "cannon_step_keep",
+    "summa_probe_work",
+    "oned_probe_work",
     "pack_tc_plan",
     "pack_summa_plan",
     "pack_oned_plan",
@@ -248,13 +250,74 @@ def pack_tc_plan(
     )
 
 
+def summa_probe_work(acoo: CyclicCOO, bcoo: CyclicCOO, r: int, c: int) -> np.ndarray:
+    """Per-(device, round) probe work for SUMMA, ``(r, c, c)`` int64.
+
+    Broadcast round ``z`` hands device ``(x, y)`` the A panel ``(x, z)``
+    and the B panel ``(y, z)``; each task ``(i, j)`` of its mask block
+    then intersects row ``i`` of the A panel with row ``j`` of the B
+    panel, so the round's work is ``sum(min(la, lb))`` over tasks with
+    both fragments non-empty (the SUMMA analogue of
+    :func:`_tc_plan_stats`'s Cannon probe)."""
+    rowcnt_a = acoo.rowcnt.reshape(r, c, acoo.rows_loc)
+    rowcnt_b = bcoo.rowcnt.reshape(c, c, bcoo.rows_loc)
+    probe = np.zeros((r, c, c), dtype=np.int64)
+    for x in range(r):
+        for y in range(c):
+            b = x * c + y
+            lo, hi = acoo.starts[b], acoo.starts[b + 1]
+            rows = acoo.li_s[lo:hi]
+            cols = acoo.lj_s[lo:hi]
+            for z in range(c):
+                la = rowcnt_a[x, z][rows]
+                lb = rowcnt_b[y, z][cols]
+                both = (la > 0) & (lb > 0)
+                probe[x, y, z] = int(np.minimum(la, lb)[both].sum())
+    return probe
+
+
+def oned_probe_work(
+    rowcnt: np.ndarray, t_i: np.ndarray, t_j: np.ndarray,
+    gcnt: np.ndarray, p: int,
+) -> np.ndarray:
+    """Per-(device, ring step) probe work for the 1D baseline, ``(p, p)``.
+
+    At ring step ``t`` device ``d`` holds owner ``o = (d + t) % p``'s row
+    block and counts its task group ``(d, o)``: row ``i`` comes from its
+    own block, row ``j`` from the arriving one."""
+    probe = np.zeros((p, p), dtype=np.int64)
+    for d in range(p):
+        for o in range(p):
+            cnt = int(gcnt[d * p + o])
+            if not cnt:
+                continue
+            la = rowcnt[d][t_i[d * p + o, :cnt]]
+            lb = rowcnt[o][t_j[d * p + o, :cnt]]
+            both = (la > 0) & (lb > 0)
+            probe[d, (o - d) % p] = int(np.minimum(la, lb)[both].sum())
+    return probe
+
+
+def _step_stats(probe: np.ndarray) -> StepStats:
+    per_dev = probe.reshape(-1, probe.shape[-1]).sum(axis=1)
+    return StepStats(
+        probe_work_per_device_shift=probe,
+        probe_imbalance=float(per_dev.max() / max(1.0, per_dev.mean()))
+        if per_dev.size else 1.0,
+    )
+
+
 def pack_summa_plan(
     graph: Graph, r: int, c: int, *, chunk: int = 512,
-    step_masks: bool = True,
+    step_masks: bool = True, with_stats: bool = False,
 ) -> SummaPlan:
     """Vectorized SUMMA planner (semantics of
     :func:`repro.core.summa.build_summa_plan`): A/mask blocks from one
-    ``(r, c)`` pass, B panels gathered from one ``(c, c)`` pass."""
+    ``(r, c)`` pass, B panels gathered from one ``(c, c)`` pass.
+
+    ``with_stats`` computes per-round probe work (:class:`StepStats`) —
+    the skip-aware rebalancer's cost input — and, like the Cannon
+    packer, refines the skip mask to exact zero-work rounds."""
     n, m = graph.n, graph.m
     nb_r = -(-n // r)
     nb_c = -(-n // c)
@@ -276,6 +339,12 @@ def pack_summa_plan(
         b_indptr[kc % r, :, kc // r] = cb_ptr[:, kc]
         b_indices[kc % r, :, kc // r] = cb_idx[:, kc]
 
+    stats = None
+    probe = None
+    if with_stats:
+        probe = summa_probe_work(acoo, bcoo, r, c)
+        stats = _step_stats(probe)
+
     step_keep = None
     if step_masks:
         # step z broadcasts A panel (x, z) and B panel (y, z): skip the
@@ -285,6 +354,10 @@ def pack_summa_plan(
         step_keep = (
             (m_cnt > 0)[:, :, None] & a_nz[:, None, :] & b_nz[None, :, :]
         )
+        if probe is not None:
+            # probe == 0 ⇒ every task has an empty fragment side ⇒ the
+            # round's count is provably zero even with non-empty panels
+            step_keep &= probe > 0
 
     dmax = max(1, acoo.row_len_max, bcoo.row_len_max)
     return SummaPlan(
@@ -308,16 +381,22 @@ def pack_summa_plan(
         m_tj=m_tj,
         m_cnt=m_cnt,
         step_keep=step_keep,
+        stats=stats,
     )
 
 
 def pack_oned_plan(
-    graph: Graph, p: int, *, chunk: int = 512, step_masks: bool = True
+    graph: Graph, p: int, *, chunk: int = 512, step_masks: bool = True,
+    with_stats: bool = False,
 ) -> OneDPlan:
     """Vectorized 1D planner (semantics of
     :func:`repro.core.onedim.build_oned_plan`): the per-device row CSR
     and the owner-grouped task lists are both single-sort scatters —
-    the old per-edge Python fill loop is gone."""
+    the old per-edge Python fill loop is gone.
+
+    ``with_stats`` computes per-step probe work (:class:`StepStats`) for
+    the skip-aware rebalancer and refines the skip mask to exact
+    zero-work ring steps."""
     n, m = graph.n, graph.m
     nb = -(-n // p)
     i = graph.edges[:, 0]
@@ -351,6 +430,12 @@ def pack_oned_plan(
     t_i[gid_s, goffs] = i[gorder] // p
     t_j[gid_s, goffs] = j[gorder] // p
 
+    stats = None
+    probe = None
+    if with_stats:
+        probe = oned_probe_work(rowcnt, t_i, t_j, gcnt, p)
+        stats = _step_stats(probe)
+
     step_keep = None
     if step_masks:
         # device d at ring step t holds owner o = (d + t) % p's rotating
@@ -361,6 +446,8 @@ def pack_oned_plan(
         o = (d + t) % p
         t_cnt_pp = gcnt.reshape(p, p)
         step_keep = (t_cnt_pp[d, o] > 0) & (dev_cnt[o] > 0)
+        if probe is not None:
+            step_keep &= probe > 0
 
     dmax = max(1, int(rowcnt.max()) if m else 0)
     return OneDPlan(
@@ -378,6 +465,7 @@ def pack_oned_plan(
         t_j=t_j.reshape(p, p, gmax),
         t_cnt=gcnt.reshape(p, p).astype(INT),
         step_keep=step_keep,
+        stats=stats,
     )
 
 

@@ -4,66 +4,61 @@ In lockstep SPMD the slowest device per shift sets the pace, so the lever
 against stragglers is *balance*: the paper relies on degree-ordered cyclic
 distribution (Table 3 measures <= 6% task imbalance / 1.05-1.14 per-shift
 runtime imbalance).  We go further (beyond paper): a randomized-relabeling
-search perturbs the vertex order *within equal-degree runs* (preserving
-the non-decreasing-degree property that the algorithm's correctness and
-locality arguments rely on) and keeps the seed minimizing the max
-per-device probe work.  Gains are measured in
+search perturbs the vertex order *within equal-degree runs* and keeps the
+seed minimizing the **masked critical path** — the max per-device probe
+work on *kept* (non-skipped) steps per shift, i.e. what the engine
+actually executes with sparsity-aware step skipping on.
+
+This module is the thin front-end; the search itself is the pipeline's
+composable rebalance stage (:mod:`repro.pipeline.rebalance`, DESIGN.md
+§4.3), so it runs behind the content-addressed plan cache and supports
+all three schedules.  Gains are measured in
 benchmarks/table3_imbalance.py.
 """
 from __future__ import annotations
 
 from typing import Tuple
 
-import numpy as np
-
 from ..core.graph import Graph
-from ..core.plan import TCPlan, build_plan
 
-__all__ = ["rebalance_plan", "shuffled_degree_order"]
-
-
-def shuffled_degree_order(graph: Graph, seed: int) -> np.ndarray:
-    """Degree-order permutation with within-degree-bucket shuffling."""
-    deg = graph.degrees()
-    rng = np.random.default_rng(seed)
-    jitter = rng.random(graph.n)
-    order = np.lexsort((jitter, deg))  # non-decreasing degree, random ties
-    perm = np.empty(graph.n, dtype=np.int64)
-    perm[order] = np.arange(graph.n)
-    return perm
+__all__ = ["rebalance_plan"]
 
 
 def rebalance_plan(
-    graph: Graph, q: int, *, trials: int = 8, chunk: int = 512
-) -> Tuple[TCPlan, dict]:
-    """Search relabeling seeds; return the best-balanced plan + report."""
-    best_plan = None
-    best_cost = float("inf")
-    history = []
-    for seed in range(trials):
-        perm = shuffled_degree_order(graph, seed)
-        g2 = graph.relabel(perm)
-        plan = build_plan(g2, q, chunk=chunk, with_stats=True)
-        # cost: max per-device probe work summed over shifts (the SPMD
-        # critical path), tie-broken by task imbalance
-        probe = plan.stats.probe_work_per_device_shift
-        crit = float(probe.max(axis=(0, 1)).sum())
-        history.append(
-            dict(
-                seed=seed,
-                critical_path=crit,
-                task_imbalance=plan.stats.task_imbalance,
-                probe_imbalance=plan.stats.probe_imbalance,
-            )
+    graph: Graph,
+    q: int,
+    *,
+    trials: int = 8,
+    chunk: int = 512,
+    schedule: str = "cannon",
+    cache=None,
+) -> Tuple[object, dict]:
+    """Search relabeling seeds; return the best-balanced plan + report.
+
+    Pipeline-backed: plans the *raw* graph through the cached planning
+    pipeline with its skip-aware rebalance stage.  ``schedule`` picks the
+    plan family — ``cannon`` (``q x q``), ``summa`` (``q x q``), or
+    ``oned`` (``p = q``).  The report carries the trial history, the
+    winning seed, ``baseline/best`` masked critical paths, the
+    ``improvement`` ratio (baseline / best, guarded only against a
+    literal-zero best), and the winner's ``skipped_steps``.
+    """
+    from ..pipeline import plan_cannon, plan_oned, plan_summa
+
+    trials = max(1, int(trials))
+    if schedule == "cannon":
+        art = plan_cannon(
+            graph, q, chunk=chunk, keep_blocks=False,
+            rebalance_trials=trials, cache=cache,
         )
-        if crit < best_cost:
-            best_cost = crit
-            best_plan = plan
-    report = dict(
-        trials=history,
-        best_seed=min(history, key=lambda h: h["critical_path"])["seed"],
-        improvement=(
-            history[0]["critical_path"] / max(best_cost, 1.0)
-        ),
-    )
-    return best_plan, report
+    elif schedule == "summa":
+        art = plan_summa(
+            graph, q, q, chunk=chunk, rebalance_trials=trials, cache=cache
+        )
+    elif schedule == "oned":
+        art = plan_oned(
+            graph, q, chunk=chunk, rebalance_trials=trials, cache=cache
+        )
+    else:
+        raise ValueError(f"unknown schedule {schedule!r}")
+    return art.plan, art.rebalance

@@ -111,3 +111,84 @@ def test_bucketed_property(seed, dsmall):
     fn = build_cannon_fn(plan, mesh, method="search2")
     got = int(fn(**{k: jnp.asarray(v) for k, v in plan.device_arrays().items()}))
     assert got == exp
+
+
+# ----------------------------------------------------------------------
+# skip-aware rebalance invariants (DESIGN.md §4.3)
+# ----------------------------------------------------------------------
+@given(small_graphs(), st.integers(min_value=1, max_value=6))
+@settings(max_examples=15, deadline=None)
+def test_rebalance_trial_perms_are_degree_monotone_permutations(g, trials):
+    """Every trial perm is a true permutation; degrees stay non-decreasing
+    in the relabeled order; seed 0 is the identity baseline."""
+    from repro.pipeline import relabel_stage
+    from repro.pipeline.rebalance import rebalance_trial_perm
+
+    g2, _ = relabel_stage(g)
+    deg = g2.degrees()
+    for seed in range(trials):
+        tp = rebalance_trial_perm(deg, seed)
+        assert np.array_equal(np.sort(tp), np.arange(g.n))
+        if seed == 0:
+            assert np.array_equal(tp, np.arange(g.n))
+        d2 = g2.relabel(tp).degrees()
+        assert np.all(np.diff(d2) >= 0)
+
+
+@given(small_graphs(), st.integers(min_value=1, max_value=3))
+@settings(max_examples=6, deadline=None)
+def test_rebalance_counts_invariant_across_seeds_and_schedules(g, trials):
+    """Triangle counts are invariant across trial seeds x schedules."""
+    from repro.pipeline import PlanCache
+
+    exp = triangle_count_oracle(g)
+    cache = PlanCache(maxsize=0)
+    for schedule in ("cannon", "summa", "oned"):
+        got = count_triangles(
+            g, q=1, schedule=schedule, rebalance_trials=trials, cache=cache
+        ).triangles
+        assert got == exp, (schedule, trials)
+
+
+@given(small_graphs(), st.integers(min_value=2, max_value=6))
+@settings(max_examples=10, deadline=None)
+def test_rebalance_best_never_worse_than_seed0(g, trials):
+    """The chosen seed's masked critical path is <= the seed-0 baseline
+    (seed 0 is the identity, so the search cannot lose), for all three
+    plan families; the winning relabel preserves the triangle count."""
+    from repro.pipeline import PlanCache, plan_cannon, plan_oned, plan_summa
+
+    exp = triangle_count_oracle(g)
+    cache = PlanCache(maxsize=0)
+    arts = (
+        plan_cannon(
+            g, 2, keep_blocks=False, rebalance_trials=trials, cache=cache
+        ),
+        plan_summa(g, 2, 2, rebalance_trials=trials, cache=cache),
+        plan_oned(g, 3, rebalance_trials=trials, cache=cache),
+    )
+    for art in arts:
+        rb = art.rebalance
+        assert len(rb["trials"]) == trials
+        assert (
+            rb["best_masked_critical_path"]
+            <= rb["baseline_masked_critical_path"]
+        )
+        assert rb["improvement"] >= 1.0
+        assert triangle_count_oracle(art.graph) == exp
+
+
+@given(small_graphs(), st.integers(min_value=1, max_value=4))
+@settings(max_examples=10, deadline=None)
+def test_rebalance_plan_cache_keying(g, trials):
+    """Same graph + same trials -> warm hit; different trials -> a
+    distinct cache key (a miss)."""
+    from repro.pipeline import PlanCache, plan_cannon
+
+    cache = PlanCache(maxsize=8)
+    a1 = plan_cannon(g, 2, rebalance_trials=trials, cache=cache)
+    assert not a1.cache_hit
+    a2 = plan_cannon(g, 2, rebalance_trials=trials, cache=cache)
+    assert a2.cache_hit and a2 is a1
+    a3 = plan_cannon(g, 2, rebalance_trials=trials + 1, cache=cache)
+    assert not a3.cache_hit and a3.key != a1.key

@@ -173,3 +173,39 @@ assert got == exp, (got, exp)
 """
     out = distributed_runner(DIST_CODE.format(body=body), ndev=4)
     assert "OK" in out
+
+
+# ----------------------------------------------------------------------
+# skewed-degree fixture (powerlaw) — generator + spec parsing
+# ----------------------------------------------------------------------
+def test_powerlaw_generator_is_skewed_and_deterministic():
+    from repro.core import powerlaw
+
+    g = powerlaw(400, 2.3, seed=3)
+    assert g.n == 400
+    deg = g.degrees()
+    # heavy-tailed: the hub dwarfs the mean, yet most vertices tie at
+    # low degree (the regime the rebalancer's within-degree shuffles
+    # need); deterministic given the seed
+    assert deg.max() > 10 * deg.mean()
+    assert np.array_equal(g.edges, powerlaw(400, 2.3, seed=3).edges)
+    assert not np.array_equal(g.edges, powerlaw(400, 2.3, seed=4).edges)
+    assert count_triangles(g, q=1).triangles == triangle_count_oracle(g)
+
+
+def test_powerlaw_spec_parsing():
+    from repro.core import graph_from_spec, powerlaw
+    from repro.core.generators import split_specs
+
+    g = graph_from_spec("powerlaw:300,2.5")
+    assert g.n == 300 and np.array_equal(g.edges, powerlaw(300, 2.5).edges)
+    g7 = graph_from_spec("powerlaw:300,2.5,7")
+    assert np.array_equal(g7.edges, powerlaw(300, 2.5, seed=7).edges)
+    # well-formed single specs survive comma-splitting heuristics
+    assert split_specs("powerlaw:300,2.5") == ["powerlaw:300,2.5"]
+    assert split_specs("powerlaw:300,2.5,7") == ["powerlaw:300,2.5,7"]
+    assert split_specs("powerlaw:300,2.5;karate") == [
+        "powerlaw:300,2.5", "karate",
+    ]
+    with pytest.raises(ValueError):
+        graph_from_spec("powerlaw:")
