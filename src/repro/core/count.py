@@ -20,6 +20,7 @@ Everything here is pure ``jnp`` and shape-static, usable inside
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -236,6 +237,39 @@ def build_aug_keys(b_indptr, b_indices):
     return row_of.astype(key_dtype) * base + b_indices.astype(key_dtype)
 
 
+_TWO_LEVEL_KW_WARNED = False
+
+
+def _warn_two_level_kwargs(probe_shorter, sentinel) -> None:
+    """One-time notice that the two-level path ignores search-only knobs.
+
+    The global-key formulation *always* probes the A side into the
+    row-encoded B keys and needs no padding sentinel, so
+    ``probe_shorter``/``sentinel`` are accepted for signature
+    compatibility with :func:`count_pair_search` but have no effect —
+    callers porting from ``search`` must not believe the flags are
+    honored.
+    """
+    global _TWO_LEVEL_KW_WARNED
+    if _TWO_LEVEL_KW_WARNED:
+        return
+    ignored = []
+    if probe_shorter is not True:
+        ignored.append(f"probe_shorter={probe_shorter!r}")
+    if sentinel is not None:
+        ignored.append(f"sentinel={sentinel!r}")
+    if ignored:
+        _TWO_LEVEL_KW_WARNED = True
+        warnings.warn(
+            "count_pair_search_two_level ignores "
+            + ", ".join(ignored)
+            + ": the global-key path always probes the A side and needs "
+            "no sentinel (this notice is emitted once per process)",
+            UserWarning,
+            stacklevel=3,
+        )
+
+
 def count_pair_search_two_level(
     a_indptr,
     a_indices,
@@ -252,6 +286,7 @@ def count_pair_search_two_level(
     probe_shorter: bool = True,
     count_dtype=jnp.int32,
     sentinel: Optional[int] = None,
+    aug_b=None,
 ):
     """Length-bucketed intersection (§Perf hillclimb H1a).
 
@@ -263,8 +298,14 @@ def count_pair_search_two_level(
     padding at all.  For power-law graphs this removes the
     ``dmax/avg_len`` probe-padding waste on >90% of tasks
     (measured in EXPERIMENTS.md §Perf).
+
+    ``probe_shorter``/``sentinel`` are search-path knobs the global-key
+    formulation structurally ignores — passing non-defaults emits a
+    one-time warning rather than silently dropping them.  ``aug_b``
+    accepts planner-staged keys (DESIGN.md §5); when ``None`` the keys
+    are built on device per call.
     """
-    del probe_shorter, sentinel  # global-key path always probes the A side
+    _warn_two_level_kwargs(probe_shorter, sentinel)
     tmax = ti.shape[0]
     n_long_c = -(-max(1, n_long) // chunk) * chunk
     n_long_c = min(n_long_c, tmax)
@@ -272,7 +313,8 @@ def count_pair_search_two_level(
     long_count = jnp.minimum(tcount, n_long_c)
     short_count = jnp.maximum(tcount - n_long_c, 0)
 
-    aug_b = build_aug_keys(b_indptr, b_indices)
+    if aug_b is None:
+        aug_b = build_aug_keys(b_indptr, b_indices)
     acc_long = count_pair_search_global(
         a_indptr,
         a_indices,

@@ -147,13 +147,21 @@ def _search_factory(*, dpad, chunk, probe_shorter, count_dtype, sentinel,
 
 def _search2_factory(*, dpad, chunk, probe_shorter, count_dtype, sentinel,
                      n_long, d_small):
+    # sentinel is plan-derived: builders pass it unconditionally with no
+    # user intent behind it, so drop it here and spare engine users the
+    # one-time ignored-kwarg warning inside count_pair_search_two_level.
+    # probe_shorter is deliberately forwarded: a non-default value only
+    # ever comes from an explicit user request (count_triangles(
+    # probe_shorter=False)) — exactly the search-to-search2 porting
+    # mistake the warning exists to surface.
+    del sentinel
     if n_long is None or d_small is None:
         raise ValueError(
             "method 'search2' needs a bucketized plan (bucketize_plan) "
             "providing n_long/d_small"
         )
 
-    def kernel(a_ptr, a_idx, b_ptr, b_idx, ti, tj, cnt):
+    def kernel(a_ptr, a_idx, b_ptr, b_idx, ti, tj, cnt, aug_b=None):
         return count_mod.count_pair_search_two_level(
             a_ptr, a_idx, b_ptr, b_idx, ti, tj, cnt, n_long,
             dpad_long=dpad,
@@ -161,7 +169,7 @@ def _search2_factory(*, dpad, chunk, probe_shorter, count_dtype, sentinel,
             chunk=chunk,
             probe_shorter=probe_shorter,
             count_dtype=count_dtype,
-            sentinel=sentinel,
+            aug_b=aug_b,
         )
 
     return kernel
@@ -259,13 +267,22 @@ class CSRStore(OperandStore):
     """CSR-block operands shifted as single int32 blobs (paper's
     serialization optimization), with optional uint16 length compression
     (§Perf H1b: ship row-length *pairs* instead of the int32 indptr and
-    rebuild the indptr with one cumsum after each receive)."""
+    rebuild the indptr with one cumsum after each receive).
+
+    ``with_aug=True`` adds the planner-staged row-encoded intersection
+    keys (``b_aug``, DESIGN.md §5) as an extra payload leaf travelling
+    with the B operand: the keys shift with the blocks, so the
+    ``global``/``search2`` kernels never rebuild them on device.  The
+    aug leaf stays outside the int32 blob — its dtype is plan-chosen
+    (``aug_key_dtype``) and may be int64.
+    """
 
     operand_names = ("a_indptr", "a_indices", "b_indptr", "b_indices")
     static_names = ("m_ti", "m_tj", "m_cnt")
 
     def __init__(self, kernel, *, use_blob: bool = True,
-                 compress_lengths: bool = False, dmax: Optional[int] = None):
+                 compress_lengths: bool = False, dmax: Optional[int] = None,
+                 with_aug: bool = False):
         if compress_lengths:
             assert use_blob, "length compression only applies to blob shifts"
             assert dmax is not None and dmax < 65536, (
@@ -274,15 +291,21 @@ class CSRStore(OperandStore):
         self.kernel = kernel
         self.use_blob = use_blob
         self.compress_lengths = compress_lengths
+        self.with_aug = with_aug
+        if with_aug:
+            self.operand_names = self.operand_names + ("b_aug",)
         self._layouts = {}
 
     def in_specs(self, axes):
         ab = P(*axes.all)
         m = P(axes.row, axes.col)
-        return dict(
+        specs = dict(
             a_indptr=ab, a_indices=ab, b_indptr=ab, b_indices=ab,
             m_ti=m, m_tj=m, m_cnt=m,
         )
+        if self.with_aug:
+            specs["b_aug"] = ab
+        return specs
 
     def lead(self, name, axes):
         return len(axes.all) if name in self.operand_names else 2
@@ -309,8 +332,10 @@ class CSRStore(OperandStore):
     def payload(self, local):
         a_ptr, a_idx = local["a_indptr"], local["a_indices"]
         b_ptr, b_idx = local["b_indptr"], local["b_indices"]
+        aug = local["b_aug"] if self.with_aug else None
         if not self.use_blob:
-            return ((a_ptr, a_idx), (b_ptr, b_idx))
+            b_state = (b_ptr, b_idx) if aug is None else (b_ptr, b_idx, aug)
+            return ((a_ptr, a_idx), b_state)
         self._nb = a_ptr.shape[0] - 1
         if self.compress_lengths:
             a_head, b_head = self._pack_lengths(a_ptr), self._pack_lengths(b_ptr)
@@ -318,7 +343,9 @@ class CSRStore(OperandStore):
             a_head, b_head = a_ptr, b_ptr
         self._layouts["a"], _ = blob_layout([a_head.shape, a_idx.shape])
         self._layouts["b"], _ = blob_layout([b_head.shape, b_idx.shape])
-        return (pack_blob([a_head, a_idx]), pack_blob([b_head, b_idx]))
+        b_blob = pack_blob([b_head, b_idx])
+        b_state = b_blob if aug is None else (b_blob, aug)
+        return (pack_blob([a_head, a_idx]), b_state)
 
     def _unpack(self, blob, side):
         head, idx = unpack_blob(blob, self._layouts[side])
@@ -329,15 +356,25 @@ class CSRStore(OperandStore):
     def count(self, state, local, step, ctx):
         del step, ctx
         a_state, b_state = state
+        aug = None
         if self.use_blob:
             a_ptr, a_idx = self._unpack(a_state, "a")
-            b_ptr, b_idx = self._unpack(b_state, "b")
+            if self.with_aug:
+                b_blob, aug = b_state
+            else:
+                b_blob = b_state
+            b_ptr, b_idx = self._unpack(b_blob, "b")
         else:
             a_ptr, a_idx = a_state
-            b_ptr, b_idx = b_state
+            if self.with_aug:
+                b_ptr, b_idx, aug = b_state
+            else:
+                b_ptr, b_idx = b_state
+        extra = {} if aug is None else dict(aug_b=aug)
         return self.kernel(
             a_ptr, a_idx, b_ptr, b_idx,
             local["m_ti"], local["m_tj"], local["m_cnt"],
+            **extra,
         )
 
 
@@ -548,13 +585,24 @@ class ShiftSchedule:
     * ``carry_template(payload)`` — the carry's pytree *structure* only
       (no computation; the stepper uses it to rebuild the carry from
       host-checkpointed leaves);
-    * ``make_body(store, local, ctx, step_keep=..., count_dtype=...)`` —
-      ``body(carry, step) -> (carry', count)``, consuming the planner's
-      per-step skip mask via :func:`masked_count`.
+    * ``make_body(store, local, ctx, step_keep=..., count_dtype=...,
+      hop=1)`` — ``body(carry, step) -> (carry', count)``, consuming the
+      planner's per-step skip mask via :func:`masked_count`; ``hop`` is
+      the static shift distance in schedule steps (the stepper compiles
+      one body per distinct hop of a compacted schedule).
 
     ``make_scan`` composes them into the ``(carry0, body, nsteps)``
-    triple the engine's scan driver consumes.
+    triple the engine's scan driver consumes.  ``run`` executes the
+    whole schedule: the scan driver normally, or — when ``live_steps``
+    is set (a compacted schedule, DESIGN.md §4.4) — an *unrolled* body
+    over only the globally-live steps, with the elided unit shifts fused
+    into multi-hop ``ppermute``\\ s.  Step indices stay in the original
+    numbering, so per-device conds index the staged ``step_keep`` mask
+    unremapped and step-selected statics (tile triples, ring task
+    groups) keep working.
     """
+
+    live_steps: Optional[Tuple[int, ...]] = None
 
     def init_carry(self, store: OperandStore, local: Dict, ctx: _Ctx):
         return store.payload(local)
@@ -563,7 +611,7 @@ class ShiftSchedule:
         return payload
 
     def make_body(self, store: OperandStore, local: Dict, ctx: _Ctx, *,
-                  step_keep=None, count_dtype=jnp.int32):
+                  step_keep=None, count_dtype=jnp.int32, hop: int = 1):
         raise NotImplementedError
 
     def make_scan(self, store: OperandStore, local: Dict, ctx: _Ctx, *,
@@ -572,6 +620,24 @@ class ShiftSchedule:
             store, local, ctx, step_keep=step_keep, count_dtype=count_dtype
         )
         return self.init_carry(store, local, ctx), body, self.nsteps
+
+    def run_compacted(self, store: OperandStore, local: Dict, ctx: _Ctx, *,
+                      step_keep=None, count_dtype=jnp.int32):
+        raise NotImplementedError
+
+    def run(self, store: OperandStore, local: Dict, ctx: _Ctx, *,
+            step_keep=None, count_dtype=jnp.int32):
+        """Execute the whole schedule, returning the device's total."""
+        if self.live_steps is not None:
+            return self.run_compacted(
+                store, local, ctx, step_keep=step_keep,
+                count_dtype=count_dtype,
+            )
+        carry0, body, nsteps = self.make_scan(
+            store, local, ctx, step_keep=step_keep, count_dtype=count_dtype
+        )
+        _, per_step = jax.lax.scan(body, carry0, jnp.arange(nsteps))
+        return jnp.sum(per_step, dtype=count_dtype)
 
 
 @dataclasses.dataclass
@@ -595,39 +661,65 @@ class CannonSchedule(ShiftSchedule):
     axes: GridAxes
     npods: int = 1
     double_buffer: bool = True
+    # compacted schedule: original indices of the globally-live steps
+    # (strictly increasing).  ``run`` then unrolls over them with fused
+    # multi-hop shifts; the stepper compiles one body per distinct hop.
+    live_steps: Optional[Tuple[int, ...]] = None
+    # timing probe: elide every shift (counts are wrong for q > 1 — used
+    # only by the benchmark's count-only attribution run)
+    elide_shifts: bool = False
 
     @property
     def nsteps(self) -> int:
         assert self.q % self.npods == 0, "pods must divide the grid dimension"
         return self.q // self.npods
 
-    def _shift(self, payload):
-        perm = shift_perm(self.q, self.npods)
+    def _shift_k(self, payload, hop: int):
+        """Fused shift of ``hop`` schedule steps (one ppermute per
+        operand regardless of hop — the multi-hop fusion)."""
+        k = (hop * self.npods) % self.q
+        if k == 0 or self.elide_shifts:
+            return payload
+        perm = shift_perm(self.q, k)
         a_state, b_state = payload
         return (
             tree_ppermute(a_state, self.axes.col, perm),
             tree_ppermute(b_state, self.axes.row, perm),
         )
 
+    def _shift(self, payload):
+        return self._shift_k(payload, 1)
+
     def init_carry(self, store, local, ctx):
         payload = store.payload(local)
+        if self.live_steps is not None:
+            # compacted stepper: single-generation carry pre-shifted to
+            # the first live step (the prologue hop)
+            assert not self.double_buffer, (
+                "the compacted stepper runs single-buffered"
+            )
+            if self.live_steps:
+                payload = self._shift_k(payload, self.live_steps[0])
+            return payload
         if not self.double_buffer:
             return payload
         # prologue: put step 1's blocks in flight before step 0 counts
         return (payload, self._shift(payload))
 
     def carry_template(self, payload):
+        if self.live_steps is not None:
+            return payload
         return (payload, payload) if self.double_buffer else payload
 
     def make_body(self, store, local, ctx, *, step_keep=None,
-                  count_dtype=jnp.int32):
+                  count_dtype=jnp.int32, hop: int = 1):
         if self.double_buffer:
 
             def body(carry, s):
                 cur, inflight = carry
                 # issue step s+2's shift from the independent buffer
                 # BEFORE counting step s — collective ∥ intersection.
-                nxt = self._shift(inflight)
+                nxt = self._shift_k(inflight, hop)
                 c = masked_count(
                     store, cur, local, s, ctx, step_keep, count_dtype
                 )
@@ -636,13 +728,41 @@ class CannonSchedule(ShiftSchedule):
         else:
 
             def body(carry, s):
-                nxt = self._shift(carry)
+                nxt = self._shift_k(carry, hop)
                 c = masked_count(
                     store, carry, local, s, ctx, step_keep, count_dtype
                 )
                 return nxt, c
 
         return body
+
+    def run_compacted(self, store, local, ctx, *, step_keep=None,
+                      count_dtype=jnp.int32):
+        """Unrolled kept-step body: count only the live steps, reach
+        each via one fused multi-hop ppermute.  In straight-line code
+        the shift for the next live step and the current count touch
+        independent values, so the communication/compute overlap of the
+        double-buffered scan body is structural here without a second
+        payload generation (``double_buffer`` is a scan-body knob and is
+        ignored)."""
+        live = self.live_steps
+        total = jnp.zeros((), jnp.dtype(count_dtype))
+        if not live:
+            return total  # everything elided: no shifts, no counts
+        payload = store.payload(local)
+        payload = self._shift_k(payload, live[0])
+        for i, s in enumerate(live):
+            nxt = (
+                self._shift_k(payload, live[i + 1] - s)
+                if i + 1 < len(live)
+                else None
+            )
+            total = total + masked_count(
+                store, payload, local, s, ctx, step_keep, count_dtype
+            )
+            if nxt is not None:
+                payload = nxt
+        return total
 
 
 @dataclasses.dataclass
@@ -657,13 +777,16 @@ class SummaSchedule(ShiftSchedule):
     r: int
     c: int
     axes: GridAxes
+    live_steps: Optional[Tuple[int, ...]] = None
 
     @property
     def nsteps(self) -> int:
         return self.c
 
     def make_body(self, store, local, ctx, *, step_keep=None,
-                  count_dtype=jnp.int32):
+                  count_dtype=jnp.int32, hop: int = 1):
+        del hop  # broadcast rounds carry no shift state
+
         def body(carry, z):
             state = store.select(local, z, ctx)
             c = masked_count(
@@ -673,6 +796,19 @@ class SummaSchedule(ShiftSchedule):
 
         return body
 
+    def run_compacted(self, store, local, ctx, *, step_keep=None,
+                      count_dtype=jnp.int32):
+        """Elide whole broadcast rounds: a globally-dead round's one-hot
+        psum pair disappears with its count (SUMMA is stateless between
+        rounds, so no hop fusion is needed)."""
+        total = jnp.zeros((), jnp.dtype(count_dtype))
+        for z in self.live_steps:
+            state = store.select(local, z, ctx)
+            total = total + masked_count(
+                store, state, local, z, ctx, step_keep, count_dtype
+            )
+        return total
+
 
 @dataclasses.dataclass
 class RingSchedule(ShiftSchedule):
@@ -681,23 +817,53 @@ class RingSchedule(ShiftSchedule):
 
     p: int
     axes: RingAxes
+    live_steps: Optional[Tuple[int, ...]] = None
 
     @property
     def nsteps(self) -> int:
         return self.p
 
-    def make_body(self, store, local, ctx, *, step_keep=None,
-                  count_dtype=jnp.int32):
-        perm = shift_perm(self.p, 1)
+    def _shift_k(self, payload, hop: int):
+        k = hop % self.p
+        if k == 0:
+            return payload
+        return tree_ppermute(payload, self.axes.axis, shift_perm(self.p, k))
 
+    def make_body(self, store, local, ctx, *, step_keep=None,
+                  count_dtype=jnp.int32, hop: int = 1):
         def body(carry, t):
-            nxt = tree_ppermute(carry, self.axes.axis, perm)
+            nxt = self._shift_k(carry, hop)
             c = masked_count(
                 store, carry, local, t, ctx, step_keep, count_dtype
             )
             return nxt, c
 
         return body
+
+    def run_compacted(self, store, local, ctx, *, step_keep=None,
+                      count_dtype=jnp.int32):
+        """Unrolled ring: rotate straight to each live step with one
+        fused multi-hop ppermute (the elided steps' blob passes are
+        gone, cutting the baseline's (p-1)/p·nnz shifted volume to the
+        live fraction)."""
+        live = self.live_steps
+        total = jnp.zeros((), jnp.dtype(count_dtype))
+        if not live:
+            return total
+        payload = store.payload(local)
+        payload = self._shift_k(payload, live[0])
+        for i, t in enumerate(live):
+            nxt = (
+                self._shift_k(payload, live[i + 1] - t)
+                if i + 1 < len(live)
+                else None
+            )
+            total = total + masked_count(
+                store, payload, local, t, ctx, step_keep, count_dtype
+            )
+            if nxt is not None:
+                payload = nxt
+        return total
 
 
 # ======================================================================
@@ -784,16 +950,18 @@ def build_engine_fn(
     def core(local):
         local = dict(local)
         keep = local.pop(MASK_NAME, None)
-        carry0, body, nsteps = schedule.make_scan(
+        total = schedule.run(
             store, local, ctx, step_keep=keep, count_dtype=count_dtype
         )
-        _, per_step = jax.lax.scan(body, carry0, jnp.arange(nsteps))
-        total = jnp.sum(per_step, dtype=count_dtype)
         return reduction.apply(total, axes)
 
     if batched:
         assert reduction.global_sum, (
             "batched engine returns per-graph global counts"
+        )
+        assert schedule.live_steps is None, (
+            "batched engines use the scan body (per-graph masks differ; "
+            "compaction would need their union)"
         )
 
         def spmd(*args):
@@ -864,6 +1032,14 @@ def build_engine_stepper(
     ``one_shift.prime(operand_arrays) -> carry_arrays`` builds the
     step-0 carry (including any prologue shift the schedule issues);
     ``one_shift.n_carry`` is the number of carry arrays.
+
+    With a *compacted* schedule (``schedule.live_steps`` set) the host
+    loop iterates ``one_shift.live_steps`` only, still passing the
+    **original** step index — mask lookups need no remapping, and a
+    checkpointed step index round-trips unchanged (the resume loop just
+    filters the live list to ``>= saved``).  Each call shifts by the
+    fused hop to the *next* live step; one executable is compiled per
+    distinct hop (a handful at most).
     """
     import numpy as np
 
@@ -875,6 +1051,7 @@ def build_engine_stepper(
     op_spec = specs[op_names[0]]
     lead = store.lead(op_names[0], axes)
     mask_lead = len(axes.all)
+    live = schedule.live_steps
 
     # carry pytree *structure* from a computation-free dummy payload —
     # only identity-structured stores qualify (same restriction as the
@@ -890,39 +1067,50 @@ def build_engine_stepper(
     n_state = treedef.num_leaves
 
     one = lambda a: a.reshape((1,) * lead + a.shape)
-
-    def spmd(*args):
-        carry_leaves = [_squeeze(a, lead) for a in args[:n_state]]
-        pos = n_state
-        statics = dict(zip(ordered_statics, args[pos:pos + len(ordered_statics)]))
-        pos += len(ordered_statics)
-        keep = None
-        if use_step_mask:
-            keep = _squeeze(args[pos], mask_lead)
-            pos += 1
-        acc = _squeeze(args[pos], lead)
-        step = args[pos + 1]
-        local = store.localize(statics, axes)
-        carry = jax.tree.unflatten(treedef, carry_leaves)
-        body = schedule.make_body(
-            store, local, ctx, step_keep=keep, count_dtype=count_dtype
-        )
-        carry_next, c = body(carry, step)
-        leaves = jax.tree.flatten(carry_next)[0]
-        return tuple(one(x) for x in leaves) + (one(acc + c),)
-
     static_specs = tuple(specs[k] for k in ordered_statics)
     mask_specs = (P(*axes.all),) if use_step_mask else ()
-    fn = jax.jit(
-        compat.shard_map(
-            spmd,
-            mesh=mesh,
-            in_specs=(op_spec,) * n_state + static_specs + mask_specs
-            + (op_spec, P()),
-            out_specs=(op_spec,) * (n_state + 1),
-            check_vma=False,
+
+    def _make_fn(hop: int):
+        def spmd(*args):
+            carry_leaves = [_squeeze(a, lead) for a in args[:n_state]]
+            pos = n_state
+            statics = dict(
+                zip(ordered_statics, args[pos:pos + len(ordered_statics)])
+            )
+            pos += len(ordered_statics)
+            keep = None
+            if use_step_mask:
+                keep = _squeeze(args[pos], mask_lead)
+                pos += 1
+            acc = _squeeze(args[pos], lead)
+            step = args[pos + 1]
+            local = store.localize(statics, axes)
+            carry = jax.tree.unflatten(treedef, carry_leaves)
+            body = schedule.make_body(
+                store, local, ctx, step_keep=keep, count_dtype=count_dtype,
+                hop=hop,
+            )
+            carry_next, c = body(carry, step)
+            leaves = jax.tree.flatten(carry_next)[0]
+            return tuple(one(x) for x in leaves) + (one(acc + c),)
+
+        return jax.jit(
+            compat.shard_map(
+                spmd,
+                mesh=mesh,
+                in_specs=(op_spec,) * n_state + static_specs + mask_specs
+                + (op_spec, P()),
+                out_specs=(op_spec,) * (n_state + 1),
+                check_vma=False,
+            )
         )
-    )
+
+    fns: Dict[int, Callable] = {}
+
+    def _fn_for(hop: int):
+        if hop not in fns:
+            fns[hop] = _make_fn(hop)
+        return fns[hop]
 
     def spmd_prime(*args):
         local = store.localize(dict(zip(op_names, args)), axes)
@@ -950,10 +1138,15 @@ def build_engine_stepper(
         if use_step_mask:
             args.append(statics[MASK_NAME])
         args += [acc, jnp.asarray(step, jnp.int32)]
-        return fn(*args)
+        hop = 1
+        if live is not None:
+            i = live.index(int(step))  # host loop must pass a live step
+            hop = live[i + 1] - live[i] if i + 1 < len(live) else 0
+        return _fn_for(hop)(*args)
 
     one_shift.prime = lambda operands: prime_fn(
         *(operands[k] for k in op_names)
     )
     one_shift.n_carry = n_state
+    one_shift.live_steps = live
     return one_shift

@@ -49,6 +49,11 @@ class OneDPlan:
     # per-step probe work (repro.core.plan.StepStats) when planned
     # with_stats — consumed by the skip-aware rebalancer
     stats: "object | None" = None
+    # globally-live ring steps (repro.core.plan.CompactSchedule); dead
+    # steps are reached via fused multi-hop blob rotations
+    compact: "object | None" = None
+    # deterministic kernel-shape autotune report (pipeline stage)
+    autotune: "dict | None" = None
 
     def device_arrays(self) -> Dict[str, np.ndarray]:
         out = dict(
@@ -96,6 +101,7 @@ def build_oned_fn(
     probe_shorter: bool = True,
     batched: bool = False,
     use_step_mask: "bool | None" = None,
+    compact: "bool | None" = None,
 ):
     """Ring algorithm over a 1D view of the mesh.
 
@@ -103,7 +109,9 @@ def build_oned_fn(
     covers all devices; otherwise callers should pass a flat 1D mesh (the
     baseline is evaluated on its own flat mesh — it exists for comparison,
     not production).  Thin engine configuration: RingSchedule ×
-    OneDCSRStore × kernel.
+    OneDCSRStore × kernel.  ``compact=None`` auto-enables dead-step
+    elision with fused multi-hop ring rotations when the plan staged a
+    compacted schedule (DESIGN.md §4.4).
     """
     from . import engine
     from .engine import (
@@ -112,10 +120,11 @@ def build_oned_fn(
         RingSchedule,
         make_csr_kernel,
     )
-    from .plan import as_plan, resolve_step_mask
+    from .plan import as_plan, resolve_compact_steps, resolve_step_mask
 
     plan = as_plan(plan)
     use_step_mask = resolve_step_mask(plan, use_step_mask)
+    live = resolve_compact_steps(plan, compact, batched=batched)
     p = plan.p
     if axis is None:
         sizes = {a: mesh.shape[a] for a in mesh.axis_names}
@@ -133,7 +142,7 @@ def build_oned_fn(
         sentinel=plan.n + 1,
     )
     store = OneDCSRStore(kernel, p=p)
-    schedule = RingSchedule(p=p, axes=axes)
+    schedule = RingSchedule(p=p, axes=axes, live_steps=live)
     return engine.build_engine_fn(
         mesh, axes, store, schedule, count_dtype=count_dtype,
         batched=batched, use_step_mask=use_step_mask,

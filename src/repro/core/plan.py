@@ -37,8 +37,12 @@ __all__ = [
     "analytic_plan",
     "PlanStats",
     "StepStats",
+    "CompactSchedule",
+    "compact_live_steps",
     "as_plan",
     "resolve_step_mask",
+    "resolve_compact_steps",
+    "host_aug_keys",
 ]
 
 
@@ -48,6 +52,89 @@ def as_plan(obj):
     either."""
     inner = getattr(obj, "plan", None)
     return obj if inner is None else inner
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactSchedule:
+    """Globally-live steps of a skip-masked schedule (DESIGN.md §4.4).
+
+    A schedule step is *globally dead* when ``step_keep`` is False on
+    every device — no device can contribute, so the whole scan iteration
+    (cond *and* collective) is removable.  The compacted engine executes
+    only ``live_steps`` (original step indices, strictly increasing),
+    replacing the elided unit shifts with fused multi-hop ``ppermute``\\ s
+    whose distances are :attr:`hops`.  Keeping a dead step live is always
+    correct (its count is provably zero), so any superset of the true
+    live set is a valid ``live_steps`` — the stepper tests rely on this.
+    """
+
+    n_total: int  # schedule steps before compaction
+    live_steps: Tuple[int, ...]  # original indices of the kept steps
+
+    @property
+    def n_live(self) -> int:
+        return len(self.live_steps)
+
+    @property
+    def n_elided(self) -> int:
+        return self.n_total - self.n_live
+
+    @property
+    def hops(self) -> Tuple[int, ...]:
+        """Fused shift distances: ``hops[0]`` is the prologue hop from
+        the initial placement to the first live step; ``hops[i]`` moves
+        live step ``i-1``'s payload to live step ``i``."""
+        prev, out = 0, []
+        for s in self.live_steps:
+            out.append(s - prev)
+            prev = s
+        return tuple(out)
+
+
+def compact_live_steps(step_keep: np.ndarray) -> CompactSchedule:
+    """Derive the compacted schedule from a staged skip mask.
+
+    ``step_keep`` is any ``(..., nsteps)`` per-(device, step) bool array;
+    a step survives iff *any* device keeps it.
+    """
+    keep = np.asarray(step_keep, dtype=bool)
+    nsteps = keep.shape[-1]
+    live = np.flatnonzero(keep.reshape(-1, nsteps).any(axis=0))
+    return CompactSchedule(
+        n_total=int(nsteps), live_steps=tuple(int(s) for s in live)
+    )
+
+
+def resolve_compact_steps(
+    plan, compact, *, batched: bool = False, npods: int = 1
+) -> Optional[Tuple[int, ...]]:
+    """Resolve a builder's ``compact`` request against the plan.
+
+    ``None`` auto-enables compaction iff the planner staged a
+    :class:`CompactSchedule` that actually elides something and the
+    build is a plain (non-batched, single-pod) engine — batched engines
+    take the union of per-graph masks (not staged) and multi-pod runs
+    stride the mask per pod, so both keep the uniform scan body.  An
+    explicit ``True`` that cannot be honored is an error.
+    """
+    cs = getattr(as_plan(plan), "compact", None)
+    if compact is None:
+        if cs is None or batched or npods != 1 or cs.n_elided == 0:
+            return None
+    elif not compact:
+        return None
+    else:
+        if cs is None:
+            raise ValueError(
+                "plan carries no compacted schedule; re-plan through the "
+                "pipeline with step_masks=True (or leave compact=None)"
+            )
+        if batched or npods != 1:
+            raise ValueError(
+                "compact=True is not supported for batched or multi-pod "
+                "engines; pass compact=False (or None for auto)"
+            )
+    return cs.live_steps
 
 
 def resolve_step_mask(plan, use_step_mask) -> bool:
@@ -67,6 +154,44 @@ def resolve_step_mask(plan, use_step_mask) -> bool:
     return bool(use_step_mask)
 
 INT = np.int32
+
+
+def host_aug_keys(
+    indptr: np.ndarray, indices: np.ndarray
+) -> Optional[np.ndarray]:
+    """Host-side row-encoded intersection keys for stacked CSR blocks.
+
+    The numpy twin of :func:`repro.core.count.build_aug_keys`, applied
+    once per block at pack time: for every ``(..., nb + 1)`` indptr /
+    ``(..., nnz_pad)`` indices pair, emits ``aug[e] = row(e) * (nb + 1)
+    + col(e)`` with padding positions landing on the maximal key (their
+    row resolves past the last row and their column holds the ``nb``
+    sentinel), so each block's key array is sorted exactly like the
+    on-device build.  Returns ``None`` when the key range needs int64
+    but x64 is off (the device copy would be silently truncated) — the
+    kernels then fall back to building keys on device, which fails
+    loudly via :func:`~repro.core.count.aug_key_dtype`.
+    """
+    from .count import aug_key_dtype
+
+    nb = indptr.shape[-1] - 1
+    base = nb + 1
+    try:
+        key_dtype = np.dtype(aug_key_dtype(base))
+    except OverflowError:
+        return None
+    flat_ptr = indptr.reshape(-1, nb + 1)
+    flat_idx = indices.reshape(-1, indices.shape[-1])
+    nnz_pad = flat_idx.shape[1]
+    # row of entry e per block: searchsorted(indptr, e, 'right') - 1,
+    # vectorized over blocks (indptr rows are independently sorted)
+    e = np.arange(nnz_pad, dtype=np.int64)
+    row_of = (
+        np.apply_along_axis(np.searchsorted, 1, flat_ptr, e, side="right")
+        - 1
+    )
+    aug = row_of.astype(key_dtype) * base + flat_idx.astype(key_dtype)
+    return aug.reshape(indices.shape)
 
 
 def _pad_to(x: np.ndarray, size: int, fill) -> np.ndarray:
@@ -132,6 +257,20 @@ class TCPlan:
     # block pair can contribute (sparsity-aware step skipping); None for
     # un-skewed (SUMMA-placement) or analytic plans
     step_keep: Optional[np.ndarray] = None
+    # (q, q, nnz_pad) host-staged row-encoded intersection keys of the B
+    # placement (DESIGN.md §5) — shifted alongside the B blob so the
+    # global/search2 kernels skip the per-step on-device key build
+    b_aug: Optional[np.ndarray] = None
+    # visit-order permutation σ of Cannon's initial alignment: step s
+    # hands device (x, y) the k-panel z = σ[(x + y + s) % q] (identity
+    # when None).  Chosen by the compaction stage to concentrate live
+    # work onto few steps (DESIGN.md §4.4).
+    skew_perm: Optional[Tuple[int, ...]] = None
+    # globally-live steps + fused hop vector (compaction stage)
+    compact: Optional[CompactSchedule] = None
+    # deterministic kernel-shape autotune report (chunk, d_small/n_long,
+    # tail_heavy) when the plan went through the autotune stage
+    autotune: Optional[dict] = None
 
     # ------------------------------------------------------------------
     def device_arrays(self) -> Dict[str, np.ndarray]:
@@ -146,6 +285,8 @@ class TCPlan:
         )
         if self.step_keep is not None:
             out["step_keep"] = self.step_keep
+        if self.b_aug is not None:
+            out["b_aug"] = self.b_aug
         return out
 
     def shape_structs(self):
@@ -217,12 +358,20 @@ def build_plan(
     with_stats: bool = True,
     keep_blocks: bool = True,
     step_masks: bool = True,
+    skew_perm: Optional[Tuple[int, ...]] = None,
+    aug_keys: bool = False,
 ) -> TCPlan:
     """Plan the 2D-cyclic execution of a *degree-ordered* graph on q x q.
 
     ``skew=True`` applies Cannon's initial alignment at placement time;
     ``skew=False`` yields the canonical placement used by SUMMA (A at
-    ``(x, y) -> U_{x,y}``, B at ``(x, y) -> U_{y,x}``).
+    ``(x, y) -> U_{x,y}``, B at ``(x, y) -> U_{y,x}``).  ``skew_perm``
+    generalizes the alignment with a visit-order permutation σ (device
+    ``(x, y)`` sees panel ``z = σ[(x+y+s) % q]`` at step ``s`` — any σ
+    is a correct Cannon schedule; the compaction stage picks one that
+    concentrates live work, DESIGN.md §4.4).  ``aug_keys`` stages the
+    row-encoded B intersection keys host-side for the global/search2
+    kernels.
 
     The implementation is the pipeline's vectorized packer
     (:func:`repro.pipeline.stages.pack_tc_plan`): one lexsorted pass
@@ -240,6 +389,8 @@ def build_plan(
         with_stats=with_stats,
         keep_blocks=keep_blocks,
         step_masks=step_masks,
+        skew_perm=skew_perm,
+        aug_keys=aug_keys,
     )
 
 
@@ -252,6 +403,8 @@ def _build_plan_loops(
     with_stats: bool = True,
     keep_blocks: bool = True,
     step_masks: bool = True,
+    skew_perm: Optional[Tuple[int, ...]] = None,
+    aug_keys: bool = False,
 ) -> TCPlan:
     """Loop-based reference planner (the pre-pipeline implementation).
 
@@ -266,9 +419,11 @@ def _build_plan_loops(
     nnz_pad = max(1, max(blocks[x][y].nnz for x in range(q) for y in range(q)))
     tmax = nnz_pad  # tasks per device == nnz of its mask block
 
+    assert skew_perm is None or skew, "skew_perm is a Cannon-placement knob"
+    sp = list(skew_perm) if skew_perm is not None else list(range(q))
     if skew:
-        a_place = lambda x, y: blocks[x][(x + y) % q]
-        b_place = lambda x, y: blocks[y][(x + y) % q]
+        a_place = lambda x, y: blocks[x][sp[(x + y) % q]]
+        b_place = lambda x, y: blocks[y][sp[(x + y) % q]]
     else:
         a_place = lambda x, y: blocks[x][y]
         b_place = lambda x, y: blocks[y][x]
@@ -317,7 +472,7 @@ def _build_plan_loops(
                 rows = np.repeat(np.arange(blk.n_rows), np.diff(blk.indptr))
                 cols = blk.indices
                 for s in range(q):
-                    z = (x + y + s) % q
+                    z = sp[(x + y + s) % q] if skew else (x + y + s) % q
                     la = rowlen[(x, z)][rows]
                     lb = rowlen[(y, z)][cols]
                     both = (la > 0) & (lb > 0)
@@ -349,7 +504,7 @@ def _build_plan_loops(
         for x in range(q):
             for y in range(q):
                 for s in range(q):
-                    z = (x + y + s) % q
+                    z = sp[(x + y + s) % q]
                     k = (
                         m_cnt[x, y] > 0
                         and blocks[x][z].nnz > 0
@@ -358,6 +513,8 @@ def _build_plan_loops(
                     if probe is not None:
                         k = k and probe[x, y, s] > 0
                     step_keep[x, y, s] = k
+
+    b_aug = host_aug_keys(b_indptr, b_indices) if aug_keys else None
 
     return TCPlan(
         n=n,
@@ -378,6 +535,8 @@ def _build_plan_loops(
         stats=stats,
         blocks=blocks if keep_blocks else None,
         step_keep=step_keep,
+        b_aug=b_aug,
+        skew_perm=tuple(sp) if skew_perm is not None else None,
     )
 
 

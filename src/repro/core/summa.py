@@ -62,6 +62,11 @@ class SummaPlan:
     # per-round probe work (repro.core.plan.StepStats) when planned
     # with_stats — consumed by the skip-aware rebalancer
     stats: "object | None" = None
+    # globally-live broadcast rounds (repro.core.plan.CompactSchedule);
+    # dead rounds' one-hot psum broadcasts are elided entirely
+    compact: "object | None" = None
+    # deterministic kernel-shape autotune report (pipeline stage)
+    autotune: "dict | None" = None
 
     def device_arrays(self) -> Dict[str, np.ndarray]:
         out = dict(
@@ -108,11 +113,15 @@ def build_summa_fn(
     reduce_global: bool = True,
     batched: bool = False,
     use_step_mask: "bool | None" = None,
+    compact: "bool | None" = None,
 ):
     """Thin engine configuration: SummaSchedule × SummaCSRStore × kernel.
 
     ``use_step_mask=None`` auto-enables sparsity-aware step skipping
-    when the plan carries ``step_keep`` masks.
+    when the plan carries ``step_keep`` masks; ``compact=None``
+    auto-enables broadcast-round elision when the plan staged a
+    compacted schedule that drops at least one round (dead rounds lose
+    their one-hot psums entirely — DESIGN.md §4.4).
     """
     from . import engine
     from .engine import (
@@ -122,10 +131,11 @@ def build_summa_fn(
         SummaSchedule,
         make_csr_kernel,
     )
-    from .plan import as_plan, resolve_step_mask
+    from .plan import as_plan, resolve_compact_steps, resolve_step_mask
 
     plan = as_plan(plan)
     use_step_mask = resolve_step_mask(plan, use_step_mask)
+    live = resolve_compact_steps(plan, compact, batched=batched)
     axes = GridAxes(row_axis, col_axis)
     kernel = make_csr_kernel(
         method,
@@ -134,9 +144,11 @@ def build_summa_fn(
         probe_shorter=probe_shorter,
         count_dtype=count_dtype,
         sentinel=plan.nb_c + 1,
+        n_long=getattr(plan, "n_long", None),
+        d_small=getattr(plan, "d_small", None),
     )
     store = SummaCSRStore(kernel, r=plan.r, c=plan.c)
-    schedule = SummaSchedule(r=plan.r, c=plan.c, axes=axes)
+    schedule = SummaSchedule(r=plan.r, c=plan.c, axes=axes, live_steps=live)
     return engine.build_engine_fn(
         mesh, axes, store, schedule,
         count_dtype=count_dtype,

@@ -103,6 +103,14 @@ def build_tile_plan(plan: TCPlan) -> TilePlan:
     assert plan.blocks is not None, "build_plan(..., keep_blocks=True) required"
     q = plan.q
     blocks = plan.blocks
+    # σ visit order of the parent plan's Cannon alignment (DESIGN.md
+    # §4.4): tile stores and per-shift joins must see the same panel
+    # z = σ[(x+y+s) % q] as the CSR placement
+    sp = (
+        list(plan.skew_perm)
+        if getattr(plan, "skew_perm", None) is not None
+        else list(range(q))
+    )
 
     packed: List[List[np.ndarray]] = [[None] * q for _ in range(q)]
     ids: List[List[np.ndarray]] = [[None] * q for _ in range(q)]
@@ -133,7 +141,7 @@ def build_tile_plan(plan: TCPlan) -> TilePlan:
         for y in range(q):
             mmap = id_maps[x][y]
             for s in range(q):
-                z = (x + y + s) % q
+                z = sp[(x + y + s) % q]
                 a_ids = ids[x][z]  # (na, 2) tiles of U_{x,z}
                 b_ids = ids[y][z]  # (nb, 2) tiles of U_{y,z}
                 # join on tk (column tile), filter on mask membership
@@ -162,10 +170,10 @@ def build_tile_plan(plan: TCPlan) -> TilePlan:
                 ntrips += arr.shape[0]
 
     a_tiles = np.stack(
-        [np.stack([store(x, (x + y) % q) for y in range(q)]) for x in range(q)]
+        [np.stack([store(x, sp[(x + y) % q]) for y in range(q)]) for x in range(q)]
     )
     b_tiles = np.stack(
-        [np.stack([store(y, (x + y) % q) for y in range(q)]) for x in range(q)]
+        [np.stack([store(y, sp[(x + y) % q]) for y in range(q)]) for x in range(q)]
     )
     m_tiles = np.stack(
         [np.stack([store(x, y) for y in range(q)]) for x in range(q)]

@@ -1,15 +1,21 @@
 """End-to-end distributed triangle-counting driver (the paper's app).
 
     PYTHONPATH=src python -m repro.launch.tc_run --graph rmat:18 --grid 2 \
-        [--schedule cannon|summa|oned] [--method search|dense|tile] \
+        [--schedule cannon|summa|oned] \
+        [--method auto|search|search2|global|dense|tile] \
+        [--no-compact] [--time-split] \
         [--ckpt-dir /tmp/tc_ckpt] [--resume] [--rebalance]
 
 Generates (or loads) the graph, plans through the cached pipeline
-(degree ordering + 2D-cyclic decomposition), runs the selected schedule
-on a device grid, and verifies against the host oracle for small graphs.
-With ``--ckpt-dir`` it runs shift-at-a-time with checkpoints, resumable
-mid-Cannon-loop.  ``--graphs a,b,c`` counts a whole *batch* of graphs in
-one compiled engine call (``count_triangles_many``).
+(degree ordering + 2D-cyclic decomposition + schedule compaction), runs
+the selected schedule on a device grid, and verifies against the host
+oracle for small graphs.  Reports carry the engine's sparsity
+accounting (``skipped_steps``, ``live_steps``/``elided_steps``) and —
+under ``--method auto`` — the autotuned kernel shapes.  With
+``--ckpt-dir`` it runs shift-at-a-time with checkpoints, resumable
+mid-Cannon-loop (compacted schedules iterate live steps only).
+``--graphs a,b,c`` counts a whole *batch* of graphs in one compiled
+engine call (``count_triangles_many``).
 """
 import argparse
 import json
@@ -25,7 +31,12 @@ def main():
     ap.add_argument("--grid", type=int, default=1, help="sqrt(p): grid is q x q")
     ap.add_argument("--pods", type=int, default=1)
     ap.add_argument("--schedule", default="cannon")
-    ap.add_argument("--method", default="search")
+    ap.add_argument("--method", default="search",
+                    choices=["auto", "search", "search2", "global",
+                             "dense", "tile"],
+                    help="count kernel; 'auto' runs the deterministic "
+                         "autotune stage and picks search2 on "
+                         "heavy-tailed graphs")
     ap.add_argument("--chunk", type=int, default=512)
     ap.add_argument("--opt", action="store_true",
                     help="enable §Perf H1a+H1b (bucketed probes + "
@@ -35,10 +46,20 @@ def main():
                     help="disable sparsity-aware step skipping")
     ap.add_argument("--no-double-buffer", action="store_true",
                     help="disable the communication-overlapped Cannon body")
+    ap.add_argument("--no-compact", action="store_true",
+                    help="disable the compacted kept-step schedule "
+                         "(dead-shift elision + fused multi-hop "
+                         "ppermutes); mirrors --no-skip-mask")
+    ap.add_argument("--time-split", action="store_true",
+                    help="cannon only: also time a shift-only run "
+                         "(all-False mask, collectives + conds intact) "
+                         "and a count-only run (shifts elided) so the "
+                         "overlap column is attributable")
     ap.add_argument("--repeat", type=int, default=1,
                     help="count this many times (plan-cache warm after the "
-                         "first); tct_seconds reports the LAST run, i.e. "
-                         "warm dispatch without trace/compile")
+                         "first); tct_seconds reports the MINIMUM over the "
+                         "warm runs (2..N), i.e. warm dispatch without "
+                         "trace/compile and robust to host timer noise")
     ap.add_argument("--verify", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--fail-at-shift", type=int, default=None,
@@ -61,7 +82,6 @@ def main():
         count_triangles,
         get_schedule,
         graph_from_spec,
-        preprocess,
         triangle_count_oracle,
     )
 
@@ -94,24 +114,22 @@ def main():
             import jax.numpy as jnp
 
             from .. import compat
-            from ..core import build_plan
             from ..core.api import make_grid_mesh
             from ..core.plan import bucketize_plan
 
             build_cannon_fn = get_schedule("cannon").build_fn
-            if args.rebalance:
-                from ..pipeline import plan_cannon
+            # plan through the pipeline (with or without rebalance) so
+            # the compaction stage runs and --no-compact has a lever
+            from ..pipeline import plan_cannon
 
-                art = plan_cannon(
-                    g, args.grid, chunk=args.chunk, keep_blocks=True,
-                    rebalance_trials=args.rebalance,
-                )
+            art = plan_cannon(
+                g, args.grid, chunk=args.chunk, keep_blocks=True,
+                rebalance_trials=args.rebalance, aug_keys=True,
+                compact=not args.no_compact,
+            )
+            if args.rebalance:
                 report.update(_rebalance_fields(art.rebalance))
-                base_plan = art.plan
-            else:
-                g2, _ = preprocess(g)
-                base_plan = build_plan(g2, args.grid, chunk=args.chunk)
-            bplan = bucketize_plan(base_plan)
+            bplan = bucketize_plan(art.plan)
             # host planning done: ppt = t1o - t0; engine build+trace stay
             # inside tct for repeat==1, as before
             t1o = time.perf_counter()
@@ -121,23 +139,27 @@ def main():
                 count_dtype=compat.default_count_dtype(),
                 use_step_mask=False if args.no_skip_mask else None,
                 double_buffer=not args.no_double_buffer,
+                compact=False if args.no_compact else None,
             )
             staged = {
                 k: jnp.asarray(v) for k, v in bplan.device_arrays().items()
             }
-            t_run = t1o
+            times = []
             for i in range(max(1, args.repeat)):
-                if i:
-                    t_run = time.perf_counter()
+                t_run = time.perf_counter()
                 total = int(fn(**staged))
+                times.append(time.perf_counter() - t_run)
             report.update(
                 triangles=total,
                 ppt_seconds=round(t1o - t0, 4),
-                tct_seconds=round(time.perf_counter() - t_run, 4),
+                tct_seconds=round(
+                    min(times[1:]) if len(times) > 1 else times[0], 4
+                ),
                 optimized=True,
                 bucket_reduction=round(bplan.bucket_stats["reduction"], 3),
             )
             report.update(_skip_fields(bplan, args.no_skip_mask))
+            report.update(_compact_fields(bplan))
             if args.verify:
                 from ..core import triangle_count_oracle
 
@@ -150,6 +172,7 @@ def main():
             print(_json.dumps(report) if args.json else
                   "\n".join(f"{k}: {v}" for k, v in report.items()))
             return
+        times = []
         for _ in range(max(1, args.repeat)):
             res = count_triangles(
                 g,
@@ -161,18 +184,25 @@ def main():
                 probe_shorter=not args.no_probe_shorter,
                 use_step_mask=False if args.no_skip_mask else None,
                 double_buffer=not args.no_double_buffer,
+                compact=False if args.no_compact else None,
                 rebalance_trials=args.rebalance,
             )
+            times.append(res.count_seconds)
         if res.rebalance is not None:
             report.update(_rebalance_fields(res.rebalance))
         report.update(
             triangles=res.triangles,
             ppt_seconds=round(res.preprocess_seconds, 4),
-            tct_seconds=round(res.count_seconds, 4),
+            tct_seconds=round(min(times[1:]) if len(times) > 1 else times[0], 4),
             total_seconds=round(time.perf_counter() - t0, 4),
             grid=res.grid,
+            method=res.method,
         )
         report.update(_skip_fields(res.plan, args.no_skip_mask))
+        report.update(_compact_fields(res.plan))
+        report.update(_autotune_fields(res.plan))
+        if args.time_split and args.schedule == "cannon":
+            report.update(_time_split(g, args))
         total = res.triangles
 
     if args.verify:
@@ -198,6 +228,90 @@ def _skip_fields(plan, no_skip_mask: bool) -> dict:
         schedule_steps=int(sk.size),
         skipped_steps=0 if no_skip_mask else int(sk.size - sk.sum()),
     )
+
+
+def _compact_fields(plan) -> dict:
+    """Schedule-compaction accounting: live schedule steps and the
+    device-step scan slots the compacted engine no longer executes
+    (``(n_total - n_live) * ndev``, commensurable with
+    ``schedule_steps``/``skipped_steps``).  Plans made under
+    ``--no-compact`` carry no ``CompactSchedule``, so such runs simply
+    omit the fields."""
+    cs = getattr(plan, "compact", None)
+    sk = getattr(plan, "step_keep", None)
+    if cs is None or sk is None:
+        return {}
+    ndev = sk.size // max(1, cs.n_total)
+    return dict(
+        live_steps=cs.n_live,
+        elided_steps=cs.n_elided * ndev,
+    )
+
+
+def _autotune_fields(plan) -> dict:
+    at = getattr(plan, "autotune", None)
+    if not at:
+        return {}
+    return dict(
+        autotuned_chunk=at["chunk"],
+        autotuned_d_small=at["d_small"],
+        autotuned_tail_heavy=at["tail_heavy"],
+    )
+
+
+def _time_split(g, args) -> dict:
+    """Shift/count attribution probes (cannon, scan body):
+
+    * shift-only — the masked engine fed an all-False mask: every
+      ppermute and cond executes, every count kernel is skipped;
+    * count-only — the same engine with shifts elided
+      (``elide_shifts``): every count kernel executes against the
+      initially-held pair (a timing proxy — counts are wrong for q > 1,
+      so the result is discarded).
+
+    Both run the *uncompacted* scan body with the caller's
+    double-buffer flag, warm (timed call preceded by a compile call),
+    so ``tct_double_buffer − shift_only − count_only`` exposes what the
+    overlap actually buys.
+    """
+    import jax.numpy as jnp
+
+    from ..core.api import make_grid_mesh
+    from ..core.cannon import build_cannon_fn
+    from ..pipeline import plan_cannon
+
+    art = plan_cannon(g, args.grid, chunk=args.chunk)
+    plan = art.plan
+    if plan.step_keep is None:
+        return {}
+    mesh = make_grid_mesh(args.grid)
+    staged = dict(art.staged())
+    out = {}
+
+    def timed_min(fn, arrays, warm=1, iters=3):
+        for _ in range(warm):
+            fn(**arrays)  # compile + warm
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn(**arrays)
+            best = min(best, time.perf_counter() - t0)
+        return round(best, 4)
+
+    fshift = build_cannon_fn(
+        plan, mesh, use_step_mask=True, compact=False,
+        double_buffer=not args.no_double_buffer,
+    )
+    zeros = dict(staged, step_keep=jnp.zeros_like(staged["step_keep"]))
+    out["tct_shift_only"] = timed_min(fshift, zeros)
+
+    fcount = build_cannon_fn(
+        plan, mesh, use_step_mask=False, compact=False,
+        double_buffer=not args.no_double_buffer, elide_shifts=True,
+    )
+    no_mask = {k: v for k, v in staged.items() if k != "step_keep"}
+    out["tct_count_only"] = timed_min(fcount, no_mask)
+    return out
 
 
 def _rebalance_fields(rb: dict) -> dict:
@@ -233,13 +347,17 @@ def _run_batched(args):
         )
     specs = split_specs(args.graphs)
     graphs = [graph_from_spec(s) for s in specs]
+    # the batched engine keeps the uniform scan body (per-graph masks
+    # differ, so there is no shared live-step list to compact) and takes
+    # only CSR kernels: resolve 'auto' to the flat search path
+    method = "search" if args.method == "auto" else args.method
     t0 = time.perf_counter()
     for _ in range(max(1, args.repeat)):  # later rounds hit the program cache
         res = count_triangles_many(
             graphs,
             q=args.grid,
             schedule=args.schedule,
-            method=args.method,
+            method=method,
             chunk=args.chunk,
         )
     report = {
@@ -272,25 +390,38 @@ def _run_checkpointed(g, args):
     ``stepper.prime``) plus the per-device partial counts; the host loop
     owns the shift index and passes it to each step so the sparsity skip
     mask stays aligned after a resume.
+
+    Under a compacted plan the loop iterates ``stepper.live_steps``
+    only (single-generation carry, one fused hop per call).  Checkpoints
+    store the *original* next-shift index plus the step-list signature:
+    same-mode resumes filter the step list to ``>= saved`` (the fused
+    hop left the carry exactly at the next live step), while a
+    *cross-mode* restore (compacted checkpoint under ``--no-compact`` or
+    vice versa) is refused loudly — the carry's position and arity
+    (one generation vs two) do not transfer between step sequences, so
+    a silent resume would count misaligned panels.
     """
     import jax.numpy as jnp
     import numpy as np
 
     from .. import compat
     from ..ckpt import CheckpointManager
-    from ..core import build_plan, preprocess
     from ..core.api import make_grid_mesh
     from ..core.cannon import build_cannon_stepper
+    from ..pipeline import plan_cannon
 
     t0 = time.perf_counter()
-    g2, _ = preprocess(g)
     q = args.grid
-    plan = build_plan(g2, q, chunk=args.chunk)
+    art = plan_cannon(
+        g, q, chunk=args.chunk, compact=not args.no_compact,
+    )
+    plan = art.plan
     mesh = make_grid_mesh(q)
     stepper = build_cannon_stepper(
         plan, mesh,
         use_step_mask=False if args.no_skip_mask else None,
         double_buffer=not args.no_double_buffer,
+        compact=False if args.no_compact else None,
     )
     arrays = {k: jnp.asarray(v) for k, v in plan.device_arrays().items()}
     statics = {
@@ -298,6 +429,11 @@ def _run_checkpointed(g, args):
         for k in ("m_ti", "m_tj", "m_cnt", "step_keep")
         if k in arrays
     }
+    steps = (
+        list(stepper.live_steps)
+        if stepper.live_steps is not None
+        else list(range(q))
+    )
     t1 = time.perf_counter()
 
     mgr = CheckpointManager(args.ckpt_dir, keep=2, async_save=False)
@@ -309,8 +445,28 @@ def _run_checkpointed(g, args):
                                "b_indices")]
     state_like = {f"carry{i}": ops[i % len(ops)] for i in range(n_carry)}
     state_like["acc"] = jnp.zeros((q, q), compat.default_count_dtype())
-    step0, restored, extra = mgr.restore_latest(state_like)
+    step_sig = ",".join(map(str, steps))
+    cross_mode = (
+        "checkpoint in {d} was written by a run with a different "
+        "schedule shape ({why}) — the saved carry's position and arity "
+        "do not transfer across step sequences (compacted vs "
+        "--no-compact, double- vs single-buffered): resume with the "
+        "original flags or start from a fresh --ckpt-dir"
+    )
+    try:
+        step0, restored, extra = mgr.restore_latest(state_like)
+    except KeyError as e:  # carry arity mismatch: fewer/more leaves saved
+        raise SystemExit(
+            cross_mode.format(d=args.ckpt_dir, why=f"missing {e}")
+        ) from e
     if restored is not None:
+        if extra.get("steps", step_sig) != step_sig:
+            raise SystemExit(
+                cross_mode.format(
+                    d=args.ckpt_dir,
+                    why=f"steps [{extra['steps']}] vs [{step_sig}]",
+                )
+            )
         st = restored
         start = int(extra["shift"])
         print(f"resumed at shift {start}")
@@ -320,7 +476,9 @@ def _run_checkpointed(g, args):
         st["acc"] = state_like["acc"]
         start = 0
     failed = {"done": False}
-    for s in range(start, q):
+    todo = [s for s in steps if s >= start]
+    while todo:
+        s = todo.pop(0)
         if (
             args.fail_at_shift is not None
             and s == args.fail_at_shift
@@ -331,7 +489,9 @@ def _run_checkpointed(g, args):
             step0, restored, extra = mgr.restore_latest(state_like)
             if restored is not None:
                 st = restored
-                s = int(extra["shift"])  # noqa: PLW2901
+                saved = int(extra["shift"])  # next shift to execute
+                todo = [t for t in steps if t >= saved]
+                s = todo.pop(0)  # noqa: PLW2901
         out = stepper(
             tuple(st[f"carry{i}"] for i in range(n_carry)) + (st["acc"],),
             statics,
@@ -339,7 +499,7 @@ def _run_checkpointed(g, args):
         )
         st = {f"carry{i}": out[i] for i in range(n_carry)}
         st["acc"] = out[n_carry]
-        mgr.save(s + 1, st, extra={"shift": s + 1})
+        mgr.save(s + 1, st, extra={"shift": s + 1, "steps": step_sig})
     total = int(np.asarray(st["acc"]).sum())
     t2 = time.perf_counter()
     mgr.close()
@@ -348,6 +508,8 @@ def _run_checkpointed(g, args):
         ppt_seconds=round(t1 - t0, 4),
         tct_seconds=round(t2 - t1, 4),
         checkpointed=True,
+        live_steps=len(steps),
+        schedule_shifts=q,
     )
 
 

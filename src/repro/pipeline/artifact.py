@@ -56,6 +56,19 @@ class PlanArtifact:
     def device_arrays(self) -> Dict[str, np.ndarray]:
         return self.plan.device_arrays()
 
+    @property
+    def compact(self):
+        """The plan's staged :class:`~repro.core.plan.CompactSchedule`
+        (globally-live steps + fused hop vector), or ``None`` when the
+        compaction stage was off or had no mask to work from."""
+        return getattr(self.plan, "compact", None)
+
+    @property
+    def autotune(self) -> Optional[dict]:
+        """The deterministic kernel-shape autotune report (chunk,
+        ``d_small``/``n_long`` split, ``tail_heavy``), or ``None``."""
+        return getattr(self.plan, "autotune", None)
+
     def memo(self, key, build: Callable):
         """Build-once storage for derived per-artifact state.
 

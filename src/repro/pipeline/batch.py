@@ -122,6 +122,7 @@ def _build_batch_program(
             pack_tc_plan(
                 g, q, skew=True, chunk=chunk, with_stats=False,
                 keep_blocks=(method == "search2"),
+                aug_keys=(method in ("global", "search2")),
             )
             for g in lifted
         ]
@@ -141,6 +142,10 @@ def _build_batch_program(
         )
         if plans[0].step_keep is not None:
             pads["step_keep"] = (q, False)  # (q, q, q) per graph, same q
+        if plans[0].b_aug is not None:
+            # tail-pad with the maximal key (row nb, col nb) so every
+            # block's staged key array stays sorted after batch padding
+            pads["b_aug"] = (nnz_pad, (nb + 1) * (nb + 1) - 1)
         stacked = _stack(plans, pads)
         rep = dataclasses.replace(
             plans[0],

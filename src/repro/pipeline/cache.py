@@ -4,8 +4,15 @@ Planning is addressed by *content*, not identity: the cache key starts
 with :func:`graph_digest` — a blake2b over the canonicalized edge set —
 so two structurally identical graphs hit the same entry no matter how
 they were constructed, and any edge edit changes the digest and misses.
-The rest of the key is the full planning configuration (kind, grid,
-chunk, relabel options, …) supplied by the planner drivers.
+The rest of the key is the full planning configuration supplied by the
+planner drivers: kind, grid, chunk, relabel options, mask/stat flags,
+``rebalance_trials``, and the PR-5 stage knobs ``compact`` /
+``autotune`` / ``aug_keys`` — every stage that changes the packed
+arrays or the staged schedule is a key component, so (for example) a
+compacted σ-re-packed artifact can never be served to a
+``compact=False`` caller.  Derived *results* (the chosen σ, the
+autotuned shapes) are deliberately **not** keyed: they are pure
+functions of the keyed inputs.
 
 One :class:`PlanCache` instance stores every pipeline product —
 relabel results, plan artifacts, and batched programs — under

@@ -19,6 +19,10 @@ from .artifact import PlanArtifact
 from .cache import PlanCache, default_cache, graph_digest
 from .rebalance import rebalance_stage
 from .stages import (
+    autotune_oned_plan,
+    autotune_summa_plan,
+    autotune_tc_plan,
+    compact_stage,
     pack_oned_plan,
     pack_summa_plan,
     pack_tc_plan,
@@ -98,6 +102,9 @@ def plan_cannon(
     d_small: int = 32,
     step_masks: bool = True,
     rebalance_trials: int = 0,
+    compact: bool = True,
+    autotune: bool = False,
+    aug_keys: bool = False,
     cache: Optional[PlanCache] = None,
 ) -> PlanArtifact:
     """Plan the 2D-cyclic (Cannon family) execution of ``graph`` on a
@@ -110,7 +117,16 @@ def plan_cannon(
     masked and unmasked artifacts are distinct entries).
     ``rebalance_trials > 0`` runs the skip-aware rebalance stage
     (DESIGN.md §4.3) over that many relabeling seeds; the trials knob is
-    part of the cache key, the winning seed lands on the artifact."""
+    part of the cache key, the winning seed lands on the artifact.
+    ``compact`` (default on) runs the schedule-compaction stage
+    (DESIGN.md §4.4): it searches the σ visit order concentrating live
+    work onto the fewest steps, re-packs under the winner, and stages
+    the globally-live step list the engine's compacted bodies execute.
+    ``autotune`` runs the deterministic kernel-shape stage (chunk +
+    two-level split from the probe-length distribution, DESIGN.md §5);
+    ``aug_keys`` stages the row-encoded B intersection keys for the
+    ``global``/``search2`` kernels.  All three are cache-key components.
+    """
 
     def pack(digest, key, seconds, cache_):
         t0 = time.perf_counter()
@@ -127,22 +143,32 @@ def plan_cannon(
             seconds,
         )
         t1 = time.perf_counter()
+        pack_kwargs = dict(
+            skew=skew,
+            chunk=chunk,
+            with_stats=with_stats,
+            keep_blocks=keep_blocks or bucketize,
+            step_masks=step_masks,
+            aug_keys=aug_keys,
+        )
         if best_plan is not None and (
             with_stats and not (keep_blocks or bucketize) and step_masks
+            and not aug_keys
         ):  # caller flags == trial flags: the winner pack is the plan
             plan = best_plan
         else:
-            plan = pack_tc_plan(
-                g2,
-                q,
-                skew=skew,
-                chunk=chunk,
-                with_stats=with_stats,
-                keep_blocks=keep_blocks or bucketize,
-                step_masks=step_masks,
+            plan = pack_tc_plan(g2, q, **pack_kwargs)
+        if compact and skew:
+            plan = compact_stage(
+                plan,
+                repack=lambda sigma: pack_tc_plan(
+                    g2, q, skew_perm=sigma, **pack_kwargs
+                ),
             )
-            if bucketize:
-                plan = bucketize_plan(plan, d_small=d_small)
+        if bucketize:
+            plan = bucketize_plan(plan, d_small=d_small)
+        if autotune:
+            plan = autotune_tc_plan(plan)
         seconds["decompose+pack"] = time.perf_counter() - t1
         return PlanArtifact(
             kind="cannon", digest=digest, key=key, graph=g2, perm=perm,
@@ -152,7 +178,7 @@ def plan_cannon(
     tail = (
         q, skew, chunk, reorder, cyclic_p, with_stats, keep_blocks,
         bucketize, d_small if bucketize else None, step_masks,
-        rebalance_trials,
+        rebalance_trials, compact, autotune, aug_keys,
     )
     return _drive("cannon", graph, tail, cache, pack)
 
@@ -167,9 +193,15 @@ def plan_summa(
     cyclic_p: Optional[int] = None,
     step_masks: bool = True,
     rebalance_trials: int = 0,
+    compact: bool = True,
+    autotune: bool = False,
     cache: Optional[PlanCache] = None,
 ) -> PlanArtifact:
-    """Plan the SUMMA execution on an ``r x c`` grid, through the cache."""
+    """Plan the SUMMA execution on an ``r x c`` grid, through the cache.
+
+    ``compact`` stages the globally-live broadcast rounds (dead rounds'
+    one-hot psums are elided by the engine, DESIGN.md §4.4);
+    ``autotune`` runs the deterministic kernel-shape stage."""
 
     def pack(digest, key, seconds, cache_):
         t0 = time.perf_counter()
@@ -192,13 +224,20 @@ def plan_summa(
                 g2, r, c, chunk=chunk, step_masks=step_masks,
                 with_stats=bool(rebalance_trials),
             )
+        if compact:
+            plan = compact_stage(plan)  # rounds have no free visit order
+        if autotune:
+            plan = autotune_summa_plan(plan)
         seconds["decompose+pack"] = time.perf_counter() - t1
         return PlanArtifact(
             kind="summa", digest=digest, key=key, graph=g2, perm=perm,
             plan=plan, rebalance=rb,
         )
 
-    tail = (r, c, chunk, reorder, cyclic_p, step_masks, rebalance_trials)
+    tail = (
+        r, c, chunk, reorder, cyclic_p, step_masks, rebalance_trials,
+        compact, autotune,
+    )
     return _drive("summa", graph, tail, cache, pack)
 
 
@@ -211,9 +250,15 @@ def plan_oned(
     cyclic_p: Optional[int] = None,
     step_masks: bool = True,
     rebalance_trials: int = 0,
+    compact: bool = True,
+    autotune: bool = False,
     cache: Optional[PlanCache] = None,
 ) -> PlanArtifact:
-    """Plan the 1D-ring baseline over ``p`` devices, through the cache."""
+    """Plan the 1D-ring baseline over ``p`` devices, through the cache.
+
+    ``compact`` stages the globally-live ring steps (dead steps become
+    fused multi-hop rotations, DESIGN.md §4.4); ``autotune`` tunes the
+    chunk (the ring's global-id columns rule out the two-level split)."""
 
     def pack(digest, key, seconds, cache_):
         t0 = time.perf_counter()
@@ -236,11 +281,18 @@ def plan_oned(
                 g2, p, chunk=chunk, step_masks=step_masks,
                 with_stats=bool(rebalance_trials),
             )
+        if compact:
+            plan = compact_stage(plan)  # ring steps have no free order
+        if autotune:
+            plan = autotune_oned_plan(plan)
         seconds["decompose+pack"] = time.perf_counter() - t1
         return PlanArtifact(
             kind="oned", digest=digest, key=key, graph=g2, perm=perm,
             plan=plan, rebalance=rb,
         )
 
-    tail = (p, chunk, reorder, cyclic_p, step_masks, rebalance_trials)
+    tail = (
+        p, chunk, reorder, cyclic_p, step_masks, rebalance_trials,
+        compact, autotune,
+    )
     return _drive("oned", graph, tail, cache, pack)

@@ -29,7 +29,14 @@ import numpy as np
 from ..core.decomp import CyclicCOO, blocks_from_coo, cyclic_coo
 from ..core.graph import Graph
 from ..core.onedim import OneDPlan
-from ..core.plan import INT, PlanStats, StepStats, TCPlan
+from ..core.plan import (
+    INT,
+    PlanStats,
+    StepStats,
+    TCPlan,
+    compact_live_steps,
+    host_aug_keys,
+)
 from ..core.preprocess import cyclic_relabel, degree_order
 from ..core.summa import SummaPlan
 
@@ -42,6 +49,11 @@ __all__ = [
     "pack_tc_plan",
     "pack_summa_plan",
     "pack_oned_plan",
+    "choose_cannon_skew",
+    "compact_stage",
+    "autotune_tc_plan",
+    "autotune_summa_plan",
+    "autotune_oned_plan",
 ]
 
 
@@ -116,12 +128,22 @@ def _emit_tasks(
     )
 
 
-def _tc_plan_stats(coo: CyclicCOO, q: int, nnz_pad: int, tmax: int, m: int):
+def _tc_plan_stats(
+    coo: CyclicCOO, q: int, nnz_pad: int, tmax: int, m: int,
+    skew_perm: Optional[np.ndarray] = None,
+):
     """Balance statistics (paper Tables 3/4 analogues) from the sorted
-    pass — fragment lengths come straight from ``rowcnt``."""
+    pass — fragment lengths come straight from ``rowcnt``.  ``skew_perm``
+    indexes the per-shift probe by the σ visit order so stats stay
+    aligned with the staged masks."""
     rowcnt3 = coo.rowcnt.reshape(q, q, coo.rows_loc)
     tasks = coo.counts.reshape(q, q).astype(np.int64)
     probe = np.zeros((q, q, q), dtype=np.int64)
+    sp = (
+        np.asarray(skew_perm, dtype=np.int64)
+        if skew_perm is not None
+        else np.arange(q, dtype=np.int64)
+    )
     itasks = 0
     for x in range(q):
         for y in range(q):
@@ -130,7 +152,7 @@ def _tc_plan_stats(coo: CyclicCOO, q: int, nnz_pad: int, tmax: int, m: int):
             rows = coo.li_s[lo:hi]
             cols = coo.lj_s[lo:hi]
             for s in range(q):
-                z = (x + y + s) % q
+                z = int(sp[(x + y + s) % q])
                 la = rowcnt3[x, z][rows]
                 lb = rowcnt3[y, z][cols]
                 both = (la > 0) & (lb > 0)
@@ -152,24 +174,30 @@ def _tc_plan_stats(coo: CyclicCOO, q: int, nnz_pad: int, tmax: int, m: int):
 
 
 def cannon_step_keep(
-    nnz_blocks: np.ndarray, m_cnt: np.ndarray, probe: Optional[np.ndarray]
+    nnz_blocks: np.ndarray,
+    m_cnt: np.ndarray,
+    probe: Optional[np.ndarray],
+    skew_perm: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """Per-(device, shift) skip mask for the pre-skewed Cannon rotation.
 
     Device ``(x, y)`` at shift ``s`` holds ``A = U_{x,z}`` and
-    ``B = U_{y,z}`` with ``z = (x + y + s) % q``, so its count that step
-    is provably zero — and safe to skip — unless the device's task list
-    and *both* incoming blocks are non-empty.  When the planner computed
-    per-shift probe work (``with_stats``), the mask is refined to exact
-    zero-work steps (``probe == 0`` ⇒ every task has an empty fragment
-    side ⇒ count 0), which also prunes steps whose blocks are non-empty
-    but never intersect a task row.
+    ``B = U_{y,z}`` with ``z = σ[(x + y + s) % q]`` (``σ`` the
+    visit-order permutation, identity by default), so its count that
+    step is provably zero — and safe to skip — unless the device's task
+    list and *both* incoming blocks are non-empty.  When the planner
+    computed per-shift probe work (``with_stats``), the mask is refined
+    to exact zero-work steps (``probe == 0`` ⇒ every task has an empty
+    fragment side ⇒ count 0), which also prunes steps whose blocks are
+    non-empty but never intersect a task row.
     """
     q = m_cnt.shape[0]
     x = np.arange(q)[:, None, None]
     y = np.arange(q)[None, :, None]
     s = np.arange(q)[None, None, :]
     z = (x + y + s) % q
+    if skew_perm is not None:
+        z = np.asarray(skew_perm, dtype=np.int64)[z]
     nz = nnz_blocks > 0
     keep = (m_cnt > 0)[:, :, None] & nz[x, z] & nz[y, z]
     if probe is not None:
@@ -186,6 +214,8 @@ def pack_tc_plan(
     with_stats: bool = True,
     keep_blocks: bool = True,
     step_masks: bool = True,
+    skew_perm=None,
+    aug_keys: bool = False,
     coo: Optional[CyclicCOO] = None,
 ) -> TCPlan:
     """Vectorized 2D-cyclic planner: the decompose+pack stages for the
@@ -195,19 +225,30 @@ def pack_tc_plan(
     Emits the stacked ``(q, q, ...)`` device arrays directly from one
     lexsorted pass: the canonical block family is packed once and the
     (skewed) A/B placements are fancy-indexed gathers of it.
+    ``skew_perm`` gathers through the σ visit order instead of the
+    identity (:func:`choose_cannon_skew`); ``aug_keys`` emits the
+    host-staged ``b_aug`` intersection keys for the placed B blocks.
     """
     n, m = graph.n, graph.m
+    assert skew_perm is None or skew, "skew_perm is a Cannon-placement knob"
     if coo is None:
         coo = cyclic_coo(graph, q, q)
     nb = coo.rows_loc
     nnz_pad = max(1, coo.nnz_max)
     tmax = nnz_pad
 
+    sp = (
+        np.asarray(skew_perm, dtype=np.int64)
+        if skew_perm is not None
+        else None
+    )
     c_ptr, c_idx = emit_block_arrays(coo, nnz_pad)
     x = np.arange(q)[:, None]
     y = np.arange(q)[None, :]
     if skew:
         z = (x + y) % q
+        if sp is not None:
+            z = sp[z]
         a_indptr, a_indices = c_ptr[x, z], c_idx[x, z]
         b_indptr, b_indices = c_ptr[y, z], c_idx[y, z]
     else:
@@ -217,7 +258,11 @@ def pack_tc_plan(
     m_ti, m_tj, m_cnt = _emit_tasks(coo, tmax)
     dmax = max(1, coo.row_len_max)
 
-    stats = _tc_plan_stats(coo, q, nnz_pad, tmax, m) if with_stats else None
+    stats = (
+        _tc_plan_stats(coo, q, nnz_pad, tmax, m, skew_perm=sp)
+        if with_stats
+        else None
+    )
     blocks = blocks_from_coo(coo) if keep_blocks else None
 
     step_keep = None
@@ -226,7 +271,10 @@ def pack_tc_plan(
             coo.counts.reshape(q, q),
             m_cnt,
             stats.probe_work_per_device_shift if stats is not None else None,
+            skew_perm=sp,
         )
+
+    b_aug = host_aug_keys(b_indptr, b_indices) if aug_keys else None
 
     return TCPlan(
         n=n,
@@ -247,6 +295,8 @@ def pack_tc_plan(
         stats=stats,
         blocks=blocks,
         step_keep=step_keep,
+        b_aug=b_aug,
+        skew_perm=tuple(int(v) for v in sp) if sp is not None else None,
     )
 
 
@@ -467,6 +517,226 @@ def pack_oned_plan(
         step_keep=step_keep,
         stats=stats,
     )
+
+
+# ======================================================================
+# schedule compaction: dead-shift elision + σ visit-order search
+# ======================================================================
+_SKEW_SEARCH_MAX_Q = 8  # q! permutations; beyond this keep the identity
+
+
+def choose_cannon_skew(step_keep: np.ndarray):
+    """Pick the visit-order permutation σ minimizing globally-live steps.
+
+    Any σ is a valid Cannon alignment (placement ``A0[x,y] =
+    U_{x,σ[(x+y)%q]}`` with the same unit shifts), so the planner is
+    free to *reorder which k-panel every device sees at which step*.
+    Liveness only depends on the per-diagonal-class union of live panels
+    ``W[d, z] = ∃(x,y): (x+y)%q == d and panel z live at (x, y)``; step
+    ``s`` is dead under σ iff ``σ[(d+s)%q] ∉ W[d]`` for every class
+    ``d``.  Exhaustive over ``q!`` permutations (q ≤ 8; lexicographic
+    order, identity first, first minimum wins — deterministic), identity
+    beyond.
+
+    Returns ``(σ tuple, n_live under σ)``; σ is the identity whenever it
+    is already optimal, so dense graphs re-pack to byte-identical plans.
+    """
+    import itertools
+
+    keep = np.asarray(step_keep, dtype=bool)
+    q = keep.shape[-1]
+    x = np.arange(q)[:, None, None]
+    y = np.arange(q)[None, :, None]
+    s = np.arange(q)[None, None, :]
+    # live panels per device: keep is indexed by step; panel at step s is
+    # z = (x+y+s)%q under the identity placement the mask was packed with
+    z = (x + y + s) % q
+    d = np.broadcast_to((x + y) % q, z.shape)
+    W = np.zeros((q, q), dtype=bool)
+    np.logical_or.at(W, (d.ravel(), z.ravel()), keep.ravel())
+
+    dd = np.arange(q)[:, None]
+    ss = np.arange(q)[None, :]
+    identity = tuple(range(q))
+    n_live_id = int(W[dd, (dd + ss) % q].any(axis=0).sum())
+    if n_live_id <= 1 or q > _SKEW_SEARCH_MAX_Q:
+        return identity, n_live_id
+    perms = np.array(list(itertools.permutations(range(q))), dtype=np.int64)
+    # visit[p, d, s] = σ_p[(d+s)%q]; live step s under σ_p iff any class
+    # d has its visited panel in W[d]
+    visit = perms[np.arange(perms.shape[0])[:, None, None], (dd + ss)[None] % q]
+    live = W[dd[None], visit]
+    n_live = live.any(axis=1).sum(axis=1)
+    best = int(np.argmin(n_live))  # first minimum: identity wins ties at σ=id
+    return tuple(int(v) for v in perms[best]), int(n_live[best])
+
+
+def compact_stage(plan, *, repack=None):
+    """Attach the compacted executable schedule to a packed plan.
+
+    Computes the globally-live step list from the staged ``step_keep``
+    mask (:func:`repro.core.plan.compact_live_steps`).  For Cannon plans
+    a ``repack`` callable re-packs the graph under the live-minimizing σ
+    visit order first (:func:`choose_cannon_skew`) when that beats the
+    identity; SUMMA rounds and ring steps have no free visit order, so
+    their dead steps are elided in place.  No-op (returns the plan
+    unchanged) when the plan has no skip mask.
+    """
+    keep = getattr(plan, "step_keep", None)
+    if keep is None:
+        return plan
+    if repack is not None:
+        sigma, n_live = choose_cannon_skew(keep)
+        if list(sigma) != list(range(len(sigma))):
+            plan = repack(sigma)
+            keep = plan.step_keep
+    plan.compact = compact_live_steps(keep)
+    return plan
+
+
+# ======================================================================
+# deterministic kernel-shape autotune (chunk + two-level split)
+# ======================================================================
+_CHUNK_BUDGET = 1 << 17  # probe-panel elements one chunk may gather
+_CHUNK_MIN, _CHUNK_MAX = 64, 4096
+_TAIL_PERCENTILE = 90.0
+
+
+def _pick_chunk(tmax: int, d_eff: int) -> int:
+    """Deterministic chunk: the smallest power of two covering the task
+    list, capped so one chunk's gathered probe panel (``chunk * d_eff``
+    elements) stays within a fixed budget — fewer scan iterations on
+    small blocks, bounded working set on large ones."""
+    cap = max(_CHUNK_MIN, _CHUNK_BUDGET // max(1, int(d_eff)))
+    c = _CHUNK_MIN
+    while c < min(max(1, tmax), cap):
+        c <<= 1
+    return int(max(_CHUNK_MIN, min(c, _CHUNK_MAX)))
+
+
+def _tail_split(need: np.ndarray, dmax: int):
+    """Percentile split of the per-task probe-length distribution:
+    ``d_small`` = p90 rounded up to a multiple of 8 (≥ 8), ``tail_heavy``
+    when the max exceeds twice that — the regime where flat ``dmax``
+    padding wastes ≥ 2x on ≥ 90% of tasks and ``search2`` pays off."""
+    if need.size == 0:
+        return min(8, max(1, dmax)), False
+    p = float(np.percentile(need, _TAIL_PERCENTILE))
+    d_small = int(min(max(8, int(-(-p // 8)) * 8), dmax))
+    return d_small, bool(dmax > 2 * d_small)
+
+
+def _autotune_tasks(ti3, tj3, cnt, need_rows_of, dmax, tmax):
+    """Shared autotune body: per-task probe lengths → percentile
+    ``d_small``/``n_long`` split, stable long-first task reorder, and the
+    deterministic chunk.  Returns ``(new_ti, new_tj, chunk, report)``."""
+    ti = ti3.reshape(-1, ti3.shape[-1])
+    tj = tj3.reshape(-1, tj3.shape[-1])
+    cnt = np.asarray(cnt).reshape(-1)
+    new_ti = ti.copy()
+    new_tj = tj.copy()
+    per_dev = [
+        need_rows_of(b)[ti[b, : int(cnt[b])]]
+        if int(cnt[b])
+        else np.zeros(0, np.int64)
+        for b in range(ti.shape[0])
+    ]
+    needs_all = (
+        np.concatenate(per_dev) if per_dev else np.zeros(0, np.int64)
+    )
+    d_small, tail_heavy = _tail_split(needs_all, dmax)
+    n_long_max = 0
+    for b in range(ti.shape[0]):
+        c = int(cnt[b])
+        if not c:
+            continue
+        long_mask = per_dev[b] > d_small
+        order = np.argsort(~long_mask, kind="stable")  # long tasks first
+        new_ti[b, :c] = ti[b, :c][order]
+        new_tj[b, :c] = tj[b, :c][order]
+        n_long_max = max(n_long_max, int(long_mask.sum()))
+    chunk = max(
+        1, min(_pick_chunk(tmax, d_small if tail_heavy else dmax), tmax)
+    )
+    report = dict(
+        chunk=int(chunk),
+        d_small=int(d_small),
+        n_long=int(n_long_max),
+        dmax=int(dmax),
+        tail_heavy=tail_heavy,
+        probe_p90=float(np.percentile(needs_all, _TAIL_PERCENTILE))
+        if needs_all.size
+        else 0.0,
+    )
+    return new_ti.reshape(ti3.shape), new_tj.reshape(tj3.shape), chunk, report
+
+
+def autotune_tc_plan(plan: TCPlan) -> TCPlan:
+    """Deterministic kernel-shape autotune for Cannon plans (DESIGN.md
+    §5): per-task probe lengths (max over every pairing a task can meet)
+    come straight from the packed ``a_indptr`` — grid row ``x`` holds
+    every panel of block-row ``x`` across its columns, so the row-wise
+    max over ``y`` is the max over ``z`` regardless of the σ visit
+    order.  No timing, no randomness: same plan in, same shapes out
+    (the property the plan cache key relies on)."""
+    import dataclasses as _dc
+
+    q = plan.q
+    lens = np.diff(plan.a_indptr.astype(np.int64), axis=2)  # (q, q, nb)
+    need_rows = lens.max(axis=1)  # (q, nb): max over all panels of row x
+
+    new_ti, new_tj, chunk, report = _autotune_tasks(
+        plan.m_ti, plan.m_tj, plan.m_cnt, lambda b: need_rows[b // q],
+        plan.dmax, plan.tmax,
+    )
+    new = _dc.replace(plan, m_ti=new_ti, m_tj=new_tj, chunk=chunk)
+    new.n_long = report["n_long"]  # type: ignore[attr-defined]
+    new.d_small = report["d_small"]  # type: ignore[attr-defined]
+    new.autotune = report
+    return new
+
+
+def autotune_summa_plan(plan: SummaPlan) -> SummaPlan:
+    """SUMMA autotune: the probe side is the A panel row, so per-task
+    lengths are the max over broadcast rounds of the ``a_indptr`` row
+    lengths (panel ``(x, z)`` sits at grid position ``(x, z)``)."""
+    import dataclasses as _dc
+
+    c = plan.c
+    lens = np.diff(plan.a_indptr.astype(np.int64), axis=2)  # (r, c, nb_r)
+    need_rows = lens.max(axis=1)  # (r, nb_r)
+
+    new_ti, new_tj, chunk, report = _autotune_tasks(
+        plan.m_ti, plan.m_tj, plan.m_cnt, lambda b: need_rows[b // c],
+        plan.dmax, plan.tmax,
+    )
+    new = _dc.replace(plan, m_ti=new_ti, m_tj=new_tj, chunk=chunk)
+    new.n_long = report["n_long"]  # type: ignore[attr-defined]
+    new.d_small = report["d_small"]  # type: ignore[attr-defined]
+    new.autotune = report
+    return new
+
+
+def autotune_oned_plan(plan: OneDPlan) -> OneDPlan:
+    """1D-ring autotune: chunk only.  The ring's B columns are *global*
+    ids (they rotate whole adjacency rows), so the block-local global-key
+    two-level kernel does not apply — ``tail_heavy`` is reported for
+    visibility but ``method='auto'`` resolves to ``search`` on this
+    schedule, and no two-level split lands on the plan."""
+    import dataclasses as _dc
+
+    lens = np.diff(plan.indptr.astype(np.int64), axis=1)  # (p, nb)
+    p = plan.p
+
+    # tasks (d, o) probe device d's own rows; task order stays put (the
+    # two-level boundary is unused here), only the chunk is tuned
+    _, _, chunk, report = _autotune_tasks(
+        plan.t_i, plan.t_j, plan.t_cnt, lambda b: lens[b // p],
+        plan.dmax, plan.gmax,
+    )
+    new = _dc.replace(plan, chunk=chunk)
+    new.autotune = dict(report, n_long=None, d_small=None)
+    return new
 
 
 def timed(name: str, seconds: dict, fn, *args, **kwargs):
