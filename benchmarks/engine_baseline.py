@@ -20,7 +20,13 @@ isolation:
   fixtures where either term vanishes ``double_buffer=False`` is the
   right call (one payload generation less memory, no discarded shift);
 * ``autotune`` — ``--method auto`` (deterministic kernel shapes) vs
-  fixed ``chunk=512`` search on the skewed ``powerlaw:600,2.2``.
+  fixed ``chunk=512`` search on the skewed ``powerlaw:600,2.2``;
+* ``collectives`` — the communication-avoiding collectives A/B
+  (DESIGN.md §4.5): 2.5D tree vs flat reduction on a 2-pod mesh and
+  ppermute-chain vs one-hot SUMMA broadcasts, each cell annotated with
+  the per-phase HLO byte attribution (``coll_reduce_bytes`` /
+  ``coll_broadcast_bytes`` — pairs-aware, so the masked rounds are
+  charged only their participating fraction).
 
     python -m benchmarks.engine_baseline [--quick] [--out BENCH_engine.json]
     python -m benchmarks.engine_baseline --smoke   # CI guard: fails if the
@@ -41,6 +47,7 @@ SCALES_QUICK = [12, 13]
 SCHEDULES = ["cannon", "summa", "oned"]
 BLOCK_SPARSE_GRAPH = "cliques:3,60"
 POWERLAW_GRAPH = "powerlaw:600,2.2"
+COLLECTIVES_GRAPH = "er:400,16,3"
 # compacted tct must not exceed cond-only tct by more than this (both
 # are warm dispatch times; small slack absorbs host-device timer noise)
 COMPACT_REGRESSION_SLACK = 1.05
@@ -54,7 +61,9 @@ def _cell(r: dict) -> dict:
     )
     for key in ("schedule_steps", "skipped_steps", "live_steps",
                 "elided_steps", "autotuned_chunk", "tct_shift_only",
-                "tct_count_only", "method"):
+                "tct_broadcast_only", "tct_count_only", "method",
+                "coll_shift_bytes", "coll_broadcast_bytes",
+                "coll_reduce_bytes", "coll_other_bytes"):
         if key in r:
             cell[key] = r[key]
     return cell
@@ -109,6 +118,49 @@ def block_sparse_fixture(graph: str = BLOCK_SPARSE_GRAPH, grid: int = GRID):
             "payload"
         ),
     )
+    return out
+
+
+def collectives_fixture(graph: str = COLLECTIVES_GRAPH, grid: int = GRID):
+    """A/B the communication-avoiding collectives in isolation
+    (DESIGN.md §4.5), verifying every variant against the oracle:
+
+    * ``reduce`` — flat psum-per-axis vs the 2.5D staged tree on a
+      q=2, 2-pod mesh (8 ranks): wall-time plus attributed reduce
+      bytes (the tree must move strictly fewer);
+    * ``broadcast`` — one-hot psum vs the masked ppermute doubling
+      chain for SUMMA panel broadcasts at q=3: wall-time plus
+      attributed broadcast bytes (the chain halves them).
+    """
+    out = {"graph": graph, "reduce": {}, "broadcast": {}}
+    for strat in ("flat", "tree"):
+        r = run_tc_subprocess(
+            graph, 2, pods=2,
+            extra=("--verify", "--repeat", "5", "--time-split",
+                   "--reduce-strategy", strat),
+        )
+        out["reduce"][strat] = _cell(r)
+        print(csv_row(f"engine/collectives/reduce/{strat}",
+                      r["tct_seconds"] * 1e6,
+                      f"reduce_bytes={r['coll_reduce_bytes']}"))
+    assert (
+        out["reduce"]["flat"]["triangles"]
+        == out["reduce"]["tree"]["triangles"]
+    ), f"tree reduction miscounts on {graph}: {out['reduce']}"
+    for strat in ("onehot", "chain"):
+        r = run_tc_subprocess(
+            graph, grid, schedule="summa",
+            extra=("--verify", "--repeat", "5", "--time-split",
+                   "--broadcast", strat),
+        )
+        out["broadcast"][strat] = _cell(r)
+        print(csv_row(f"engine/collectives/broadcast/{strat}",
+                      r["tct_seconds"] * 1e6,
+                      f"broadcast_bytes={r['coll_broadcast_bytes']}"))
+    assert (
+        out["broadcast"]["onehot"]["triangles"]
+        == out["broadcast"]["chain"]["triangles"]
+    ), f"chain broadcast miscounts on {graph}: {out['broadcast']}"
     return out
 
 
@@ -175,6 +227,40 @@ def smoke() -> dict:
         f"{compacted:.4f}s <= cond-only {cond_only:.4f}s, all variants "
         "agree"
     )
+    co = collectives_fixture()
+    flat_b = co["reduce"]["flat"]["coll_reduce_bytes"]
+    tree_b = co["reduce"]["tree"]["coll_reduce_bytes"]
+    if tree_b >= flat_b:
+        raise SystemExit(
+            f"engine smoke FAILED: tree reduce moves {tree_b} bytes vs "
+            f"flat {flat_b} (expected strictly fewer — the staged "
+            "reduce is not communication-avoiding)"
+        )
+    one_b = co["broadcast"]["onehot"]["coll_broadcast_bytes"]
+    chain_b = co["broadcast"]["chain"]["coll_broadcast_bytes"]
+    if chain_b > one_b:
+        raise SystemExit(
+            f"engine smoke FAILED: chain broadcast moves {chain_b} "
+            f"bytes vs one-hot {one_b} (expected no more)"
+        )
+    tree_t = co["reduce"]["tree"]["tct_seconds"]
+    flat_t = co["reduce"]["flat"]["tct_seconds"]
+    if tree_t > flat_t * COMPACT_REGRESSION_SLACK:
+        # same noise policy as the compaction guard: one re-measure
+        co2 = collectives_fixture()
+        tree_t = min(tree_t, co2["reduce"]["tree"]["tct_seconds"])
+        flat_t = max(flat_t, co2["reduce"]["flat"]["tct_seconds"])
+        if tree_t > flat_t * COMPACT_REGRESSION_SLACK:
+            raise SystemExit(
+                f"engine smoke FAILED: tree reduction tct {tree_t:.4f}s "
+                f"regresses vs flat psum {flat_t:.4f}s "
+                f"(slack {COMPACT_REGRESSION_SLACK}x)"
+            )
+    print(
+        f"# collectives smoke ok: tree reduce {tree_b} < flat {flat_b} "
+        f"bytes ({tree_t:.4f}s vs {flat_t:.4f}s), chain broadcast "
+        f"{chain_b} <= one-hot {one_b} bytes"
+    )
     return bs
 
 
@@ -206,6 +292,7 @@ def run(quick: bool = False, out: str = "BENCH_engine.json") -> dict:
         assert len(counts) == 1, f"schedules disagree at scale {scale}: {counts}"
     report["block_sparse"] = block_sparse_fixture()
     report["autotune"] = autotune_fixture()
+    report["collectives"] = collectives_fixture()
     with open(out, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
     print(f"# wrote {out}")

@@ -113,6 +113,13 @@ class RunContext:
     use_step_mask: Optional[bool] = None
     double_buffer: bool = True
     compact: Optional[bool] = None
+    # communication-avoiding collective strategies (DESIGN.md §4.5):
+    # the final reduction ("auto" = 2.5D tree when a power-of-two pod
+    # axis is present, else flat psums) and SUMMA's panel broadcast
+    # (None/"auto" = ppermute chain for plain engines, one-hot psum for
+    # batched)
+    reduce_strategy: str = "auto"
+    broadcast: Optional[str] = None
     # pipeline options: runners plan the *raw* graph through
     # repro.pipeline with these, so cache hits skip the relabel too
     reorder: bool = True
@@ -242,12 +249,13 @@ def _run_cannon(graph: Graph, mesh, ctx: RunContext):
         ctx.mark_counting()
         fn = ctx.memo(
             ("dense_fn", mesh, ctx.use_step_mask, ctx.double_buffer,
-             ctx.compact),
+             ctx.compact, ctx.reduce_strategy),
             lambda: build_cannon_dense_fn(
                 plan, mesh,
                 use_step_mask=ctx.use_step_mask,
                 double_buffer=ctx.double_buffer,
                 compact=ctx.compact,
+                reduce_strategy=ctx.reduce_strategy,
             ),
         )
         return int(fn(**staged)), plan
@@ -303,7 +311,8 @@ def _run_cannon(graph: Graph, mesh, ctx: RunContext):
     ctx.mark_counting()
     fn = ctx.memo(
         ("fn", mesh, ctx.method, ctx.probe_shorter, str(ctx.count_dtype),
-         pod_axis, ctx.use_step_mask, ctx.double_buffer, ctx.compact),
+         pod_axis, ctx.use_step_mask, ctx.double_buffer, ctx.compact,
+         ctx.reduce_strategy),
         lambda: cannon_mod.build_cannon_fn(
             plan,
             mesh,
@@ -314,6 +323,7 @@ def _run_cannon(graph: Graph, mesh, ctx: RunContext):
             use_step_mask=ctx.use_step_mask,
             double_buffer=ctx.double_buffer,
             compact=ctx.compact,
+            reduce_strategy=ctx.reduce_strategy,
         ),
     )
     return int(fn(**staged)), plan
@@ -330,6 +340,7 @@ def _run_summa(graph: Graph, mesh, ctx: RunContext):
         cyclic_p=ctx.cyclic_p, rebalance_trials=ctx.rebalance_trials,
         compact=ctx.compact is not False,
         autotune=(ctx.method == "auto"),
+        broadcast=ctx.broadcast or "auto",
         cache=ctx.cache,
     )
     splan = ctx.artifact.plan
@@ -339,7 +350,8 @@ def _run_summa(graph: Graph, mesh, ctx: RunContext):
     ctx.mark_counting()
     fn = ctx.memo(
         ("fn", mesh, ctx.method, ctx.probe_shorter, str(ctx.count_dtype),
-         ctx.use_step_mask, ctx.compact),
+         ctx.use_step_mask, ctx.compact, ctx.broadcast,
+         ctx.reduce_strategy),
         lambda: build_summa_fn(
             splan,
             mesh,
@@ -348,6 +360,7 @@ def _run_summa(graph: Graph, mesh, ctx: RunContext):
             count_dtype=ctx.count_dtype,
             use_step_mask=ctx.use_step_mask,
             compact=ctx.compact,
+            broadcast=ctx.broadcast,
         ),
     )
     return int(fn(**staged)), splan
@@ -374,7 +387,8 @@ def _run_oned(graph: Graph, mesh, ctx: RunContext):
     ctx.mark_counting()
     fn = ctx.memo(
         ("fn", flat_mesh, ctx.method, ctx.probe_shorter,
-         str(ctx.count_dtype), ctx.use_step_mask, ctx.compact),
+         str(ctx.count_dtype), ctx.use_step_mask, ctx.compact,
+         ctx.reduce_strategy),
         lambda: build_oned_fn(
             oplan,
             flat_mesh,
@@ -383,6 +397,7 @@ def _run_oned(graph: Graph, mesh, ctx: RunContext):
             count_dtype=ctx.count_dtype,
             use_step_mask=ctx.use_step_mask,
             compact=ctx.compact,
+            reduce_strategy=ctx.reduce_strategy,
         ),
     )
     return int(fn(**staged)), oplan
@@ -427,6 +442,8 @@ def count_triangles(
     use_step_mask: Optional[bool] = None,
     double_buffer: bool = True,
     compact: Optional[bool] = None,
+    reduce_strategy: str = "auto",
+    broadcast: Optional[str] = None,
     rebalance_trials: int = 0,
     cache=None,
 ) -> TCResult:
@@ -447,7 +464,12 @@ def count_triangles(
     communication-overlapped scan body; ``compact`` controls the
     compacted kept-step schedule (None = auto: on when the planner's
     compaction stage elided a step — DESIGN.md §4.4; False keeps the
-    full scan body).  ``rebalance_trials > 0`` runs
+    full scan body).  ``reduce_strategy`` selects the final reduction
+    (``"flat"`` psums per axis, ``"tree"`` = the 2.5D staged reduce,
+    ``"auto"`` = tree whenever a power-of-two pod axis is present) and
+    ``broadcast`` SUMMA's panel broadcast (``"onehot"`` psum,
+    ``"chain"`` ppermute chains, ``None``/``"auto"`` = chain for plain
+    engines) — DESIGN.md §4.5.  ``rebalance_trials > 0`` runs
     the skip-aware rebalance stage (DESIGN.md §4.3) during planning —
     it needs a pipeline-backed schedule and a pipeline-made plan, so it
     is rejected alongside a caller-supplied ``plan`` or a schedule
@@ -494,6 +516,8 @@ def count_triangles(
         use_step_mask=use_step_mask,
         double_buffer=double_buffer,
         compact=compact,
+        reduce_strategy=reduce_strategy,
+        broadcast=broadcast,
         reorder=reorder,
         cyclic_p=cyclic_p,
         rebalance_trials=rebalance_trials,

@@ -117,6 +117,7 @@ def build_cannon_fn(
     double_buffer: bool = True,
     compact: Optional[bool] = None,
     elide_shifts: bool = False,
+    reduce_strategy: str = "auto",
 ):
     """Build the jitted SPMD counting function for ``plan`` on ``mesh``.
 
@@ -141,7 +142,11 @@ def build_cannon_fn(
     kernels additionally pick up planner-staged ``b_aug`` intersection
     keys when the plan carries them.  ``elide_shifts`` is a timing probe
     (counts are wrong for q > 1) used by the benchmark's shift/count
-    attribution.
+    attribution.  ``reduce_strategy`` selects the final reduction:
+    ``"flat"`` (one psum per mesh axis), ``"tree"`` (the 2.5D staged
+    reduce — joint grid psum + cross-pod binomial ppermute tree,
+    DESIGN.md §4.5), or ``"auto"`` (tree whenever a power-of-two pod
+    axis is present).
     """
     del tile_kernel_mode  # tile path has its own builder below
     plan = _coerce(plan)
@@ -177,7 +182,9 @@ def build_cannon_fn(
     return engine.build_engine_fn(
         mesh, axes, store, schedule,
         count_dtype=count_dtype,
-        reduction=Reduction(global_sum=reduce_global),
+        reduction=Reduction(
+            global_sum=reduce_global, strategy=reduce_strategy
+        ),
         batched=batched,
         use_step_mask=use_step_mask,
     )
@@ -255,6 +262,7 @@ def build_cannon_tile_fn(
     use_step_mask: Optional[bool] = None,
     double_buffer: bool = True,
     compact: Optional[bool] = None,
+    reduce_strategy: str = "auto",
 ):
     """Cannon schedule with the Pallas bit-tile kernel as the count path.
 
@@ -280,7 +288,9 @@ def build_cannon_tile_fn(
     return engine.build_engine_fn(
         mesh, axes, store, schedule,
         count_dtype=count_dtype,
-        reduction=Reduction(global_sum=reduce_global),
+        reduction=Reduction(
+            global_sum=reduce_global, strategy=reduce_strategy
+        ),
         use_step_mask=use_step_mask,
     )
 
@@ -297,6 +307,7 @@ def build_cannon_dense_fn(
     use_step_mask: Optional[bool] = None,
     double_buffer: bool = True,
     compact: Optional[bool] = None,
+    reduce_strategy: str = "auto",
 ):
     """Dense-operand Cannon (oracle path): blocks as 0/1 float matrices."""
     plan = _coerce(plan)
@@ -313,6 +324,8 @@ def build_cannon_dense_fn(
     return engine.build_engine_fn(
         mesh, axes, store, schedule,
         count_dtype=acc_dtype,
-        reduction=Reduction(global_sum=reduce_global),
+        reduction=Reduction(
+            global_sum=reduce_global, strategy=reduce_strategy
+        ),
         use_step_mask=use_step_mask,
     )

@@ -67,6 +67,8 @@ __all__ = [
     "build_engine_stepper",
     "shift_perm",
     "tree_ppermute",
+    "pod_tree_allreduce",
+    "chain_broadcast",
 ]
 
 
@@ -450,18 +452,36 @@ class SummaCSRStore(OperandStore):
 
     Nothing is carried between steps; instead the B operand holds
     ``npan = ceil(c/r)`` panels per device and :meth:`select` realizes
-    step ``z``'s (A, B) panel pair as masked psums (one-hot broadcast —
-    XLA lowers this to an all-reduce; a dedicated collective-broadcast
-    would move strictly fewer bytes, accounted in the roofline).
+    step ``z``'s (A, B) panel pair per the ``broadcast`` strategy:
+
+    * ``"onehot"`` — masked psums (XLA lowers each to an all-reduce
+      moving ``2·S·(n-1)/n`` bytes — strictly more than a broadcast);
+    * ``"chain"`` — masked ppermute doubling chains
+      (:func:`chain_broadcast`, ``S·(n-1)/n`` bytes — half the psum).
+      Chain rounds need *static* round indices (the ppermute pairs are
+      trace constants), so the schedule must run its unrolled body —
+      :func:`~repro.core.summa.build_summa_fn` arranges this.
+
+    ``elide_broadcast=True`` is the count-only timing probe (mirroring
+    Cannon's ``elide_shifts``): every device counts its *local* panel
+    pair, no collectives — counts are wrong for grids > 1x1.
     """
 
     operand_names = ("a_indptr", "a_indices", "b_indptr", "b_indices")
     static_names = ("m_ti", "m_tj", "m_cnt")
 
-    def __init__(self, kernel, *, r: int, c: int):
+    def __init__(self, kernel, *, r: int, c: int, broadcast: str = "onehot",
+                 elide_broadcast: bool = False):
+        if broadcast not in ("onehot", "chain"):
+            raise ValueError(
+                f"unknown broadcast strategy {broadcast!r}; "
+                "expected 'onehot' or 'chain'"
+            )
         self.kernel = kernel
         self.r = r
         self.c = c
+        self.broadcast = broadcast
+        self.elide_broadcast = elide_broadcast
 
     def in_specs(self, axes):
         spec = P(axes.row, axes.col)
@@ -476,19 +496,48 @@ class SummaCSRStore(OperandStore):
         return ()
 
     def select(self, local, z, ctx):
-        """One-hot psum broadcast of step ``z``'s A panel (along the grid
-        row, from owner column ``z % c``) and B panel (along the grid
-        column, from owner row ``z % r``, local slot ``z // r``)."""
+        """Broadcast of step ``z``'s A panel (along the grid row, from
+        owner column ``z % c``) and B panel (along the grid column, from
+        owner row ``z % r``, local slot ``z // r``)."""
         a_ptr, a_idx = local["a_indptr"], local["a_indices"]
         b_ptr, b_idx = local["b_indptr"], local["b_indices"]
-        owna = (ctx.axis_index(ctx.axes.col) == z % self.c).astype(a_ptr.dtype)
-        pa_ptr = jax.lax.psum(a_ptr * owna, ctx.axes.col)
-        pa_idx = jax.lax.psum(a_idx * owna, ctx.axes.col)
-        slot = z // self.r
-        ownb = (ctx.axis_index(ctx.axes.row) == z % self.r).astype(b_ptr.dtype)
-        pb_ptr = jax.lax.psum(b_ptr[slot] * ownb, ctx.axes.row)
-        pb_idx = jax.lax.psum(b_idx[slot] * ownb, ctx.axes.row)
-        return ((pa_ptr, pa_idx), (pb_ptr, pb_idx))
+        if self.elide_broadcast:
+            return ((a_ptr, a_idx), (b_ptr[z // self.r], b_idx[z // self.r]))
+        with jax.named_scope("tc_broadcast"):
+            if self.broadcast == "chain":
+                if isinstance(z, jax.core.Tracer):
+                    raise ValueError(
+                        "chain broadcast needs static round indices "
+                        "(ppermute pairs are trace constants): run the "
+                        "unrolled schedule body (live_steps set)"
+                    )
+                z = int(z)
+                pa_ptr = chain_broadcast(
+                    a_ptr, ctx.axes.col, self.c, z % self.c
+                )
+                pa_idx = chain_broadcast(
+                    a_idx, ctx.axes.col, self.c, z % self.c
+                )
+                slot = z // self.r
+                pb_ptr = chain_broadcast(
+                    b_ptr[slot], ctx.axes.row, self.r, z % self.r
+                )
+                pb_idx = chain_broadcast(
+                    b_idx[slot], ctx.axes.row, self.r, z % self.r
+                )
+                return ((pa_ptr, pa_idx), (pb_ptr, pb_idx))
+            owna = (
+                ctx.axis_index(ctx.axes.col) == z % self.c
+            ).astype(a_ptr.dtype)
+            pa_ptr = jax.lax.psum(a_ptr * owna, ctx.axes.col)
+            pa_idx = jax.lax.psum(a_idx * owna, ctx.axes.col)
+            slot = z // self.r
+            ownb = (
+                ctx.axis_index(ctx.axes.row) == z % self.r
+            ).astype(b_ptr.dtype)
+            pb_ptr = jax.lax.psum(b_ptr[slot] * ownb, ctx.axes.row)
+            pb_idx = jax.lax.psum(b_idx[slot] * ownb, ctx.axes.row)
+            return ((pa_ptr, pa_idx), (pb_ptr, pb_idx))
 
     def count(self, state, local, step, ctx):
         del step, ctx
@@ -682,10 +731,11 @@ class CannonSchedule(ShiftSchedule):
             return payload
         perm = shift_perm(self.q, k)
         a_state, b_state = payload
-        return (
-            tree_ppermute(a_state, self.axes.col, perm),
-            tree_ppermute(b_state, self.axes.row, perm),
-        )
+        with jax.named_scope("tc_shift"):
+            return (
+                tree_ppermute(a_state, self.axes.col, perm),
+                tree_ppermute(b_state, self.axes.row, perm),
+            )
 
     def _shift(self, payload):
         return self._shift_k(payload, 1)
@@ -818,6 +868,9 @@ class RingSchedule(ShiftSchedule):
     p: int
     axes: RingAxes
     live_steps: Optional[Tuple[int, ...]] = None
+    # timing probe: elide every rotation (counts are wrong for p > 1 —
+    # used only by the benchmark's count-only attribution run)
+    elide_shifts: bool = False
 
     @property
     def nsteps(self) -> int:
@@ -825,9 +878,12 @@ class RingSchedule(ShiftSchedule):
 
     def _shift_k(self, payload, hop: int):
         k = hop % self.p
-        if k == 0:
+        if k == 0 or self.elide_shifts:
             return payload
-        return tree_ppermute(payload, self.axes.axis, shift_perm(self.p, k))
+        with jax.named_scope("tc_shift"):
+            return tree_ppermute(
+                payload, self.axes.axis, shift_perm(self.p, k)
+            )
 
     def make_body(self, store, local, ctx, *, step_keep=None,
                   count_dtype=jnp.int32, hop: int = 1):
@@ -869,18 +925,134 @@ class RingSchedule(ShiftSchedule):
 # ======================================================================
 # reduction
 # ======================================================================
+def pod_tree_allreduce(x, axis: str, n: int):
+    """Binomial-tree all-reduce over one mesh axis of size ``n`` (a
+    power of two): log2(n) masked ppermute rounds funnel partials to
+    position 0, log2(n) more broadcast the sum back.
+
+    ``ppermute`` delivers zeros to devices outside a round's receiver
+    set, so the reduce rounds add unconditionally; the broadcast rounds
+    select receivers by axis index.  Round ``k`` involves ``n / 2k`` of
+    the ``n`` positions as senders, so with pairs-aware accounting the
+    total moved is ``2·S·(n-1)/n`` — a psum's ring cost, but reached in
+    2·log2(n) latency hops instead of 2(n-1), and composable with a
+    *joint* grid psum so the 2.5D reduce never all-reduces over the pod
+    axis times the grid (see :class:`Reduction`).
+    """
+    if n == 1:
+        return x
+    assert n & (n - 1) == 0, "tree reduce needs a power-of-two axis size"
+    idx = jax.lax.axis_index(axis)
+    rounds = []
+    k = 1
+    while k < n:
+        rounds.append(k)
+        k *= 2
+    # reduce: round k's senders (t % 2k == k) funnel into t - k
+    for k in rounds:
+        pairs = [(t, t - k) for t in range(n) if t % (2 * k) == k]
+        x = x + compat.ppermute(x, axis, pairs)
+    # broadcast back: reversed rounds, receivers replace their stale
+    # partials (senders' values pass through ``x`` unchanged)
+    for k in reversed(rounds):
+        pairs = [(t, t + k) for t in range(n) if t % (2 * k) == 0]
+        recv = compat.ppermute(x, axis, pairs)
+        x = jnp.where(idx % (2 * k) == k, recv, x)
+    return x
+
+
+def chain_broadcast(x, axis: str, n: int, owner: int):
+    """Broadcast ``owner``'s value along one mesh axis of size ``n`` via
+    a masked ppermute doubling chain (emulating collective-broadcast
+    until jax exposes one).
+
+    Round ``d`` has every already-covered position forward to distance
+    ``d`` ahead (mod ``n``, never wrapping past the owner), doubling
+    coverage; ``n - 1`` pairs total across all rounds, so the moved
+    bytes are ``S·(n-1)/n`` — exactly *half* the one-hot psum's
+    all-reduce cost ``2·S·(n-1)/n``, in ceil(log2(n)) hops.  Positions
+    outside the covered prefix never send, so their stale values are
+    harmless and are replaced on receipt.
+    """
+    if n == 1:
+        return x
+    owner = int(owner) % n
+    rel = (jax.lax.axis_index(axis) - owner) % n
+    cover = 1
+    while cover < n:
+        pairs = [
+            (t, (t + cover) % n)
+            for t in range(n)
+            if (t - owner) % n < cover and (t - owner) % n + cover < n
+        ]
+        recv = compat.ppermute(x, axis, pairs)
+        x = jnp.where((rel >= cover) & (rel < 2 * cover), recv, x)
+        cover *= 2
+    return x
+
+
 @dataclasses.dataclass(frozen=True)
 class Reduction:
-    """Global psum over every mesh axis, or per-device partials."""
+    """Global sum of the per-device partials, or per-device outputs.
+
+    ``strategy`` selects how the global sum is realized:
+
+    * ``"flat"`` — one psum per mesh axis (the original path; the only
+      choice on single-pod grids and rings);
+    * ``"tree"`` — the 2.5D staged reduce: one *joint* psum over the
+      grid axes (a single all-reduce over the q² group, strictly fewer
+      bytes than the per-axis pair), then one cross-pod binomial tree
+      via log₂(npods) masked ppermute rounds each way
+      (:func:`pod_tree_allreduce`).  Needs a pod axis with a
+      power-of-two size > 1 — :meth:`resolve` enforces this;
+    * ``"auto"`` — ``tree`` whenever it is applicable, else ``flat``.
+
+    Builders pass the unresolved knob; :func:`build_engine_fn` binds it
+    against the mesh via :meth:`resolve`.  An unresolved ``"auto"``
+    applies as ``flat`` (the safe default for direct ``apply`` callers).
+    """
 
     global_sum: bool = True
+    strategy: str = "auto"  # "flat" | "tree" | "auto"
+    npods: int = 1  # pod-axis size, bound by resolve()
+
+    def resolve(self, mesh, axes) -> "Reduction":
+        """Bind ``strategy`` and the pod-axis size against the mesh."""
+        pod = getattr(axes, "pod", None)
+        npods = int(mesh.shape[pod]) if pod else 1
+        pow2 = npods > 1 and (npods & (npods - 1)) == 0
+        strategy = self.strategy
+        if strategy == "auto":
+            strategy = "tree" if (pod and pow2) else "flat"
+        elif strategy == "tree":
+            if not pod or npods <= 1:
+                raise ValueError(
+                    "reduce strategy 'tree' needs a pod axis with "
+                    "npods > 1; use 'flat' (or 'auto') on single-pod "
+                    "grids and rings"
+                )
+            if not pow2:
+                raise ValueError(
+                    f"reduce strategy 'tree' needs a power-of-two pod "
+                    f"count, got npods={npods}"
+                )
+        elif strategy != "flat":
+            raise ValueError(
+                f"unknown reduce strategy {strategy!r}; "
+                "expected 'flat', 'tree', or 'auto'"
+            )
+        return dataclasses.replace(self, strategy=strategy, npods=npods)
 
     def apply(self, total, axes):
-        if self.global_sum:
+        if not self.global_sum:
+            return total.reshape((1,) * len(axes.all))
+        with jax.named_scope("tc_reduce"):
+            if self.strategy == "tree":
+                total = jax.lax.psum(total, (axes.row, axes.col))
+                return pod_tree_allreduce(total, axes.pod, self.npods)
             for ax in axes.all:
                 total = jax.lax.psum(total, ax)
             return total
-        return total.reshape((1,) * len(axes.all))
 
     def out_specs(self, axes):
         return P() if self.global_sum else P(*axes.all)
@@ -938,7 +1110,7 @@ def build_engine_fn(
     and the call returns the ``(batch,)`` vector of global counts — one
     compiled executable and one dispatch for the whole batch.
     """
-    reduction = reduction or Reduction()
+    reduction = (reduction or Reduction()).resolve(mesh, axes)
     count_dtype = compat.canonical_count_dtype(count_dtype)
     ordered = list(store.names) + ([MASK_NAME] if use_step_mask else [])
     specs = store.in_specs(axes)

@@ -102,6 +102,8 @@ def build_oned_fn(
     batched: bool = False,
     use_step_mask: "bool | None" = None,
     compact: "bool | None" = None,
+    elide_shifts: bool = False,
+    reduce_strategy: str = "auto",
 ):
     """Ring algorithm over a 1D view of the mesh.
 
@@ -111,11 +113,17 @@ def build_oned_fn(
     not production).  Thin engine configuration: RingSchedule ×
     OneDCSRStore × kernel.  ``compact=None`` auto-enables dead-step
     elision with fused multi-hop ring rotations when the plan staged a
-    compacted schedule (DESIGN.md §4.4).
+    compacted schedule (DESIGN.md §4.4).  ``elide_shifts`` is the
+    count-only timing probe (counts are wrong for p > 1) used by the
+    time-split attribution; ``reduce_strategy`` is accepted for API
+    symmetry with the 2D builders — rings have no pod axis, so
+    ``"auto"`` resolves to the flat psum and an explicit ``"tree"``
+    is rejected loudly.
     """
     from . import engine
     from .engine import (
         OneDCSRStore,
+        Reduction,
         RingAxes,
         RingSchedule,
         make_csr_kernel,
@@ -142,8 +150,11 @@ def build_oned_fn(
         sentinel=plan.n + 1,
     )
     store = OneDCSRStore(kernel, p=p)
-    schedule = RingSchedule(p=p, axes=axes, live_steps=live)
+    schedule = RingSchedule(
+        p=p, axes=axes, live_steps=live, elide_shifts=elide_shifts
+    )
     return engine.build_engine_fn(
         mesh, axes, store, schedule, count_dtype=count_dtype,
+        reduction=Reduction(strategy=reduce_strategy),
         batched=batched, use_step_mask=use_step_mask,
     )

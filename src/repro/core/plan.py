@@ -137,6 +137,37 @@ def resolve_compact_steps(
     return cs.live_steps
 
 
+def resolve_broadcast(plan, broadcast, *, batched: bool = False) -> str:
+    """Resolve a SUMMA builder's ``broadcast`` request against the plan.
+
+    ``None`` defers to the strategy the plan was staged for (its
+    ``broadcast`` field; ``"auto"`` for plans predating the knob).
+    ``"auto"`` resolves to the ppermute ``"chain"`` for plain engines —
+    half the one-hot psum's bytes, DESIGN.md §4.5 — and to ``"onehot"``
+    for batched ones: chain rounds need static round indices (ppermute
+    pairs are trace constants), i.e. the unrolled body, which the
+    batched engine's shared scan rules out.  An explicit ``"chain"``
+    that cannot be honored is an error.
+    """
+    b = broadcast
+    if b is None:
+        b = getattr(as_plan(plan), "broadcast", None) or "auto"
+    if b == "auto":
+        return "onehot" if batched else "chain"
+    if b not in ("onehot", "chain"):
+        raise ValueError(
+            f"unknown broadcast strategy {b!r}; "
+            "expected 'onehot', 'chain', or 'auto'"
+        )
+    if b == "chain" and batched:
+        raise ValueError(
+            "broadcast='chain' is not supported for batched engines "
+            "(chain rounds need the unrolled body); pass 'onehot' "
+            "(or 'auto')"
+        )
+    return b
+
+
 def resolve_step_mask(plan, use_step_mask) -> bool:
     """Resolve a builder's ``use_step_mask`` request against the plan.
 

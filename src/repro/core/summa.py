@@ -63,10 +63,14 @@ class SummaPlan:
     # with_stats — consumed by the skip-aware rebalancer
     stats: "object | None" = None
     # globally-live broadcast rounds (repro.core.plan.CompactSchedule);
-    # dead rounds' one-hot psum broadcasts are elided entirely
+    # dead rounds' broadcasts are elided entirely
     compact: "object | None" = None
     # deterministic kernel-shape autotune report (pipeline stage)
     autotune: "dict | None" = None
+    # broadcast strategy the plan was staged for ("auto" | "onehot" |
+    # "chain") — a planner cache-key component, resolved by the engine
+    # via repro.core.plan.resolve_broadcast
+    broadcast: str = "auto"
 
     def device_arrays(self) -> Dict[str, np.ndarray]:
         out = dict(
@@ -114,6 +118,8 @@ def build_summa_fn(
     batched: bool = False,
     use_step_mask: "bool | None" = None,
     compact: "bool | None" = None,
+    broadcast: "str | None" = None,
+    elide_broadcast: bool = False,
 ):
     """Thin engine configuration: SummaSchedule × SummaCSRStore × kernel.
 
@@ -121,7 +127,18 @@ def build_summa_fn(
     when the plan carries ``step_keep`` masks; ``compact=None``
     auto-enables broadcast-round elision when the plan staged a
     compacted schedule that drops at least one round (dead rounds lose
-    their one-hot psums entirely — DESIGN.md §4.4).
+    their broadcasts entirely — DESIGN.md §4.4).
+
+    ``broadcast`` selects the panel-broadcast strategy (DESIGN.md §4.5):
+    ``"onehot"`` (masked psum — an all-reduce per panel), ``"chain"``
+    (masked ppermute doubling chains — half the bytes), ``"auto"``/
+    ``None`` resolves via :func:`~repro.core.plan.resolve_broadcast`
+    (chain for plain engines, one-hot for batched).  Chain rounds need
+    static round indices, so the schedule then runs its unrolled body
+    even when nothing is elided — dead rounds still elide their
+    collectives entirely.  ``elide_broadcast`` is the count-only timing
+    probe (counts are wrong for grids > 1x1), mirroring Cannon's
+    ``elide_shifts``.
     """
     from . import engine
     from .engine import (
@@ -131,11 +148,21 @@ def build_summa_fn(
         SummaSchedule,
         make_csr_kernel,
     )
-    from .plan import as_plan, resolve_compact_steps, resolve_step_mask
+    from .plan import (
+        as_plan,
+        resolve_broadcast,
+        resolve_compact_steps,
+        resolve_step_mask,
+    )
 
     plan = as_plan(plan)
     use_step_mask = resolve_step_mask(plan, use_step_mask)
     live = resolve_compact_steps(plan, compact, batched=batched)
+    broadcast = resolve_broadcast(plan, broadcast, batched=batched)
+    if broadcast == "chain" and live is None:
+        # chain rounds need static indices: unroll the full round list
+        # (elision still applies whenever the plan staged a live subset)
+        live = tuple(range(plan.c))
     axes = GridAxes(row_axis, col_axis)
     kernel = make_csr_kernel(
         method,
@@ -147,7 +174,10 @@ def build_summa_fn(
         n_long=getattr(plan, "n_long", None),
         d_small=getattr(plan, "d_small", None),
     )
-    store = SummaCSRStore(kernel, r=plan.r, c=plan.c)
+    store = SummaCSRStore(
+        kernel, r=plan.r, c=plan.c, broadcast=broadcast,
+        elide_broadcast=elide_broadcast,
+    )
     schedule = SummaSchedule(r=plan.r, c=plan.c, axes=axes, live_steps=live)
     return engine.build_engine_fn(
         mesh, axes, store, schedule,

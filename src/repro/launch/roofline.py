@@ -15,10 +15,19 @@ collective op, using ring-algorithm costs:
     all-gather       size * (n-1)/n         (size = result bytes)
     reduce-scatter   size * (n-1)           (size = result = operand/n)
     all-to-all       size * (n-1)/n
-    collective-permute  size                (one hop)
+    collective-permute  size * npairs/N     (pairs-aware, one hop)
 
-where n = replica-group size parsed from the op.  These are lower-bound
-byte counts for bidirectional-ring collectives on the ICI torus.
+where n = replica-group size parsed from the op.  The permute cost is
+*pairs-aware*: only the ``npairs`` source devices of its
+``source_target_pairs`` send, so the per-device average over the
+``N``-device module is ``size * npairs / N`` — a full rotation
+(npairs = N) costs ``size``, exactly the old flat estimate, while the
+masked tree/chain rounds of DESIGN.md §4.5 cost only their
+participating fraction.  ``N`` comes from the module's
+``num_partitions`` header (falling back to the largest device id named
+by any group or pair); when undeterminable the flat ``size`` estimate
+is kept.  These are lower-bound byte counts for bidirectional-ring
+collectives on the ICI torus.
 """
 from __future__ import annotations
 
@@ -29,6 +38,8 @@ from typing import Dict, Optional
 __all__ = [
     "HW",
     "collective_bytes",
+    "collective_phases",
+    "infer_num_devices",
     "roofline_from_compiled",
     "RooflineReport",
     "model_flops_lm",
@@ -53,7 +64,28 @@ _COLL_RE = re.compile(
     r"collective-permute)\(",
 )
 _GROUPS_RE = re.compile(r"replica_groups=\{\{(?P<first>[0-9,]+)\}")
-_PAIRS_RE = re.compile(r"source_target_pairs=\{(?P<pairs>[^}]*\})")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(?P<pairs>\{[^=]*?\})\}")
+_GROUPS_ALL_RE = re.compile(r"replica_groups=\{(?P<groups>\{[^=]*?\})\}")
+_NPART_RE = re.compile(r"num_partitions=(\d+)")
+
+
+def infer_num_devices(hlo_text: str) -> Optional[int]:
+    """Total devices of the SPMD module: the ``num_partitions`` header
+    when present, else the largest device id named by any replica group
+    or permute pair (+ 1); ``None`` when neither determines it."""
+    m = _NPART_RE.search(hlo_text)
+    if m and int(m.group(1)) > 1:
+        return int(m.group(1))
+    best = 0
+    for pm in _PAIRS_RE.finditer(hlo_text):
+        ids = re.findall(r"\d+", pm.group("pairs"))
+        if ids:
+            best = max(best, max(int(x) for x in ids) + 1)
+    for gm in _GROUPS_ALL_RE.finditer(hlo_text):
+        ids = re.findall(r"\d+", gm.group("groups"))
+        if ids:
+            best = max(best, max(int(x) for x in ids) + 1)
+    return best or None
 
 
 def _tuple_bytes(line: str) -> Optional[float]:
@@ -77,8 +109,13 @@ def _shape_bytes(dtype: str, shape: str) -> float:
     return n * _DTYPE_BYTES.get(dtype, 4)
 
 
-def _line_collective(line: str):
-    """(op, moved_bytes) for a collective op line, else None."""
+def _line_collective(line: str, ndev: Optional[int] = None):
+    """(op, moved_bytes) for a collective op line, else None.
+
+    ``ndev`` (total devices) enables the pairs-aware permute cost
+    ``size * npairs / ndev``; without it a permute costs the flat
+    ``size`` (every-device-participates) estimate.
+    """
     if "-done" in line:
         return None
     m = _COLL_RE.search(line)
@@ -103,6 +140,12 @@ def _line_collective(line: str):
         moved = size * (n - 1) / max(n, 1)
     else:  # collective-permute
         moved = size
+        if ndev:
+            pm = _PAIRS_RE.search(line)
+            if pm:
+                npairs = len(re.findall(r"\{\d+,\d+\}", pm.group("pairs")))
+                if npairs:
+                    moved = size * npairs / ndev
     return op, moved
 
 
@@ -133,7 +176,9 @@ _COUNT_BYTES = (
 )
 
 
-def hlo_cost(hlo_text: str) -> Dict[str, float]:
+def hlo_cost(
+    hlo_text: str, num_devices: Optional[int] = None
+) -> Dict[str, float]:
     """Loop-aware FLOPs / bytes / collective-bytes from optimized HLO.
 
     XLA's ``cost_analysis()`` counts while-loop bodies exactly once
@@ -148,6 +193,7 @@ def hlo_cost(hlo_text: str) -> Dict[str, float]:
       traffic for fusion-heavy modules;
     * collectives — ring-cost bytes per op kind (see module docstring).
     """
+    ndev = num_devices or infer_num_devices(hlo_text)
     comps: Dict[str, dict] = {}
     cur = None
     entry = None
@@ -177,7 +223,7 @@ def hlo_cost(hlo_text: str) -> Dict[str, float]:
             c["whiles"].append((wm.group(1), wm.group(2)))
         for x in _CONST_RE.findall(line):
             c["consts"].append(int(x))
-        lc = _line_collective(line)
+        lc = _line_collective(line, ndev)
         if lc:
             c["coll"].append(lc)
         dd = _DOT_RE.search(line)
@@ -243,7 +289,9 @@ def hlo_cost(hlo_text: str) -> Dict[str, float]:
     return {"flops": flops, "bytes": byts, "collectives": coll}
 
 
-def collective_bytes(hlo_text: str) -> Dict[str, float]:
+def collective_bytes(
+    hlo_text: str, num_devices: Optional[int] = None
+) -> Dict[str, float]:
     """Per-device collective bytes, **loop-aware**.
 
     Collectives inside ``while`` bodies (lax.scan / fori_loop) execute
@@ -252,6 +300,7 @@ def collective_bytes(hlo_text: str) -> Dict[str, float]:
     the integer constant in its condition computation, and propagate
     multipliers ENTRY -> body along the (possibly nested) while call graph.
     """
+    ndev = num_devices or infer_num_devices(hlo_text)
     comps: Dict[str, dict] = {}
     cur = None
     entry = None
@@ -275,7 +324,7 @@ def collective_bytes(hlo_text: str) -> Dict[str, float]:
         cm = _CONST_RE.findall(line)
         if cm:
             c["consts"].extend(int(x) for x in cm)
-        lc = _line_collective(line)
+        lc = _line_collective(line, ndev)
         if lc:
             c["coll"].append(lc)
 
@@ -321,9 +370,12 @@ def collective_bytes(hlo_text: str) -> Dict[str, float]:
     return out
 
 
-def collective_by_source(hlo_text: str, top: int = 12):
+def collective_by_source(
+    hlo_text: str, top: int = 12, num_devices: Optional[int] = None
+):
     """Loop-aware collective bytes bucketed by jax op_name metadata —
     the §Perf diagnosis tool: 'which line of model code moves the bytes'."""
+    ndev = num_devices or infer_num_devices(hlo_text)
     comps: Dict[str, dict] = {}
     cur = None
     entry = None
@@ -344,7 +396,7 @@ def collective_by_source(hlo_text: str, top: int = 12):
             c["whiles"].append((wm.group(1), wm.group(2)))
         for x in _CONST_RE.findall(line):
             c["consts"].append(int(x))
-        lc = _line_collective(line)
+        lc = _line_collective(line, ndev)
         if lc:
             src = re.search(r'op_name="([^"]+)"', line)
             c["coll"].append((lc[0], lc[1], src.group(1) if src else "?"))
@@ -373,6 +425,76 @@ def collective_by_source(hlo_text: str, top: int = 12):
             key = f"{op} @ {src[-90:]}"
             buckets[key] = buckets.get(key, 0.0) + moved * m
     return sorted(buckets.items(), key=lambda kv: -kv[1])[:top]
+
+
+_PHASES = ("shift", "broadcast", "reduce")
+
+
+def collective_phases(
+    hlo_text: str, num_devices: Optional[int] = None
+) -> Dict[str, float]:
+    """Loop-aware collective bytes bucketed by engine phase.
+
+    The engine wraps each collective in a named scope — ``tc_shift``
+    (schedule rotations), ``tc_broadcast`` (SUMMA panel broadcasts),
+    ``tc_reduce`` (final reduction, flat or tree) — which XLA carries
+    into the op_name metadata of the lowered collectives.  Returns
+    ``{"shift": B, "broadcast": B, "reduce": B, "other": B}`` (always
+    all four keys); untagged collectives land in ``"other"``.
+    """
+    ndev = num_devices or infer_num_devices(hlo_text)
+    comps: Dict[str, dict] = {}
+    cur = None
+    entry = None
+    for line in hlo_text.splitlines():
+        if not line.startswith(" "):
+            m = _COMP_START.match(line)
+            if m and "{" in line:
+                cur = m.group(2)
+                comps[cur] = {"coll": [], "whiles": [], "consts": []}
+                if m.group(1):
+                    entry = cur
+            continue
+        if cur is None:
+            continue
+        c = comps[cur]
+        wm = _WHILE_RE.search(line) or _WHILE_RE2.search(line)
+        if wm:
+            c["whiles"].append((wm.group(1), wm.group(2)))
+        for x in _CONST_RE.findall(line):
+            c["consts"].append(int(x))
+        lc = _line_collective(line, ndev)
+        if lc:
+            src = re.search(r'op_name="([^"]+)"', line)
+            name = src.group(1) if src else ""
+            phase = next(
+                (p for p in _PHASES if f"tc_{p}" in name), "other"
+            )
+            c["coll"].append((phase, lc[1]))
+
+    def trip_count(cond_name):
+        cc = comps.get(cond_name)
+        return max(1, max(cc["consts"])) if cc and cc["consts"] else 1
+
+    mult = {name: 0.0 for name in comps}
+    if entry:
+        mult[entry] = 1.0
+        frontier = [entry]
+        while frontier:
+            name = frontier.pop()
+            for a, b in comps[name]["whiles"]:
+                cond, body = (
+                    (a, b) if comps.get(a, {}).get("consts") else (b, a)
+                )
+                if body in mult:
+                    mult[body] += mult[name] * trip_count(cond)
+                    frontier.append(body)
+    out = {p: 0.0 for p in _PHASES + ("other",)}
+    for name, c in comps.items():
+        m = mult.get(name, 0.0) or (1.0 if c["coll"] else 0.0)
+        for phase, moved in c["coll"]:
+            out[phase] += moved * m
+    return out
 
 
 @dataclasses.dataclass

@@ -51,10 +51,27 @@ def main():
                          "(dead-shift elision + fused multi-hop "
                          "ppermutes); mirrors --no-skip-mask")
     ap.add_argument("--time-split", action="store_true",
-                    help="cannon only: also time a shift-only run "
-                         "(all-False mask, collectives + conds intact) "
-                         "and a count-only run (shifts elided) so the "
-                         "overlap column is attributable")
+                    help="also time a comm-only run (all-False mask, "
+                         "collectives + conds intact) and a count-only "
+                         "run (shifts/broadcasts elided) so the overlap "
+                         "column is attributable, and report "
+                         "per-collective-phase HLO bytes "
+                         "(coll_{shift,broadcast,reduce,other}_bytes); "
+                         "any schedule")
+    ap.add_argument("--reduce-strategy", default="auto",
+                    choices=["auto", "flat", "tree"],
+                    help="final-reduction collective: 'flat' psums over "
+                         "every mesh axis; 'tree' is the 2.5D staged "
+                         "reduce (joint grid psum then log2(pods) "
+                         "masked ppermute rounds); 'auto' picks tree "
+                         "when --pods > 1")
+    ap.add_argument("--broadcast", default=None,
+                    choices=["auto", "onehot", "chain"],
+                    help="summa panel-broadcast collective: 'onehot' "
+                         "psums owner-masked panels; 'chain' is the "
+                         "masked ppermute doubling chain (half the "
+                         "bytes); 'auto' picks chain for unrolled "
+                         "bodies")
     ap.add_argument("--repeat", type=int, default=1,
                     help="count this many times (plan-cache warm after the "
                          "first); tct_seconds reports the MINIMUM over the "
@@ -186,6 +203,8 @@ def main():
                 double_buffer=not args.no_double_buffer,
                 compact=False if args.no_compact else None,
                 rebalance_trials=args.rebalance,
+                reduce_strategy=args.reduce_strategy,
+                broadcast=args.broadcast,
             )
             times.append(res.count_seconds)
         if res.rebalance is not None:
@@ -201,7 +220,7 @@ def main():
         report.update(_skip_fields(res.plan, args.no_skip_mask))
         report.update(_compact_fields(res.plan))
         report.update(_autotune_fields(res.plan))
-        if args.time_split and args.schedule == "cannon":
+        if args.time_split:
             report.update(_time_split(g, args))
         total = res.triangles
 
@@ -260,32 +279,32 @@ def _autotune_fields(plan) -> dict:
 
 
 def _time_split(g, args) -> dict:
-    """Shift/count attribution probes (cannon, scan body):
+    """Comm/count attribution probes (any schedule):
 
-    * shift-only — the masked engine fed an all-False mask: every
-      ppermute and cond executes, every count kernel is skipped;
-    * count-only — the same engine with shifts elided
-      (``elide_shifts``): every count kernel executes against the
-      initially-held pair (a timing proxy — counts are wrong for q > 1,
-      so the result is discarded).
+    * comm-only — the masked engine fed an all-False mask: every
+      collective (shift rotation or panel broadcast) and cond executes,
+      every count kernel is skipped;
+    * count-only — the same engine with its data collectives elided
+      (``elide_shifts`` / ``elide_broadcast``): every count kernel
+      executes against the locally-held panels (a timing proxy —
+      counts are wrong for p > 1, so the result is discarded).
 
-    Both run the *uncompacted* scan body with the caller's
-    double-buffer flag, warm (timed call preceded by a compile call),
-    so ``tct_double_buffer − shift_only − count_only`` exposes what the
-    overlap actually buys.
+    Both run the *uncompacted* body with the caller's flags, warm
+    (timed call preceded by a compile call), so
+    ``tct − comm_only − count_only`` exposes what the overlap buys.
+    The per-phase byte columns come from
+    :func:`repro.launch.roofline.collective_phases` over the compiled
+    HLO of the *production* configuration: the engine tags its
+    collectives with named scopes (tc_shift / tc_broadcast /
+    tc_reduce), and permutes are charged pairs-aware — this is what
+    makes tree-vs-flat and chain-vs-onehot A/Bs comparable in bytes,
+    not just seconds (DESIGN.md §4.5).
     """
     import jax.numpy as jnp
 
     from ..core.api import make_grid_mesh
-    from ..core.cannon import build_cannon_fn
-    from ..pipeline import plan_cannon
+    from .roofline import collective_phases
 
-    art = plan_cannon(g, args.grid, chunk=args.chunk)
-    plan = art.plan
-    if plan.step_keep is None:
-        return {}
-    mesh = make_grid_mesh(args.grid)
-    staged = dict(art.staged())
     out = {}
 
     def timed_min(fn, arrays, warm=1, iters=3):
@@ -298,19 +317,115 @@ def _time_split(g, args) -> dict:
             best = min(best, time.perf_counter() - t0)
         return round(best, 4)
 
-    fshift = build_cannon_fn(
-        plan, mesh, use_step_mask=True, compact=False,
-        double_buffer=not args.no_double_buffer,
-    )
-    zeros = dict(staged, step_keep=jnp.zeros_like(staged["step_keep"]))
-    out["tct_shift_only"] = timed_min(fshift, zeros)
+    if args.schedule == "cannon":
+        from ..core.cannon import build_cannon_fn, pod_stack_arrays
+        from ..pipeline import plan_cannon
 
-    fcount = build_cannon_fn(
-        plan, mesh, use_step_mask=False, compact=False,
-        double_buffer=not args.no_double_buffer, elide_shifts=True,
+        art = plan_cannon(g, args.grid, chunk=args.chunk)
+        plan = art.plan
+        if plan.step_keep is None:
+            return {}
+        mesh = make_grid_mesh(args.grid, npods=args.pods)
+        if args.pods > 1:
+            staged = {
+                k: jnp.asarray(v)
+                for k, v in pod_stack_arrays(
+                    plan.device_arrays(), args.pods, plan.q
+                ).items()
+            }
+        else:
+            staged = dict(art.staged())
+        common = dict(
+            pod_axis="pod" if args.pods > 1 else None,
+            double_buffer=not args.no_double_buffer,
+            reduce_strategy=args.reduce_strategy,
+        )
+        fcomm = build_cannon_fn(
+            plan, mesh, use_step_mask=True, compact=False, **common
+        )
+        zeros = dict(staged, step_keep=jnp.zeros_like(staged["step_keep"]))
+        out["tct_shift_only"] = timed_min(fcomm, zeros)
+        fcount = build_cannon_fn(
+            plan, mesh, use_step_mask=False, compact=False,
+            elide_shifts=True, **common
+        )
+        no_mask = {k: v for k, v in staged.items() if k != "step_keep"}
+        out["tct_count_only"] = timed_min(fcount, no_mask)
+        fprod = build_cannon_fn(
+            plan, mesh,
+            use_step_mask=False if args.no_skip_mask else None,
+            compact=False if args.no_compact else None, **common
+        )
+    elif args.schedule == "summa":
+        from ..core.summa import build_summa_fn
+        from ..pipeline import plan_summa
+
+        art = plan_summa(
+            g, args.grid, args.grid, chunk=args.chunk,
+            broadcast=args.broadcast or "auto",
+        )
+        plan = art.plan
+        if plan.step_keep is None:
+            return {}
+        mesh = make_grid_mesh(args.grid)
+        staged = dict(art.staged())
+        fcomm = build_summa_fn(
+            plan, mesh, broadcast=args.broadcast, use_step_mask=True,
+            compact=False,
+        )
+        zeros = dict(staged, step_keep=jnp.zeros_like(staged["step_keep"]))
+        out["tct_broadcast_only"] = timed_min(fcomm, zeros)
+        fcount = build_summa_fn(
+            plan, mesh, broadcast=args.broadcast, use_step_mask=False,
+            compact=False, elide_broadcast=True,
+        )
+        no_mask = {k: v for k, v in staged.items() if k != "step_keep"}
+        out["tct_count_only"] = timed_min(fcount, no_mask)
+        fprod = build_summa_fn(
+            plan, mesh, broadcast=args.broadcast,
+            use_step_mask=False if args.no_skip_mask else None,
+            compact=False if args.no_compact else None,
+        )
+    elif args.schedule == "oned":
+        from .. import compat
+        from ..core.onedim import build_oned_fn
+        from ..pipeline import plan_oned
+
+        p = args.grid * args.grid * args.pods
+        art = plan_oned(g, p, chunk=args.chunk)
+        plan = art.plan
+        if plan.step_keep is None:
+            return {}
+        mesh = compat.make_mesh((p,), ("flat",))
+        staged = dict(art.staged())
+        fcomm = build_oned_fn(
+            plan, mesh, use_step_mask=True, compact=False,
+        )
+        zeros = dict(staged, step_keep=jnp.zeros_like(staged["step_keep"]))
+        out["tct_shift_only"] = timed_min(fcomm, zeros)
+        fcount = build_oned_fn(
+            plan, mesh, use_step_mask=False, compact=False,
+            elide_shifts=True,
+        )
+        no_mask = {k: v for k, v in staged.items() if k != "step_keep"}
+        out["tct_count_only"] = timed_min(fcount, no_mask)
+        fprod = build_oned_fn(
+            plan, mesh,
+            use_step_mask=False if args.no_skip_mask else None,
+            compact=False if args.no_compact else None,
+            reduce_strategy=args.reduce_strategy,
+        )
+    else:  # a registered schedule this probe doesn't know how to split
+        return {}
+
+    hlo = fprod.lower(**staged).compile().as_text()
+    phases = collective_phases(hlo)
+    out.update(
+        coll_shift_bytes=round(phases["shift"]),
+        coll_broadcast_bytes=round(phases["broadcast"]),
+        coll_reduce_bytes=round(phases["reduce"]),
+        coll_other_bytes=round(phases["other"]),
     )
-    no_mask = {k: v for k, v in staged.items() if k != "step_keep"}
-    out["tct_count_only"] = timed_min(fcount, no_mask)
     return out
 
 
@@ -344,6 +459,20 @@ def _run_batched(args):
             "--no-skip-mask/--no-double-buffer are not supported with "
             "--graphs (the batched engine always follows the plans' "
             "staged masks); use single-graph runs to A/B the levers"
+        )
+    if args.time_split:
+        raise SystemExit(
+            "--time-split is not supported with --graphs (one compiled "
+            "call spans every plan, so there is no per-graph comm/count "
+            "attribution); use single-graph runs"
+        )
+    if args.broadcast == "chain" or args.reduce_strategy != "auto":
+        raise SystemExit(
+            "--broadcast chain/--reduce-strategy are not supported with "
+            "--graphs (the batched engine keeps the uniform scan body, "
+            "which needs traced round indices — chain broadcasts and "
+            "staged reductions need the unrolled body); use "
+            "single-graph runs to A/B the collectives"
         )
     specs = split_specs(args.graphs)
     graphs = [graph_from_spec(s) for s in specs]
@@ -446,12 +575,17 @@ def _run_checkpointed(g, args):
     state_like = {f"carry{i}": ops[i % len(ops)] for i in range(n_carry)}
     state_like["acc"] = jnp.zeros((q, q), compat.default_count_dtype())
     step_sig = ",".join(map(str, steps))
+    coll_sig = (
+        f"reduce={args.reduce_strategy},broadcast={args.broadcast or 'auto'}"
+    )
     cross_mode = (
         "checkpoint in {d} was written by a run with a different "
         "schedule shape ({why}) — the saved carry's position and arity "
         "do not transfer across step sequences (compacted vs "
-        "--no-compact, double- vs single-buffered): resume with the "
-        "original flags or start from a fresh --ckpt-dir"
+        "--no-compact, double- vs single-buffered), and partial counts "
+        "accumulated under one collective strategy must not be summed "
+        "under another: resume with the original flags or start from a "
+        "fresh --ckpt-dir"
     )
     try:
         step0, restored, extra = mgr.restore_latest(state_like)
@@ -465,6 +599,16 @@ def _run_checkpointed(g, args):
                 cross_mode.format(
                     d=args.ckpt_dir,
                     why=f"steps [{extra['steps']}] vs [{step_sig}]",
+                )
+            )
+        if extra.get("collectives", coll_sig) != coll_sig:
+            raise SystemExit(
+                cross_mode.format(
+                    d=args.ckpt_dir,
+                    why=(
+                        f"collectives [{extra['collectives']}] vs "
+                        f"[{coll_sig}]"
+                    ),
                 )
             )
         st = restored
@@ -499,7 +643,11 @@ def _run_checkpointed(g, args):
         )
         st = {f"carry{i}": out[i] for i in range(n_carry)}
         st["acc"] = out[n_carry]
-        mgr.save(s + 1, st, extra={"shift": s + 1, "steps": step_sig})
+        mgr.save(
+            s + 1, st,
+            extra={"shift": s + 1, "steps": step_sig,
+                   "collectives": coll_sig},
+        )
     total = int(np.asarray(st["acc"]).sum())
     t2 = time.perf_counter()
     mgr.close()

@@ -195,13 +195,18 @@ def plan_summa(
     rebalance_trials: int = 0,
     compact: bool = True,
     autotune: bool = False,
+    broadcast: str = "auto",
     cache: Optional[PlanCache] = None,
 ) -> PlanArtifact:
     """Plan the SUMMA execution on an ``r x c`` grid, through the cache.
 
     ``compact`` stages the globally-live broadcast rounds (dead rounds'
-    one-hot psums are elided by the engine, DESIGN.md §4.4);
-    ``autotune`` runs the deterministic kernel-shape stage."""
+    broadcasts are elided by the engine, DESIGN.md §4.4);
+    ``autotune`` runs the deterministic kernel-shape stage;
+    ``broadcast`` records the panel-broadcast strategy the plan is
+    staged for (``"auto"``/``"onehot"``/``"chain"`` — DESIGN.md §4.5,
+    resolved by the engine builder) — like every planner knob it is a
+    cache-key component, so strategy A/B runs never share artifacts."""
 
     def pack(digest, key, seconds, cache_):
         t0 = time.perf_counter()
@@ -228,6 +233,7 @@ def plan_summa(
             plan = compact_stage(plan)  # rounds have no free visit order
         if autotune:
             plan = autotune_summa_plan(plan)
+        plan.broadcast = broadcast
         seconds["decompose+pack"] = time.perf_counter() - t1
         return PlanArtifact(
             kind="summa", digest=digest, key=key, graph=g2, perm=perm,
@@ -236,7 +242,7 @@ def plan_summa(
 
     tail = (
         r, c, chunk, reorder, cyclic_p, step_masks, rebalance_trials,
-        compact, autotune,
+        compact, autotune, broadcast,
     )
     return _drive("summa", graph, tail, cache, pack)
 
