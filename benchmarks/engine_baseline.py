@@ -21,6 +21,9 @@ isolation:
   right call (one payload generation less memory, no discarded shift);
 * ``autotune`` — ``--method auto`` (deterministic kernel shapes) vs
   fixed ``chunk=512`` search on the skewed ``powerlaw:600,2.2``;
+* ``fused``   — fused-vs-search2-vs-tile count-kernel comparison on the
+  block fixture with the fused tile shape picked by the measured
+  autotune table (:func:`benchmarks.kernels.fused_fixture`);
 * ``collectives`` — the communication-avoiding collectives A/B
   (DESIGN.md §4.5): 2.5D tree vs flat reduction on a 2-pod mesh and
   ppermute-chain vs one-hot SUMMA broadcasts, each cell annotated with
@@ -293,6 +296,9 @@ def run(quick: bool = False, out: str = "BENCH_engine.json") -> dict:
     report["block_sparse"] = block_sparse_fixture()
     report["autotune"] = autotune_fixture()
     report["collectives"] = collectives_fixture()
+    from .kernels import fused_fixture
+
+    report["fused"] = fused_fixture()
     with open(out, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
     print(f"# wrote {out}")

@@ -57,6 +57,12 @@ class TCResult:
     # and the schedule plans through the pipeline): best seed, baseline/
     # best masked critical path, improvement, skipped steps
     rebalance: Optional[dict] = None
+    # which autotune flavor governed kernel-shape selection for this run
+    # ("percentile" | "measured"; None when the method was explicit and
+    # no autotune stage ran — DESIGN.md §4.6)
+    autotune_mode: Optional[str] = None
+    # measured mode only: did the shape-bucket entry come off disk?
+    measured_table_hit: Optional[bool] = None
 
 
 def make_grid_mesh(q: int, row_axis="data", col_axis="model", npods=1, pod_axis="pod"):
@@ -128,6 +134,19 @@ class RunContext:
     # seeds for the lowest masked critical path (0 = off)
     rebalance_trials: int = 0
     cache: Optional[object] = None  # PlanCache; None -> default_cache()
+    # autotune flavor for method 'auto'/'fused' (DESIGN.md §4.6):
+    # "percentile" = the analytic PR 5 stage; "measured" = consult (and
+    # populate) the persisted timing table keyed per shape bucket
+    autotune: str = "percentile"
+    measured_dir: Optional[str] = None  # measured-table dir override
+    # fused-kernel backend ("auto" | "pallas" | "pallas-interpret" |
+    # "lax") and an optional tile override (measured mode feeds the
+    # table's best shape through here)
+    fused_impl: str = "auto"
+    fused_tile: Optional[int] = None
+    # resolved reporting fields (land on TCResult)
+    autotune_mode: Optional[str] = None
+    measured_table_hit: Optional[bool] = None
     artifact: Optional[object] = None  # PlanArtifact set by the runner
     # set via mark_counting(): host-side planning/staging before this
     # point is reported as preprocess time, not count time
@@ -197,12 +216,31 @@ def _resolve_auto_method(plan, fallback: str = "search") -> str:
     return fallback
 
 
+def _consult_measured(ctx: RunContext, plan) -> Optional[dict]:
+    """Measured-autotune table lookup for a maxfrag-split plan: records
+    ``autotune_mode``/``measured_table_hit`` on the context and returns
+    the entry (timing it into the table on a miss — the one-time cost
+    measured mode trades for shape-bucket-warm later runs)."""
+    from ..kernels.tc_fused import measured_entry
+
+    entry, hit = measured_entry(plan, table_dir=ctx.measured_dir)
+    ctx.autotune_mode = "measured"
+    ctx.measured_table_hit = hit
+    return entry
+
+
 def _run_cannon(graph: Graph, mesh, ctx: RunContext):
     plan = ctx.plan  # a caller-supplied plan is already relabeled and
     if plan is None:  # wins over the pipeline (reorder/cyclic_p unused)
         from ..pipeline import plan_cannon
 
         def plan_with(aug: bool, method: str):
+            # the fused panel needs the two-sided maxfrag split; the
+            # measured table is only defined over such plans, so
+            # method='auto' under measured mode plans the same way
+            fused_split = method == "fused" or (
+                method == "auto" and ctx.autotune == "measured"
+            )
             return plan_cannon(
                 graph,
                 ctx.q,
@@ -217,7 +255,7 @@ def _run_cannon(graph: Graph, mesh, ctx: RunContext):
                 bucketize=(method == "search2"),
                 rebalance_trials=ctx.rebalance_trials,
                 compact=ctx.compact is not False,
-                autotune=(method == "auto"),
+                autotune="fused" if fused_split else (method == "auto"),
                 aug_keys=aug,
                 cache=ctx.cache,
             )
@@ -226,8 +264,20 @@ def _run_cannon(graph: Graph, mesh, ctx: RunContext):
             ctx.method in ("global", "search2"), ctx.method
         )
         plan = ctx.artifact.plan
+        if ctx.method in ("auto", "fused") and ctx.autotune_mode is None:
+            ctx.autotune_mode = "percentile"
         if ctx.method == "auto":
-            ctx.method = _resolve_auto_method(plan)
+            if ctx.autotune == "measured":
+                entry = _consult_measured(ctx, plan)
+                from ..kernels.tc_fused import predict_fused_wins
+
+                if predict_fused_wins(entry):
+                    ctx.method = "fused"
+                    ctx.fused_tile = entry["best"]["tile"]
+                else:
+                    ctx.method = _resolve_auto_method(plan)
+            else:
+                ctx.method = _resolve_auto_method(plan)
             if ctx.method == "search2":
                 # auto resolved to a key-consuming kernel: re-plan with
                 # staged aug keys (deterministic, so only aug differs;
@@ -235,6 +285,15 @@ def _run_cannon(graph: Graph, mesh, ctx: RunContext):
                 # common search resolution never pays for unused keys
                 ctx.artifact = plan_with(True, "auto")
                 plan = ctx.artifact.plan
+        elif ctx.method == "fused" and ctx.autotune == "measured":
+            entry = _consult_measured(ctx, plan)
+            ctx.fused_tile = entry["best"]["tile"]
+        if ctx.method == "fused" and (plan.n_long or 0) > 0:
+            # only the long-row fallback consumes staged keys: re-plan
+            # with aug like the search2 resolution above, but skip it
+            # entirely on panel-only plans (n_long == 0)
+            ctx.artifact = plan_with(True, "fused")
+            plan = ctx.artifact.plan
     elif ctx.method == "auto":
         ctx.method = _resolve_auto_method(plan)
 
@@ -312,7 +371,7 @@ def _run_cannon(graph: Graph, mesh, ctx: RunContext):
     fn = ctx.memo(
         ("fn", mesh, ctx.method, ctx.probe_shorter, str(ctx.count_dtype),
          pod_axis, ctx.use_step_mask, ctx.double_buffer, ctx.compact,
-         ctx.reduce_strategy),
+         ctx.reduce_strategy, ctx.fused_impl, ctx.fused_tile),
         lambda: cannon_mod.build_cannon_fn(
             plan,
             mesh,
@@ -324,6 +383,8 @@ def _run_cannon(graph: Graph, mesh, ctx: RunContext):
             double_buffer=ctx.double_buffer,
             compact=ctx.compact,
             reduce_strategy=ctx.reduce_strategy,
+            fused_impl=ctx.fused_impl,
+            fused_tile=ctx.fused_tile,
         ),
     )
     return int(fn(**staged)), plan
@@ -335,23 +396,41 @@ def _run_summa(graph: Graph, mesh, ctx: RunContext):
 
     names = list(mesh.axis_names)
     r, c = mesh.shape[names[-2]], mesh.shape[names[-1]]
+    fused_split = ctx.method == "fused" or (
+        ctx.method == "auto" and ctx.autotune == "measured"
+    )
     ctx.artifact = plan_summa(
         graph, r, c, chunk=ctx.chunk, reorder=ctx.reorder,
         cyclic_p=ctx.cyclic_p, rebalance_trials=ctx.rebalance_trials,
         compact=ctx.compact is not False,
-        autotune=(ctx.method == "auto"),
+        autotune="fused" if fused_split else (ctx.method == "auto"),
         broadcast=ctx.broadcast or "auto",
         cache=ctx.cache,
     )
     splan = ctx.artifact.plan
+    if ctx.method in ("auto", "fused") and ctx.autotune_mode is None:
+        ctx.autotune_mode = "percentile"
     if ctx.method == "auto":
-        ctx.method = _resolve_auto_method(splan)
+        if ctx.autotune == "measured":
+            entry = _consult_measured(ctx, splan)
+            from ..kernels.tc_fused import predict_fused_wins
+
+            if predict_fused_wins(entry):
+                ctx.method = "fused"
+                ctx.fused_tile = entry["best"]["tile"]
+            else:
+                ctx.method = _resolve_auto_method(splan)
+        else:
+            ctx.method = _resolve_auto_method(splan)
+    elif ctx.method == "fused" and ctx.autotune == "measured":
+        entry = _consult_measured(ctx, splan)
+        ctx.fused_tile = entry["best"]["tile"]
     staged = ctx.artifact.staged()
     ctx.mark_counting()
     fn = ctx.memo(
         ("fn", mesh, ctx.method, ctx.probe_shorter, str(ctx.count_dtype),
          ctx.use_step_mask, ctx.compact, ctx.broadcast,
-         ctx.reduce_strategy),
+         ctx.reduce_strategy, ctx.fused_impl, ctx.fused_tile),
         lambda: build_summa_fn(
             splan,
             mesh,
@@ -361,6 +440,8 @@ def _run_summa(graph: Graph, mesh, ctx: RunContext):
             use_step_mask=ctx.use_step_mask,
             compact=ctx.compact,
             broadcast=ctx.broadcast,
+            fused_impl=ctx.fused_impl,
+            fused_tile=ctx.fused_tile,
         ),
     )
     return int(fn(**staged)), splan
@@ -372,23 +453,43 @@ def _run_oned(graph: Graph, mesh, ctx: RunContext):
 
     p = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
     flat_mesh = compat.make_mesh((p,), ("flat",))
+    fused_split = ctx.method == "fused" or (
+        ctx.method == "auto" and ctx.autotune == "measured"
+    )
     ctx.artifact = plan_oned(
         graph, p, chunk=ctx.chunk, reorder=ctx.reorder,
         cyclic_p=ctx.cyclic_p, rebalance_trials=ctx.rebalance_trials,
         compact=ctx.compact is not False,
-        autotune=(ctx.method == "auto"),
+        autotune="fused" if fused_split else (ctx.method == "auto"),
         cache=ctx.cache,
     )
     oplan = ctx.artifact.plan
+    if ctx.method in ("auto", "fused") and ctx.autotune_mode is None:
+        ctx.autotune_mode = "percentile"
     if ctx.method == "auto":
-        # the ring's global-id columns rule out the two-level kernel
-        ctx.method = "search"
+        if ctx.autotune == "measured":
+            entry = _consult_measured(ctx, oplan)
+            from ..kernels.tc_fused import predict_fused_wins
+
+            if predict_fused_wins(entry):
+                ctx.method = "fused"
+                ctx.fused_tile = entry["best"]["tile"]
+            else:
+                # the ring's global-id columns rule out the two-level
+                # kernel; the percentile fallback is plain search
+                ctx.method = "search"
+        else:
+            # the ring's global-id columns rule out the two-level kernel
+            ctx.method = "search"
+    elif ctx.method == "fused" and ctx.autotune == "measured":
+        entry = _consult_measured(ctx, oplan)
+        ctx.fused_tile = entry["best"]["tile"]
     staged = ctx.artifact.staged()
     ctx.mark_counting()
     fn = ctx.memo(
         ("fn", flat_mesh, ctx.method, ctx.probe_shorter,
          str(ctx.count_dtype), ctx.use_step_mask, ctx.compact,
-         ctx.reduce_strategy),
+         ctx.reduce_strategy, ctx.fused_impl, ctx.fused_tile),
         lambda: build_oned_fn(
             oplan,
             flat_mesh,
@@ -398,6 +499,8 @@ def _run_oned(graph: Graph, mesh, ctx: RunContext):
             use_step_mask=ctx.use_step_mask,
             compact=ctx.compact,
             reduce_strategy=ctx.reduce_strategy,
+            fused_impl=ctx.fused_impl,
+            fused_tile=ctx.fused_tile,
         ),
     )
     return int(fn(**staged)), oplan
@@ -446,6 +549,9 @@ def count_triangles(
     broadcast: Optional[str] = None,
     rebalance_trials: int = 0,
     cache=None,
+    autotune: str = "percentile",
+    measured_dir: Optional[str] = None,
+    fused_impl: str = "auto",
 ) -> TCResult:
     """Count triangles with the paper's 2D algorithm.
 
@@ -478,7 +584,30 @@ def count_triangles(
     process-wide default — pass a ``repro.pipeline.PlanCache`` to
     isolate, or one with ``maxsize=0`` to disable): repeated counts of
     an already-seen graph skip relabel/plan/stage/compile entirely.
+
+    ``method="fused"`` runs the Pallas equality-panel kernel with its
+    long-row fallback (DESIGN.md §5.1) — planning switches to the
+    two-sided maxfrag autotune split it requires; ``fused_impl`` picks
+    its backend (``"auto"`` = Pallas on TPU, the lax reference
+    elsewhere; ``"pallas-interpret"`` for CPU parity checks).
+    ``autotune`` selects the shape-selection flavor for
+    ``method in ("auto", "fused")``: ``"percentile"`` (the analytic
+    stage) or ``"measured"`` (consult/populate the persisted timing
+    table of DESIGN.md §4.6, under which ``method="auto"`` resolves to
+    ``fused`` exactly where measurement says it beats the incumbent;
+    ``measured_dir`` overrides the table directory).
     """
+    if autotune not in ("percentile", "measured"):
+        raise ValueError(
+            f"unknown autotune mode {autotune!r}: "
+            "expected percentile | measured"
+        )
+    if autotune == "measured" and plan is not None:
+        raise ValueError(
+            "autotune='measured' needs pipeline planning (the table is "
+            "keyed off the planned shape bucket); drop the "
+            "caller-supplied plan"
+        )
     t0 = time.perf_counter()
     if mesh is None:
         q = q or 1
@@ -522,6 +651,9 @@ def count_triangles(
         cyclic_p=cyclic_p,
         rebalance_trials=rebalance_trials,
         cache=cache,
+        autotune=autotune,
+        measured_dir=measured_dir,
+        fused_impl=fused_impl,
     )
     total, out_plan = spec.runner(graph, mesh, ctx)
     total = compat.check_count_overflow(total, count_dtype)
@@ -539,6 +671,8 @@ def count_triangles(
         schedule=schedule,
         grid=(npods, q, q) if npods > 1 else (q, q),
         rebalance=getattr(ctx.artifact, "rebalance", None),
+        autotune_mode=ctx.autotune_mode,
+        measured_table_hit=ctx.measured_table_hit,
     )
 
 

@@ -118,6 +118,8 @@ def build_cannon_fn(
     compact: Optional[bool] = None,
     elide_shifts: bool = False,
     reduce_strategy: str = "auto",
+    fused_impl: str = "auto",
+    fused_tile: Optional[int] = None,
 ):
     """Build the jitted SPMD counting function for ``plan`` on ``mesh``.
 
@@ -129,7 +131,11 @@ def build_cannon_fn(
     returns per-graph counts (see ``engine.build_engine_fn``).
     ``method``: any registered CSR kernel — ``"search"`` (flat padding),
     ``"search2"`` (two-level length-bucketed — §Perf H1a; requires
-    ``bucketize_plan``), ``"global"`` (gather-free keys).
+    ``bucketize_plan``), ``"global"`` (gather-free keys), ``"fused"``
+    (Pallas equality-panel + long fallback, DESIGN.md §5.1; requires a
+    maxfrag-split plan from ``autotune='fused'``, and ``fused_impl``
+    picks its backend: ``auto``/``pallas``/``pallas-interpret``/
+    ``lax``).
     ``compress_lengths`` (§Perf H1b) ships row *lengths as uint16 pairs*
     instead of the int32 indptr inside the shift blob, cutting shifted
     bytes by ~(nb*2)/(nb*4+nnz*4).
@@ -160,6 +166,8 @@ def build_cannon_fn(
         double_buffer=double_buffer, live_steps=live,
         elide_shifts=elide_shifts,
     )
+    if method == "fused":
+        engine.check_fused_split(plan)
     kernel = make_csr_kernel(
         method,
         dpad=plan.dmax,
@@ -168,6 +176,13 @@ def build_cannon_fn(
         count_dtype=count_dtype,
         n_long=getattr(plan, "n_long", None),
         d_small=getattr(plan, "d_small", None),
+        fused_impl=fused_impl,
+        fused_tile=fused_tile,
+    )
+    # fused consumes staged keys only in its long-row fallback — with
+    # n_long == 0 shipping the aug blob would be pure shift bytes
+    fused_wants_aug = (
+        method == "fused" and (getattr(plan, "n_long", None) or 0) > 0
     )
     store = CSRStore(
         kernel,
@@ -175,7 +190,7 @@ def build_cannon_fn(
         compress_lengths=compress_lengths,
         dmax=plan.dmax,
         with_aug=(
-            method in ("global", "search2")
+            (method in ("global", "search2") or fused_wants_aug)
             and getattr(plan, "b_aug", None) is not None
         ),
     )

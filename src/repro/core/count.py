@@ -13,6 +13,11 @@ Paths (DESIGN.md §2):
   paper's ⟨j,i,k⟩ hash-the-longer-list rule).
 * ``tile``    — bit-packed 128×128 tile kernel (``repro.kernels.tc_tile``),
   wired in by :mod:`repro.core.cannon` when the plan carries tile stores.
+* ``fused``   — the Pallas probe-gather + intersection + accumulate
+  mega-kernel (``repro.kernels.tc_fused``, DESIGN.md §5.1); its long-row
+  fallback reuses :func:`count_pair_search` /
+  :func:`count_pair_search_global` from this module, so the fused path
+  stays count-equivalent to ``search2`` by construction.
 
 Everything here is pure ``jnp`` and shape-static, usable inside
 ``shard_map`` and under ``lax.scan``.

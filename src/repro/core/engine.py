@@ -129,14 +129,17 @@ def register_csr_kernel(name: str, factory: Callable) -> None:
     """Register a CSR count-kernel factory under ``name``.
 
     ``factory(dpad=..., chunk=..., probe_shorter=..., count_dtype=...,
-    sentinel=..., n_long=..., d_small=...) -> kernel``.
+    sentinel=..., n_long=..., d_small=..., **extra) -> kernel``.
+    ``extra`` carries method-specific knobs (the fused kernel's
+    ``fused_tile``/``fused_impl``/``fused_long_fallback``); factories
+    must tolerate and ignore keys they don't own.
     """
     CSR_KERNELS[name] = factory
 
 
 def _search_factory(*, dpad, chunk, probe_shorter, count_dtype, sentinel,
-                    n_long, d_small):
-    del n_long, d_small
+                    n_long, d_small, **extra):
+    del n_long, d_small, extra
     return functools.partial(
         count_mod.count_pair_search,
         dpad=dpad,
@@ -148,7 +151,7 @@ def _search_factory(*, dpad, chunk, probe_shorter, count_dtype, sentinel,
 
 
 def _search2_factory(*, dpad, chunk, probe_shorter, count_dtype, sentinel,
-                     n_long, d_small):
+                     n_long, d_small, **extra):
     # sentinel is plan-derived: builders pass it unconditionally with no
     # user intent behind it, so drop it here and spare engine users the
     # one-time ignored-kwarg warning inside count_pair_search_two_level.
@@ -156,7 +159,7 @@ def _search2_factory(*, dpad, chunk, probe_shorter, count_dtype, sentinel,
     # ever comes from an explicit user request (count_triangles(
     # probe_shorter=False)) — exactly the search-to-search2 porting
     # mistake the warning exists to surface.
-    del sentinel
+    del sentinel, extra
     if n_long is None or d_small is None:
         raise ValueError(
             "method 'search2' needs a bucketized plan (bucketize_plan) "
@@ -178,8 +181,8 @@ def _search2_factory(*, dpad, chunk, probe_shorter, count_dtype, sentinel,
 
 
 def _global_factory(*, dpad, chunk, probe_shorter, count_dtype, sentinel,
-                    n_long, d_small):
-    del probe_shorter, sentinel, n_long, d_small
+                    n_long, d_small, **extra):
+    del probe_shorter, sentinel, n_long, d_small, extra
     return functools.partial(
         count_mod.count_pair_search_global,
         dpad=dpad,
@@ -188,9 +191,69 @@ def _global_factory(*, dpad, chunk, probe_shorter, count_dtype, sentinel,
     )
 
 
+def _fused_factory(*, dpad, chunk, probe_shorter, count_dtype, sentinel,
+                   n_long, d_small, **extra):
+    """Fused panel kernel + long-row fallback (DESIGN.md §5.1).
+
+    Needs the *two-sided* (maxfrag) split: under the probe-only split a
+    B fragment longer than ``d_small`` would be silently truncated by
+    the equality panel — builders enforce the split provenance, this
+    factory only enforces that a split exists at all.
+    """
+    if n_long is None or d_small is None:
+        raise ValueError(
+            "method 'fused' needs a maxfrag-split plan: re-plan with "
+            "autotune='fused' providing n_long/d_small"
+        )
+    from ..kernels.tc_fused import count_pair_fused
+
+    tile = extra.get("fused_tile")
+    impl = extra.get("fused_impl", "auto")
+    long_fallback = extra.get("fused_long_fallback", "global")
+
+    def kernel(a_ptr, a_idx, b_ptr, b_idx, ti, tj, cnt, aug_b=None):
+        return count_pair_fused(
+            a_ptr, a_idx, b_ptr, b_idx, ti, tj, cnt,
+            n_long=n_long,
+            d_small=d_small,
+            dpad_long=dpad,
+            chunk=chunk,
+            tile=tile,
+            count_dtype=count_dtype,
+            impl=impl,
+            long_fallback=long_fallback,
+            probe_shorter=probe_shorter,
+            sentinel=sentinel,
+            aug_b=aug_b,
+        )
+
+    return kernel
+
+
 register_csr_kernel("search", _search_factory)
 register_csr_kernel("search2", _search2_factory)
 register_csr_kernel("global", _global_factory)
+register_csr_kernel("fused", _fused_factory)
+
+
+def check_fused_split(plan) -> None:
+    """Refuse ``method='fused'`` on plans without the two-sided split.
+
+    ``bucketize_plan`` and the default autotune stage classify tasks by
+    the PROBE fragment only — sound for the global-search paths (keys
+    are searched unpadded) but NOT for the fused panel, which gathers
+    both fragments at ``d_small`` and would silently truncate a long B
+    row into a wrong count.  Only plans whose autotune report carries
+    ``split='maxfrag'`` (planner ``autotune='fused'``) are accepted.
+    """
+    report = getattr(plan, "autotune", None) or {}
+    if report.get("split") != "maxfrag":
+        raise ValueError(
+            "method 'fused' requires a plan with the two-sided maxfrag "
+            "split (plan with autotune='fused'); got "
+            f"split={report.get('split')!r} — a probe-only split would "
+            "truncate long B fragments and miscount"
+        )
 
 
 def make_csr_kernel(
@@ -203,6 +266,7 @@ def make_csr_kernel(
     sentinel: Optional[int] = None,
     n_long: Optional[int] = None,
     d_small: Optional[int] = None,
+    **extra,
 ) -> Callable:
     """Build a registered CSR kernel with plan parameters bound."""
     try:
@@ -220,6 +284,7 @@ def make_csr_kernel(
         sentinel=sentinel,
         n_long=n_long,
         d_small=d_small,
+        **extra,
     )
 
 

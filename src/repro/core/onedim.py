@@ -54,6 +54,10 @@ class OneDPlan:
     compact: "object | None" = None
     # deterministic kernel-shape autotune report (pipeline stage)
     autotune: "dict | None" = None
+    # long/short task split set by the autotune stage (first ``n_long``
+    # tasks per device need dmax probes, the rest fit in ``d_small``)
+    n_long: "int | None" = None
+    d_small: "int | None" = None
 
     def device_arrays(self) -> Dict[str, np.ndarray]:
         out = dict(
@@ -104,6 +108,8 @@ def build_oned_fn(
     compact: "bool | None" = None,
     elide_shifts: bool = False,
     reduce_strategy: str = "auto",
+    fused_impl: str = "auto",
+    fused_tile: "int | None" = None,
 ):
     """Ring algorithm over a 1D view of the mesh.
 
@@ -141,6 +147,8 @@ def build_oned_fn(
         axis = flat[0]
 
     axes = RingAxes(axis)
+    if method == "fused":
+        engine.check_fused_split(plan)
     kernel = make_csr_kernel(
         method,
         dpad=plan.dmax,
@@ -148,6 +156,14 @@ def build_oned_fn(
         probe_shorter=probe_shorter,
         count_dtype=count_dtype,
         sentinel=plan.n + 1,
+        n_long=getattr(plan, "n_long", None),
+        d_small=getattr(plan, "d_small", None),
+        # the ring rotates whole adjacency rows: columns are global ids,
+        # so the long bucket must use the padded search, not row-encoded
+        # keys (the equality panel is id-agnostic either way)
+        fused_long_fallback="search",
+        fused_impl=fused_impl,
+        fused_tile=fused_tile,
     )
     store = OneDCSRStore(kernel, p=p)
     schedule = RingSchedule(

@@ -302,6 +302,13 @@ class TCPlan:
     # deterministic kernel-shape autotune report (chunk, d_small/n_long,
     # tail_heavy) when the plan went through the autotune stage
     autotune: Optional[dict] = None
+    # long/short task split from bucketize_plan / the autotune stage:
+    # the first ``n_long`` tasks on every device need probes padded to
+    # dmax, the rest fit in ``d_small``.  None = plan not bucketized.
+    n_long: Optional[int] = None
+    d_small: Optional[int] = None
+    # padded-probe waste accounting from bucketize_plan
+    bucket_stats: Optional[dict] = None
 
     # ------------------------------------------------------------------
     def device_arrays(self) -> Dict[str, np.ndarray]:
@@ -613,15 +620,18 @@ def bucketize_plan(plan: TCPlan, d_small: int = 32) -> TCPlan:
             n_long_max = max(n_long_max, n_long)
             waste_before += cnt * plan.dmax
             waste_after += n_long * plan.dmax + (cnt - n_long) * d_small
-    new = dataclasses.replace(plan, m_ti=m_ti, m_tj=m_tj)
-    new.n_long = n_long_max  # type: ignore[attr-defined]
-    new.d_small = d_small  # type: ignore[attr-defined]
-    new.bucket_stats = dict(  # type: ignore[attr-defined]
-        padded_probe_before=float(waste_before * q),  # x shifts
-        padded_probe_after=float(waste_after * q),
-        reduction=float(waste_before / max(1, waste_after)),
+    return dataclasses.replace(
+        plan,
+        m_ti=m_ti,
+        m_tj=m_tj,
+        n_long=n_long_max,
+        d_small=d_small,
+        bucket_stats=dict(
+            padded_probe_before=float(waste_before * q),  # x shifts
+            padded_probe_after=float(waste_after * q),
+            reduction=float(waste_before / max(1, waste_after)),
+        ),
     )
-    return new
 
 
 def analytic_plan(

@@ -67,6 +67,10 @@ class SummaPlan:
     compact: "object | None" = None
     # deterministic kernel-shape autotune report (pipeline stage)
     autotune: "dict | None" = None
+    # long/short task split set by the autotune stage (first ``n_long``
+    # tasks per device need dmax probes, the rest fit in ``d_small``)
+    n_long: "int | None" = None
+    d_small: "int | None" = None
     # broadcast strategy the plan was staged for ("auto" | "onehot" |
     # "chain") — a planner cache-key component, resolved by the engine
     # via repro.core.plan.resolve_broadcast
@@ -120,6 +124,8 @@ def build_summa_fn(
     compact: "bool | None" = None,
     broadcast: "str | None" = None,
     elide_broadcast: bool = False,
+    fused_impl: str = "auto",
+    fused_tile: "int | None" = None,
 ):
     """Thin engine configuration: SummaSchedule × SummaCSRStore × kernel.
 
@@ -164,6 +170,8 @@ def build_summa_fn(
         # (elision still applies whenever the plan staged a live subset)
         live = tuple(range(plan.c))
     axes = GridAxes(row_axis, col_axis)
+    if method == "fused":
+        engine.check_fused_split(plan)
     kernel = make_csr_kernel(
         method,
         dpad=plan.dmax,
@@ -173,6 +181,8 @@ def build_summa_fn(
         sentinel=plan.nb_c + 1,
         n_long=getattr(plan, "n_long", None),
         d_small=getattr(plan, "d_small", None),
+        fused_impl=fused_impl,
+        fused_tile=fused_tile,
     )
     store = SummaCSRStore(
         kernel, r=plan.r, c=plan.c, broadcast=broadcast,

@@ -1,0 +1,187 @@
+"""Fused device-step dispatcher: short panel + long-row fallback.
+
+``count_pair_fused`` implements the :mod:`repro.core.engine` CSR-kernel
+contract on top of the planner's two-sided maxfrag split: the first
+``n_long`` tasks (either fragment > ``d_small``) run the chunked
+two-level global-search path at ``dpad_long``; everything after runs
+the fused equality panel at ``d_small``.  Unlike ``search2`` the long
+bucket is *skipped entirely* when ``n_long == 0`` — no always-on long
+chunk, no aug-key traffic on panel-only steps.
+
+VMEM budget (DESIGN.md §5.1): the Pallas kernel stages both CSR index
+arrays whole plus two ``(tile, d)`` panels and a ``(tile, d, d)``
+equality intermediate.  ``fused_vmem_bytes`` accounts for all of it;
+when the total exceeds ``VMEM_BUDGET_BYTES`` an ``impl="auto"`` call
+quietly falls back to the lax reference while an explicit
+``impl="pallas"`` fails loudly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...core.count import (
+    build_aug_keys,
+    count_pair_search,
+    count_pair_search_global,
+)
+from .ref import fused_short_ref
+from .tc_fused import fused_short_counts
+
+__all__ = [
+    "VMEM_BUDGET_BYTES",
+    "count_pair_fused",
+    "fused_panel_bytes",
+    "fused_tile_for",
+    "fused_vmem_bytes",
+    "resolve_fused_impl",
+]
+
+# leave ~4 MiB of a v5e core's ~16 MiB VMEM for double-buffering slack
+VMEM_BUDGET_BYTES = 12 * (1 << 20)
+# equality-panel working set cap: tile * d * d int32 elements
+_PANEL_BUDGET_ELEMS = 1 << 20
+_TILE_MIN, _TILE_MAX = 8, 256
+
+
+def fused_tile_for(d: int, budget_elems: int = _PANEL_BUDGET_ELEMS) -> int:
+    """Largest power-of-two tile keeping the (tile, d, d) panel in
+    budget, clamped to [8, 256]."""
+    cap = budget_elems // max(1, d * d)
+    t = _TILE_MIN
+    while t * 2 <= min(cap, _TILE_MAX):
+        t <<= 1
+    return t
+
+
+def fused_panel_bytes(tile: int, d: int) -> int:
+    """int32 bytes of the two gather panels + the equality intermediate."""
+    return 4 * (2 * tile * d + tile * d * d)
+
+
+def fused_vmem_bytes(npad_a: int, npad_b: int, tile: int, d: int) -> int:
+    """Whole-kernel VMEM estimate: staged CSR index arrays + panels."""
+    return 4 * (npad_a + npad_b) + fused_panel_bytes(tile, d)
+
+
+def resolve_fused_impl(impl: str) -> str:
+    """``auto`` → Pallas on TPU, the lax reference elsewhere (the panel
+    math is identical; on CPU the reference IS the fast path)."""
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "lax"
+    if impl not in ("pallas", "pallas-interpret", "lax"):
+        raise ValueError(
+            f"unknown fused impl {impl!r}: expected auto | pallas | "
+            "pallas-interpret | lax"
+        )
+    return impl
+
+
+def count_pair_fused(
+    a_indptr,
+    a_indices,
+    b_indptr,
+    b_indices,
+    ti,
+    tj,
+    tcount,
+    *,
+    n_long: int,
+    d_small: int,
+    dpad_long: int,
+    chunk: int,
+    tile: Optional[int] = None,
+    count_dtype=jnp.int32,
+    impl: str = "auto",
+    long_fallback: str = "global",
+    probe_shorter: bool = True,
+    sentinel: Optional[int] = None,
+    aug_b=None,
+):
+    """Device-step count under the maxfrag split (DESIGN.md §5.1).
+
+    ``long_fallback`` picks the long-bucket path: ``"global"`` (the
+    two-level row-encoded key search; Cannon/SUMMA block-local ids) or
+    ``"search"`` (padded binary search; the 1D ring's global ids, where
+    row-encoded keys don't apply).  The short bucket always runs the
+    equality panel — raw column ids, valid on every schedule.
+    """
+    tmax = ti.shape[0]
+    n_long = int(n_long)
+    n_long_c = 0
+    chunk_l = int(chunk)
+    if n_long > 0:
+        # round the long bucket at fine granularity, NOT at the search
+        # path's autotuned chunk: with e.g. chunk=4096 and n_long=522,
+        # chunk-rounding would shove 4096 tasks through the fallback and
+        # starve the panel of the very tasks it exists for.  The
+        # fallback's internal chunk shrinks to match so its padding
+        # stays aligned.
+        chunk_l = min(chunk_l, max(64, -(-n_long // 64) * 64))
+        n_long_c = min(-(-n_long // chunk_l) * chunk_l, tmax)
+
+    d = int(max(1, min(d_small, a_indices.shape[0], b_indices.shape[0])))
+    tile = int(tile) if tile else fused_tile_for(d)
+
+    resolved = resolve_fused_impl(impl)
+    if resolved == "pallas":
+        need = fused_vmem_bytes(a_indices.shape[0], b_indices.shape[0], tile, d)
+        if need > VMEM_BUDGET_BYTES:
+            if impl == "auto":
+                resolved = "lax"
+            else:
+                raise ValueError(
+                    f"fused panel kernel needs ~{need / 2**20:.1f} MiB VMEM "
+                    f"(npad_a={a_indices.shape[0]}, "
+                    f"npad_b={b_indices.shape[0]}, tile={tile}, d={d}) "
+                    f"> budget {VMEM_BUDGET_BYTES / 2**20:.0f} MiB; use "
+                    "impl='lax' or shrink the plan's d_small/tile"
+                )
+
+    acc = jnp.zeros((), dtype=count_dtype)
+    if n_long_c:
+        long_count = jnp.minimum(tcount, n_long_c)
+        if long_fallback == "global":
+            if aug_b is None:
+                aug_b = build_aug_keys(b_indptr, b_indices)
+            acc = acc + count_pair_search_global(
+                a_indptr, a_indices, b_indptr, b_indices,
+                ti[:n_long_c], tj[:n_long_c], long_count,
+                dpad=dpad_long, chunk=chunk_l, count_dtype=count_dtype,
+                aug_b=aug_b,
+            )
+        elif long_fallback == "search":
+            acc = acc + count_pair_search(
+                a_indptr, a_indices, b_indptr, b_indices,
+                ti[:n_long_c], tj[:n_long_c], long_count,
+                dpad=dpad_long, chunk=chunk_l, probe_shorter=probe_shorter,
+                count_dtype=count_dtype, sentinel=sentinel,
+            )
+        else:
+            raise ValueError(
+                f"unknown long_fallback {long_fallback!r}: "
+                "expected global | search"
+            )
+
+    if n_long_c >= tmax:
+        return acc
+
+    short_count = jnp.maximum(tcount - n_long_c, 0)
+    ti_s = ti[n_long_c:]
+    tj_s = tj[n_long_c:]
+    if resolved == "lax":
+        acc_short = fused_short_ref(
+            a_indptr, a_indices, b_indptr, b_indices,
+            ti_s, tj_s, short_count,
+            d=d, tile=tile, count_dtype=count_dtype,
+        )
+    else:
+        per_tile = fused_short_counts(
+            a_indptr, a_indices, b_indptr, b_indices,
+            ti_s, tj_s, short_count,
+            tile=tile, d=d, interpret=(resolved == "pallas-interpret"),
+        )
+        acc_short = jnp.sum(per_tile, dtype=count_dtype)
+    return acc + acc_short

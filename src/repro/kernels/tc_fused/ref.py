@@ -1,0 +1,94 @@
+"""Pure-lax reference for the fused short-task panel (DESIGN.md §5.1).
+
+Same gather-and-mask semantics as the Pallas kernel in ``tc_fused.py``:
+both fragments of every short task are gathered padded to ``d`` with
+sentinels that can never collide with a real column id (−1 on the A
+side, ``int32.max`` on the B side).  The *intersection* step differs by
+backend on purpose:
+
+* the Pallas kernel counts equal pairs through a ``(tile, d, d)``
+  outer-equality panel — a VPU-shaped broadcast compare whose ``d²``
+  lanes are nearly free on TPU;
+* this reference runs sorted membership instead — CSR rows hold
+  strictly increasing column ids (and the high B-side sentinel keeps
+  the padded row sorted), so a vmapped ``searchsorted`` of the A panel
+  into the B panel costs ``O(d log d)`` per task, which is what makes
+  ``impl="lax"`` the *fast* path on CPU backends rather than a ``d²``
+  scalar grind.
+
+Rows are duplicate-free, so both formulations count exactly
+|row_A ∩ row_B| — raw column ids, valid on Cannon/SUMMA block-local ids
+and on the 1D ring's global ids alike.  Interpreter-mode CI checks the
+Pallas kernel against this independently-formulated reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SENTINEL_A = -1
+# high sentinel keeps the padded B row sorted (CSR rows are strictly
+# increasing), which the reference's searchsorted needs; the Pallas
+# equality panel only needs it distinct from ids and from SENTINEL_A
+SENTINEL_B = jnp.iinfo(jnp.int32).max
+
+__all__ = ["fused_short_ref", "SENTINEL_A", "SENTINEL_B"]
+
+
+def _gather_panel(indptr, indices, rows, d: int, sentinel: int):
+    """(T, d) padded fragments with ``sentinel`` in the padding slots."""
+    start = indptr[rows]
+    length = indptr[rows + 1] - start
+    offs = jnp.arange(d, dtype=indptr.dtype)
+    idx = start[:, None] + offs[None, :]
+    valid = offs[None, :] < length[:, None]
+    vals = indices[jnp.clip(idx, 0, indices.shape[0] - 1)]
+    return jnp.where(valid, vals.astype(jnp.int32), jnp.int32(sentinel))
+
+
+def fused_short_ref(
+    a_indptr,
+    a_indices,
+    b_indptr,
+    b_indices,
+    ti,
+    tj,
+    tcount,
+    *,
+    d: int,
+    tile: int,
+    count_dtype=jnp.int32,
+):
+    """Sum of |row_A(ti) ∩ row_B(tj)| over the first ``tcount`` tasks.
+
+    Every task's fragments must fit in ``d`` (the maxfrag-split
+    contract); longer rows are silently truncated, which is why the
+    fused dispatcher refuses plans without a two-sided split.
+    """
+    tmax = ti.shape[0]
+    ntile = -(-tmax // tile)
+    pad = ntile * tile - tmax
+    if pad:
+        ti = jnp.concatenate([ti, jnp.zeros((pad,), ti.dtype)])
+        tj = jnp.concatenate([tj, jnp.zeros((pad,), tj.dtype)])
+    ti_t = ti.reshape(ntile, tile)
+    tj_t = tj.reshape(ntile, tile)
+    base = jnp.arange(ntile)[:, None] * tile + jnp.arange(tile)[None, :]
+    tvalid = base < tcount
+
+    def one_tile(acc, args):
+        rows_i, rows_j, valid = args
+        pa = _gather_panel(a_indptr, a_indices, rows_i, d, SENTINEL_A)
+        pb = _gather_panel(b_indptr, b_indices, rows_j, d, SENTINEL_B)
+        # sorted membership: pos is the first slot with pb >= query, so
+        # a hit can only sit exactly there; A-side sentinels (-1) search
+        # to slot 0 and never equal a real id or the high B pad
+        pos = jax.vmap(jnp.searchsorted)(pb, pa)
+        hit = jnp.take_along_axis(pb, jnp.minimum(pos, d - 1), axis=1) == pa
+        per_task = jnp.sum(hit, axis=1, dtype=count_dtype)
+        per_task = jnp.where(valid, per_task, 0)
+        return acc + jnp.sum(per_task, dtype=count_dtype), None
+
+    acc0 = jnp.zeros((), dtype=count_dtype)
+    acc, _ = jax.lax.scan(one_tile, acc0, (ti_t, tj_t, tvalid))
+    return acc

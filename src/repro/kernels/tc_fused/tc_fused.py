@@ -1,0 +1,159 @@
+"""Pallas TPU kernel: fused device-step intersection for short tasks.
+
+One grid step processes a *tile* of ``TS`` short tasks end to end —
+probe-gather, sorted-intersection, and count-accumulate fused in VMEM
+(DESIGN.md §5.1) — instead of the lax path's gather → searchsorted →
+segment-sum chain that round-trips every intermediate through HBM:
+
+1. scalar-prefetched task lists + CSR row pointers sit in SMEM; the two
+   CSR index arrays are staged whole into VMEM (the dispatcher's VMEM
+   budget gate keeps them + the panels under ~12 MiB);
+2. a ``fori_loop`` gathers each task's A and B fragments into two
+   ``(TS, d)`` VMEM panels via clamped dynamic-slice windows — reads
+   near the array end shift the window back and a shift-aware mask
+   keeps exactly the fragment's elements, padding with distinct
+   sentinels (−1 A-side / ``int32.max`` B-side, shared with ``ref.py``);
+3. one ``(TS, d, d)`` outer equality reduces to the tile's triangle
+   contribution (CSR fragments are duplicate-free, so equal pairs =
+   intersection size; no searchsorted, no key encoding — also valid on
+   the 1D ring's global column ids).
+
+Only *short* tasks (both fragments ≤ ``d`` under the planner's maxfrag
+split) come here; long rows take the chunked two-level fallback in
+``ops.count_pair_fused``.  ``interpret=True`` runs the same body under
+the Pallas interpreter for CPU CI parity against ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from .ref import SENTINEL_A, SENTINEL_B
+
+__all__ = ["fused_short_counts"]
+
+
+def _fused_panel_kernel(
+    # scalar prefetch (SMEM)
+    ti_ref,
+    tj_ref,
+    cnt_ref,
+    a_ptr_ref,
+    b_ptr_ref,
+    # VMEM inputs
+    a_idx_ref,
+    b_idx_ref,
+    # output + scratch
+    out_ref,
+    pa_ref,
+    pb_ref,
+    *,
+    ts: int,
+    d: int,
+):
+    g = pl.program_id(0)
+    base = g * ts
+    cnt = cnt_ref[0]
+    npad_a = a_idx_ref.shape[0]
+    npad_b = b_idx_ref.shape[0]
+    offs = jax.lax.broadcasted_iota(jnp.int32, (1, d), 1)
+
+    def gather_one(ptr_ref, idx_ref, npad, row, ok, sentinel):
+        """(1, d) masked fragment window; clamped so the dynamic slice
+        never reads past the array end (the shift mask re-aligns)."""
+        start = ptr_ref[row]
+        length = ptr_ref[row + 1] - start
+        start_c = jnp.maximum(jnp.minimum(start, npad - d), 0)
+        shift = start - start_c
+        frag = idx_ref[pl.ds(start_c, d)].reshape(1, d).astype(jnp.int32)
+        keep = ok & (offs >= shift) & (offs < shift + length)
+        return jnp.where(keep, frag, jnp.int32(sentinel))
+
+    def fill(t, carry):
+        ok = (base + t) < cnt
+        i = jnp.where(ok, ti_ref[base + t], 0)
+        j = jnp.where(ok, tj_ref[base + t], 0)
+        pa_ref[pl.ds(t, 1), :] = gather_one(
+            a_ptr_ref, a_idx_ref, npad_a, i, ok, SENTINEL_A
+        )
+        pb_ref[pl.ds(t, 1), :] = gather_one(
+            b_ptr_ref, b_idx_ref, npad_b, j, ok, SENTINEL_B
+        )
+        return carry
+
+    jax.lax.fori_loop(0, ts, fill, 0)
+
+    pa = pa_ref[:, :]
+    pb = pb_ref[:, :]
+    eq = (pa[:, :, None] == pb[:, None, :]).astype(jnp.int32)
+    out_ref[0] = jnp.sum(eq, dtype=jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile", "d", "interpret")
+)
+def fused_short_counts(
+    a_indptr,
+    a_indices,
+    b_indptr,
+    b_indices,
+    ti,
+    tj,
+    tcount,
+    *,
+    tile: int,
+    d: int,
+    interpret: bool = True,
+):
+    """Per-tile fused intersection counts for the short-task list.
+
+    Args:
+      a_indptr/b_indptr: (nb+1,) CSR row pointers (scalar-prefetched).
+      a_indices/b_indices: (npad,) CSR column ids (whole-array VMEM).
+      ti, tj: (tmax,) short-task row ids; first ``tcount`` are real.
+      tile: tasks per grid step (``ops.fused_tile_for`` sizes this).
+      d: panel width — every real fragment must fit (maxfrag contract).
+      interpret: Pallas interpreter mode (CPU CI); ``False`` on TPU.
+
+    Returns: (ntile,) int32 per-tile counts (sum for the step total).
+    """
+    tmax = ti.shape[0]
+    ntile = max(1, -(-tmax // tile))
+    pad = ntile * tile - tmax
+    if pad:
+        ti = jnp.concatenate([ti, jnp.zeros((pad,), ti.dtype)])
+        tj = jnp.concatenate([tj, jnp.zeros((pad,), tj.dtype)])
+    cnt_arr = jnp.asarray(tcount, jnp.int32).reshape(1)
+
+    kern = functools.partial(_fused_panel_kernel, ts=tile, d=d)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(ntile,),
+        in_specs=[
+            pl.BlockSpec(a_indices.shape, lambda g, *pref: (0,)),
+            pl.BlockSpec(b_indices.shape, lambda g, *pref: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda g, *pref: (g,)),
+        scratch_shapes=[
+            pltpu.VMEM((tile, d), jnp.int32),
+            pltpu.VMEM((tile, d), jnp.int32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((ntile,), jnp.int32),
+        interpret=interpret,
+    )(
+        ti.astype(jnp.int32),
+        tj.astype(jnp.int32),
+        cnt_arr,
+        a_indptr.astype(jnp.int32),
+        b_indptr.astype(jnp.int32),
+        a_indices,
+        b_indices,
+    )

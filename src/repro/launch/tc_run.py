@@ -2,8 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.tc_run --graph rmat:18 --grid 2 \
         [--schedule cannon|summa|oned] \
-        [--method auto|search|search2|global|dense|tile] \
-        [--no-compact] [--time-split] \
+        [--method auto|search|search2|global|dense|tile|fused] \
+        [--autotune percentile|measured] [--no-compact] [--time-split] \
         [--ckpt-dir /tmp/tc_ckpt] [--resume] [--rebalance]
 
 Generates (or loads) the graph, plans through the cached pipeline
@@ -33,10 +33,25 @@ def main():
     ap.add_argument("--schedule", default="cannon")
     ap.add_argument("--method", default="search",
                     choices=["auto", "search", "search2", "global",
-                             "dense", "tile"],
+                             "dense", "tile", "fused"],
                     help="count kernel; 'auto' runs the deterministic "
                          "autotune stage and picks search2 on "
-                         "heavy-tailed graphs")
+                         "heavy-tailed graphs; 'fused' is the Pallas "
+                         "probe-gather+intersection mega-kernel "
+                         "(two-sided maxfrag split)")
+    ap.add_argument("--autotune", default="percentile",
+                    choices=["percentile", "measured"],
+                    help="'percentile' derives kernel shapes "
+                         "analytically from the probe-length "
+                         "distribution; 'measured' times fused vs "
+                         "search2 candidates once per shape bucket, "
+                         "persists the verdict to the measured table, "
+                         "and lets --method auto resolve to 'fused' "
+                         "when the table predicts it wins")
+    ap.add_argument("--measured-dir", default=None,
+                    help="measured-autotune table directory (default "
+                         "$REPRO_TC_MEASURED_DIR or "
+                         "~/.cache/repro/tc_measured)")
     ap.add_argument("--chunk", type=int, default=512)
     ap.add_argument("--opt", action="store_true",
                     help="enable §Perf H1a+H1b (bucketed probes + "
@@ -205,6 +220,8 @@ def main():
                 rebalance_trials=args.rebalance,
                 reduce_strategy=args.reduce_strategy,
                 broadcast=args.broadcast,
+                autotune=args.autotune,
+                measured_dir=args.measured_dir,
             )
             times.append(res.count_seconds)
         if res.rebalance is not None:
@@ -220,6 +237,10 @@ def main():
         report.update(_skip_fields(res.plan, args.no_skip_mask))
         report.update(_compact_fields(res.plan))
         report.update(_autotune_fields(res.plan))
+        if res.autotune_mode is not None:
+            report["autotune_mode"] = res.autotune_mode
+        if res.measured_table_hit is not None:
+            report["measured_table_hit"] = res.measured_table_hit
         if args.time_split:
             report.update(_time_split(g, args))
         total = res.triangles
@@ -465,6 +486,21 @@ def _run_batched(args):
             "--time-split is not supported with --graphs (one compiled "
             "call spans every plan, so there is no per-graph comm/count "
             "attribution); use single-graph runs"
+        )
+    if args.autotune == "measured":
+        raise SystemExit(
+            "--autotune measured is not supported with --graphs: the "
+            "measured table is keyed per shape bucket, so a mixed batch "
+            "would hit a cold table (and pay a timing run) per graph "
+            "inside the one compiled call; warm the table with "
+            "single-graph runs first, then batch with --autotune "
+            "percentile"
+        )
+    if args.method == "fused":
+        raise SystemExit(
+            "--method fused is not supported with --graphs (the batched "
+            "engine plans without the two-sided maxfrag split the fused "
+            "kernel needs); use single-graph runs"
         )
     if args.broadcast == "chain" or args.reduce_strategy != "auto":
         raise SystemExit(

@@ -123,9 +123,11 @@ def plan_cannon(
     work onto the fewest steps, re-packs under the winner, and stages
     the globally-live step list the engine's compacted bodies execute.
     ``autotune`` runs the deterministic kernel-shape stage (chunk +
-    two-level split from the probe-length distribution, DESIGN.md §5);
-    ``aug_keys`` stages the row-encoded B intersection keys for the
-    ``global``/``search2`` kernels.  All three are cache-key components.
+    two-level split from the probe-length distribution, DESIGN.md §5) —
+    pass the string ``"fused"`` for the two-sided maxfrag split the
+    fused panel kernel requires (DESIGN.md §5.1); ``aug_keys`` stages
+    the row-encoded B intersection keys for the ``global``/``search2``
+    kernels.  All three are cache-key components.
     """
 
     def pack(digest, key, seconds, cache_):
@@ -168,7 +170,7 @@ def plan_cannon(
         if bucketize:
             plan = bucketize_plan(plan, d_small=d_small)
         if autotune:
-            plan = autotune_tc_plan(plan)
+            plan = autotune_tc_plan(plan, two_sided=(autotune == "fused"))
         seconds["decompose+pack"] = time.perf_counter() - t1
         return PlanArtifact(
             kind="cannon", digest=digest, key=key, graph=g2, perm=perm,
@@ -232,7 +234,7 @@ def plan_summa(
         if compact:
             plan = compact_stage(plan)  # rounds have no free visit order
         if autotune:
-            plan = autotune_summa_plan(plan)
+            plan = autotune_summa_plan(plan, two_sided=(autotune == "fused"))
         plan.broadcast = broadcast
         seconds["decompose+pack"] = time.perf_counter() - t1
         return PlanArtifact(
@@ -290,7 +292,7 @@ def plan_oned(
         if compact:
             plan = compact_stage(plan)  # ring steps have no free order
         if autotune:
-            plan = autotune_oned_plan(plan)
+            plan = autotune_oned_plan(plan, two_sided=(autotune == "fused"))
         seconds["decompose+pack"] = time.perf_counter() - t1
         return PlanArtifact(
             kind="oned", digest=digest, key=key, graph=g2, perm=perm,

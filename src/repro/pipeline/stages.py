@@ -626,21 +626,33 @@ def _tail_split(need: np.ndarray, dmax: int):
     return d_small, bool(dmax > 2 * d_small)
 
 
-def _autotune_tasks(ti3, tj3, cnt, need_rows_of, dmax, tmax):
+def _autotune_tasks(ti3, tj3, cnt, need_rows_of, dmax, tmax,
+                    need_rows_b_of=None):
     """Shared autotune body: per-task probe lengths → percentile
     ``d_small``/``n_long`` split, stable long-first task reorder, and the
-    deterministic chunk.  Returns ``(new_ti, new_tj, chunk, report)``."""
+    deterministic chunk.  Returns ``(new_ti, new_tj, chunk, report)``.
+
+    With ``need_rows_b_of`` the split is *two-sided* ("maxfrag"): a task
+    is short only when BOTH fragments fit in ``d_small`` — required by
+    the fused panel kernel, which gathers the A and B fragments at
+    ``d_small`` and would silently truncate a long B row under the
+    probe-only criterion."""
     ti = ti3.reshape(-1, ti3.shape[-1])
     tj = tj3.reshape(-1, tj3.shape[-1])
     cnt = np.asarray(cnt).reshape(-1)
     new_ti = ti.copy()
     new_tj = tj.copy()
-    per_dev = [
-        need_rows_of(b)[ti[b, : int(cnt[b])]]
-        if int(cnt[b])
-        else np.zeros(0, np.int64)
-        for b in range(ti.shape[0])
-    ]
+
+    def _need(b):
+        c = int(cnt[b])
+        if not c:
+            return np.zeros(0, np.int64)
+        need = need_rows_of(b)[ti[b, :c]]
+        if need_rows_b_of is not None:
+            need = np.maximum(need, need_rows_b_of(b)[tj[b, :c]])
+        return need
+
+    per_dev = [_need(b) for b in range(ti.shape[0])]
     needs_all = (
         np.concatenate(per_dev) if per_dev else np.zeros(0, np.int64)
     )
@@ -664,6 +676,7 @@ def _autotune_tasks(ti3, tj3, cnt, need_rows_of, dmax, tmax):
         n_long=int(n_long_max),
         dmax=int(dmax),
         tail_heavy=tail_heavy,
+        split="maxfrag" if need_rows_b_of is not None else "probe",
         probe_p90=float(np.percentile(needs_all, _TAIL_PERCENTILE))
         if needs_all.size
         else 0.0,
@@ -671,72 +684,101 @@ def _autotune_tasks(ti3, tj3, cnt, need_rows_of, dmax, tmax):
     return new_ti.reshape(ti3.shape), new_tj.reshape(tj3.shape), chunk, report
 
 
-def autotune_tc_plan(plan: TCPlan) -> TCPlan:
+def autotune_tc_plan(plan: TCPlan, two_sided: bool = False) -> TCPlan:
     """Deterministic kernel-shape autotune for Cannon plans (DESIGN.md
     §5): per-task probe lengths (max over every pairing a task can meet)
     come straight from the packed ``a_indptr`` — grid row ``x`` holds
     every panel of block-row ``x`` across its columns, so the row-wise
     max over ``y`` is the max over ``z`` regardless of the σ visit
     order.  No timing, no randomness: same plan in, same shapes out
-    (the property the plan cache key relies on)."""
+    (the property the plan cache key relies on).
+
+    ``two_sided=True`` switches to the fused kernel's maxfrag split:
+    B-side lengths come from ``b_indptr`` the same way (grid *column*
+    ``y`` holds every panel of block-column ``y`` across its rows)."""
     import dataclasses as _dc
 
     q = plan.q
     lens = np.diff(plan.a_indptr.astype(np.int64), axis=2)  # (q, q, nb)
     need_rows = lens.max(axis=1)  # (q, nb): max over all panels of row x
+    need_b_of = None
+    if two_sided:
+        lens_b = np.diff(plan.b_indptr.astype(np.int64), axis=2)
+        need_rows_b = lens_b.max(axis=0)  # (q, nb): max over column y
+        need_b_of = lambda b: need_rows_b[b % q]  # noqa: E731
 
     new_ti, new_tj, chunk, report = _autotune_tasks(
         plan.m_ti, plan.m_tj, plan.m_cnt, lambda b: need_rows[b // q],
-        plan.dmax, plan.tmax,
+        plan.dmax, plan.tmax, need_rows_b_of=need_b_of,
     )
-    new = _dc.replace(plan, m_ti=new_ti, m_tj=new_tj, chunk=chunk)
-    new.n_long = report["n_long"]  # type: ignore[attr-defined]
-    new.d_small = report["d_small"]  # type: ignore[attr-defined]
-    new.autotune = report
-    return new
+    return _dc.replace(
+        plan, m_ti=new_ti, m_tj=new_tj, chunk=chunk,
+        n_long=report["n_long"], d_small=report["d_small"],
+        autotune=report,
+    )
 
 
-def autotune_summa_plan(plan: SummaPlan) -> SummaPlan:
+def autotune_summa_plan(plan: SummaPlan, two_sided: bool = False) -> SummaPlan:
     """SUMMA autotune: the probe side is the A panel row, so per-task
     lengths are the max over broadcast rounds of the ``a_indptr`` row
-    lengths (panel ``(x, z)`` sits at grid position ``(x, z)``)."""
+    lengths (panel ``(x, z)`` sits at grid position ``(x, z)``).  With
+    ``two_sided=True`` the maxfrag split also folds in the B panel rows:
+    device column ``y`` sees exactly the panels stored at
+    ``b_indptr[:, y, :]``, so the max over (grid row, panel slot) is the
+    max over broadcast rounds."""
     import dataclasses as _dc
 
     c = plan.c
     lens = np.diff(plan.a_indptr.astype(np.int64), axis=2)  # (r, c, nb_r)
     need_rows = lens.max(axis=1)  # (r, nb_r)
+    need_b_of = None
+    if two_sided:
+        lens_b = np.diff(plan.b_indptr.astype(np.int64), axis=3)
+        need_rows_b = lens_b.max(axis=(0, 2))  # (c, nb_c)
+        need_b_of = lambda b: need_rows_b[b % c]  # noqa: E731
 
     new_ti, new_tj, chunk, report = _autotune_tasks(
         plan.m_ti, plan.m_tj, plan.m_cnt, lambda b: need_rows[b // c],
-        plan.dmax, plan.tmax,
+        plan.dmax, plan.tmax, need_rows_b_of=need_b_of,
     )
-    new = _dc.replace(plan, m_ti=new_ti, m_tj=new_tj, chunk=chunk)
-    new.n_long = report["n_long"]  # type: ignore[attr-defined]
-    new.d_small = report["d_small"]  # type: ignore[attr-defined]
-    new.autotune = report
-    return new
+    return _dc.replace(
+        plan, m_ti=new_ti, m_tj=new_tj, chunk=chunk,
+        n_long=report["n_long"], d_small=report["d_small"],
+        autotune=report,
+    )
 
 
-def autotune_oned_plan(plan: OneDPlan) -> OneDPlan:
-    """1D-ring autotune: chunk only.  The ring's B columns are *global*
-    ids (they rotate whole adjacency rows), so the block-local global-key
-    two-level kernel does not apply — ``tail_heavy`` is reported for
-    visibility but ``method='auto'`` resolves to ``search`` on this
-    schedule, and no two-level split lands on the plan."""
+def autotune_oned_plan(plan: OneDPlan, two_sided: bool = False) -> OneDPlan:
+    """1D-ring autotune: chunk only by default.  The ring's B columns are
+    *global* ids (they rotate whole adjacency rows), so the block-local
+    global-key two-level kernel does not apply — ``tail_heavy`` is
+    reported for visibility but ``method='auto'`` resolves to ``search``
+    on this schedule, and no two-level split lands on the plan.
+
+    ``two_sided=True`` (fused): the panel path compares raw column ids,
+    which IS valid on global ids, so the maxfrag split and long-first
+    reorder land on the plan — task (d, o) intersects device ``d``'s row
+    ``t_i`` with partner ``o``'s row ``t_j``."""
     import dataclasses as _dc
 
     lens = np.diff(plan.indptr.astype(np.int64), axis=1)  # (p, nb)
     p = plan.p
 
-    # tasks (d, o) probe device d's own rows; task order stays put (the
-    # two-level boundary is unused here), only the chunk is tuned
-    _, _, chunk, report = _autotune_tasks(
+    new_ti, new_tj, chunk, report = _autotune_tasks(
         plan.t_i, plan.t_j, plan.t_cnt, lambda b: lens[b // p],
         plan.dmax, plan.gmax,
+        need_rows_b_of=(lambda b: lens[b % p]) if two_sided else None,
     )
-    new = _dc.replace(plan, chunk=chunk)
-    new.autotune = dict(report, n_long=None, d_small=None)
-    return new
+    if two_sided:
+        return _dc.replace(
+            plan, t_i=new_ti, t_j=new_tj, chunk=chunk,
+            n_long=report["n_long"], d_small=report["d_small"],
+            autotune=report,
+        )
+    # task order stays put (the two-level boundary is unused here)
+    return _dc.replace(
+        plan, chunk=chunk, autotune=dict(report, n_long=None, d_small=None)
+    )
 
 
 def timed(name: str, seconds: dict, fn, *args, **kwargs):
