@@ -12,6 +12,7 @@ from .api import (  # noqa: F401
     TCResult,
     available_schedules,
     count_triangles,
+    count_triangles_delta,
     count_triangles_many,
     get_schedule,
     make_grid_mesh,

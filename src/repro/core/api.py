@@ -36,6 +36,7 @@ from .plan import TCPlan
 __all__ = [
     "TCResult",
     "count_triangles",
+    "count_triangles_delta",
     "count_triangles_many",
     "make_grid_mesh",
     "register_schedule",
@@ -63,6 +64,13 @@ class TCResult:
     autotune_mode: Optional[str] = None
     # measured mode only: did the shape-bucket entry come off disk?
     measured_table_hit: Optional[bool] = None
+    # the PlanArtifact this count ran from (None for caller-supplied raw
+    # plans or schedules registered without plans_itself) — streaming
+    # callers thread it into the next count_triangles_delta call
+    artifact: Optional[object] = None
+    # apply_delta report (level, dirty blocks/cells, replanned stages,
+    # rebased) when the count came through count_triangles_delta
+    delta: Optional[dict] = None
 
 
 def make_grid_mesh(q: int, row_axis="data", col_axis="model", npods=1, pod_axis="pod"):
@@ -396,36 +404,45 @@ def _run_summa(graph: Graph, mesh, ctx: RunContext):
 
     names = list(mesh.axis_names)
     r, c = mesh.shape[names[-2]], mesh.shape[names[-1]]
-    fused_split = ctx.method == "fused" or (
-        ctx.method == "auto" and ctx.autotune == "measured"
-    )
-    ctx.artifact = plan_summa(
-        graph, r, c, chunk=ctx.chunk, reorder=ctx.reorder,
-        cyclic_p=ctx.cyclic_p, rebalance_trials=ctx.rebalance_trials,
-        compact=ctx.compact is not False,
-        autotune="fused" if fused_split else (ctx.method == "auto"),
-        broadcast=ctx.broadcast or "auto",
-        cache=ctx.cache,
-    )
-    splan = ctx.artifact.plan
-    if ctx.method in ("auto", "fused") and ctx.autotune_mode is None:
-        ctx.autotune_mode = "percentile"
-    if ctx.method == "auto":
-        if ctx.autotune == "measured":
-            entry = _consult_measured(ctx, splan)
-            from ..kernels.tc_fused import predict_fused_wins
+    splan = ctx.plan  # a caller-supplied plan (or delta-derived
+    if splan is None:  # artifact) wins over the pipeline, like Cannon's
+        fused_split = ctx.method == "fused" or (
+            ctx.method == "auto" and ctx.autotune == "measured"
+        )
+        ctx.artifact = plan_summa(
+            graph, r, c, chunk=ctx.chunk, reorder=ctx.reorder,
+            cyclic_p=ctx.cyclic_p, rebalance_trials=ctx.rebalance_trials,
+            compact=ctx.compact is not False,
+            autotune="fused" if fused_split else (ctx.method == "auto"),
+            broadcast=ctx.broadcast or "auto",
+            cache=ctx.cache,
+        )
+        splan = ctx.artifact.plan
+        if ctx.method in ("auto", "fused") and ctx.autotune_mode is None:
+            ctx.autotune_mode = "percentile"
+        if ctx.method == "auto":
+            if ctx.autotune == "measured":
+                entry = _consult_measured(ctx, splan)
+                from ..kernels.tc_fused import predict_fused_wins
 
-            if predict_fused_wins(entry):
-                ctx.method = "fused"
-                ctx.fused_tile = entry["best"]["tile"]
+                if predict_fused_wins(entry):
+                    ctx.method = "fused"
+                    ctx.fused_tile = entry["best"]["tile"]
+                else:
+                    ctx.method = _resolve_auto_method(splan)
             else:
                 ctx.method = _resolve_auto_method(splan)
-        else:
-            ctx.method = _resolve_auto_method(splan)
-    elif ctx.method == "fused" and ctx.autotune == "measured":
-        entry = _consult_measured(ctx, splan)
-        ctx.fused_tile = entry["best"]["tile"]
-    staged = ctx.artifact.staged()
+        elif ctx.method == "fused" and ctx.autotune == "measured":
+            entry = _consult_measured(ctx, splan)
+            ctx.fused_tile = entry["best"]["tile"]
+    elif ctx.method == "auto":
+        ctx.method = _resolve_auto_method(splan)
+    if ctx.artifact is not None:
+        staged = ctx.artifact.staged()
+    else:
+        staged = {
+            k: jnp.asarray(v) for k, v in splan.device_arrays().items()
+        }
     ctx.mark_counting()
     fn = ctx.memo(
         ("fn", mesh, ctx.method, ctx.probe_shorter, str(ctx.count_dtype),
@@ -453,38 +470,49 @@ def _run_oned(graph: Graph, mesh, ctx: RunContext):
 
     p = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
     flat_mesh = compat.make_mesh((p,), ("flat",))
-    fused_split = ctx.method == "fused" or (
-        ctx.method == "auto" and ctx.autotune == "measured"
-    )
-    ctx.artifact = plan_oned(
-        graph, p, chunk=ctx.chunk, reorder=ctx.reorder,
-        cyclic_p=ctx.cyclic_p, rebalance_trials=ctx.rebalance_trials,
-        compact=ctx.compact is not False,
-        autotune="fused" if fused_split else (ctx.method == "auto"),
-        cache=ctx.cache,
-    )
-    oplan = ctx.artifact.plan
-    if ctx.method in ("auto", "fused") and ctx.autotune_mode is None:
-        ctx.autotune_mode = "percentile"
-    if ctx.method == "auto":
-        if ctx.autotune == "measured":
-            entry = _consult_measured(ctx, oplan)
-            from ..kernels.tc_fused import predict_fused_wins
+    oplan = ctx.plan  # caller-supplied plan / delta artifact wins
+    if oplan is None:
+        fused_split = ctx.method == "fused" or (
+            ctx.method == "auto" and ctx.autotune == "measured"
+        )
+        ctx.artifact = plan_oned(
+            graph, p, chunk=ctx.chunk, reorder=ctx.reorder,
+            cyclic_p=ctx.cyclic_p, rebalance_trials=ctx.rebalance_trials,
+            compact=ctx.compact is not False,
+            autotune="fused" if fused_split else (ctx.method == "auto"),
+            cache=ctx.cache,
+        )
+        oplan = ctx.artifact.plan
+        if ctx.method in ("auto", "fused") and ctx.autotune_mode is None:
+            ctx.autotune_mode = "percentile"
+        if ctx.method == "auto":
+            if ctx.autotune == "measured":
+                entry = _consult_measured(ctx, oplan)
+                from ..kernels.tc_fused import predict_fused_wins
 
-            if predict_fused_wins(entry):
-                ctx.method = "fused"
-                ctx.fused_tile = entry["best"]["tile"]
+                if predict_fused_wins(entry):
+                    ctx.method = "fused"
+                    ctx.fused_tile = entry["best"]["tile"]
+                else:
+                    # the ring's global-id columns rule out the two-level
+                    # kernel; the percentile fallback is plain search
+                    ctx.method = "search"
             else:
                 # the ring's global-id columns rule out the two-level
-                # kernel; the percentile fallback is plain search
+                # kernel
                 ctx.method = "search"
-        else:
-            # the ring's global-id columns rule out the two-level kernel
-            ctx.method = "search"
-    elif ctx.method == "fused" and ctx.autotune == "measured":
-        entry = _consult_measured(ctx, oplan)
-        ctx.fused_tile = entry["best"]["tile"]
-    staged = ctx.artifact.staged()
+        elif ctx.method == "fused" and ctx.autotune == "measured":
+            entry = _consult_measured(ctx, oplan)
+            ctx.fused_tile = entry["best"]["tile"]
+    elif ctx.method == "auto":
+        # the ring's global-id columns rule out the two-level kernel
+        ctx.method = "search"
+    if ctx.artifact is not None:
+        staged = ctx.artifact.staged()
+    else:
+        staged = {
+            k: jnp.asarray(v) for k, v in oplan.device_arrays().items()
+        }
     ctx.mark_counting()
     fn = ctx.memo(
         ("fn", flat_mesh, ctx.method, ctx.probe_shorter,
@@ -608,6 +636,12 @@ def count_triangles(
             "keyed off the planned shape bucket); drop the "
             "caller-supplied plan"
         )
+    artifact = None
+    if plan is not None and hasattr(plan, "staged") and hasattr(plan, "plan"):
+        # a PlanArtifact (e.g. from apply_delta) supplied as the plan:
+        # run its plan and reuse its staged device buffers / fn memos
+        artifact = plan
+        plan = artifact.plan
     t0 = time.perf_counter()
     if mesh is None:
         q = q or 1
@@ -655,6 +689,8 @@ def count_triangles(
         measured_dir=measured_dir,
         fused_impl=fused_impl,
     )
+    if artifact is not None:
+        ctx.artifact = artifact
     total, out_plan = spec.runner(graph, mesh, ctx)
     total = compat.check_count_overflow(total, count_dtype)
     t2 = time.perf_counter()
@@ -673,7 +709,61 @@ def count_triangles(
         rebalance=getattr(ctx.artifact, "rebalance", None),
         autotune_mode=ctx.autotune_mode,
         measured_table_hit=ctx.measured_table_hit,
+        artifact=ctx.artifact,
     )
+
+
+def count_triangles_delta(
+    graph: Graph,
+    delta,
+    mesh=None,
+    *,
+    artifact=None,
+    cache=None,
+    rebase_every: int = 8,
+    **kwargs,
+) -> TCResult:
+    """Count triangles of ``graph`` mutated by ``delta``, incrementally.
+
+    ``delta`` is a :class:`repro.pipeline.EdgeDelta` in **original**
+    vertex ids.  The base plan is taken from ``artifact`` (the
+    ``TCResult.artifact`` of a previous count — thread it through to
+    stream deltas) or planned fresh from ``graph``;
+    :func:`repro.pipeline.apply_delta` then splices / re-packs only the
+    dirty blocks (DESIGN.md §4.7) and the count runs from the derived
+    artifact, reusing unchanged device buffers and compiled engines.
+    The result's ``delta`` field carries the apply report and its
+    ``artifact`` the derived artifact for the next round; ``triangles``
+    is exact — identical to a cold count of the mutated graph.
+    """
+    from ..pipeline.delta import apply_delta
+
+    if kwargs.get("autotune") == "measured":
+        raise ValueError(
+            "autotune='measured' re-times shapes per plan; the delta "
+            "path reuses engines and is keyed analytically — use the "
+            "default percentile mode"
+        )
+    if artifact is None:
+        base = count_triangles(graph, mesh, cache=cache, **kwargs)
+        artifact = base.artifact
+        if artifact is None:
+            raise ValueError(
+                "count_triangles_delta needs a pipeline-planned base "
+                "(schedule registered with plans_itself=True and no "
+                "caller-supplied raw plan)"
+            )
+    art2 = apply_delta(
+        artifact, delta, cache=cache, rebase_every=rebase_every
+    )
+    for drop in ("reorder", "cyclic_p", "rebalance_trials"):
+        kwargs.pop(drop, None)
+    res = count_triangles(
+        art2.graph, mesh, plan=art2, reorder=False, rebalance_trials=0,
+        cache=cache, **kwargs,
+    )
+    res.delta = art2.delta_report
+    return res
 
 
 def count_triangles_many(graphs, mesh=None, **kwargs):

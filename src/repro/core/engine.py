@@ -65,6 +65,7 @@ __all__ = [
     "masked_count",
     "build_engine_fn",
     "build_engine_stepper",
+    "restage_device_arrays",
     "shift_perm",
     "tree_ppermute",
     "pod_tree_allreduce",
@@ -114,6 +115,46 @@ def tree_ppermute(tree, axis: str, perm):
 
 def _squeeze(a, lead: int):
     return a.reshape(a.shape[lead:])
+
+
+# ======================================================================
+# delta re-stage path (DESIGN.md §4.7)
+# ======================================================================
+def restage_device_arrays(
+    prev_host: Dict[str, "jnp.ndarray"],
+    prev_staged: Dict[str, "jnp.ndarray"],
+    new_host: Dict[str, "jnp.ndarray"],
+) -> Tuple[Dict[str, "jnp.ndarray"], int]:
+    """Stage ``new_host`` arrays, reusing the parent's device buffers for
+    every array an edge delta left unchanged.
+
+    The splice in ``apply_delta`` copies only arrays it touches, so a
+    clean array is often the *same object* as the parent's (identity
+    fast path); otherwise a value comparison against the parent's host
+    array decides — e.g. ``step_keep`` frequently survives a delta
+    byte-identical even though it was recomputed.  Returns the staged
+    dict and how many device buffers were reused (skipped uploads).
+    """
+    import numpy as np
+
+    out: Dict[str, jnp.ndarray] = {}
+    reused = 0
+    for name, host in new_host.items():
+        prev = prev_host.get(name)
+        staged = prev_staged.get(name)
+        same = (
+            staged is not None
+            and prev is not None
+            and prev.shape == host.shape
+            and prev.dtype == host.dtype
+            and (prev is host or np.array_equal(prev, host))
+        )
+        if same:
+            out[name] = staged
+            reused += 1
+        else:
+            out[name] = jnp.asarray(host)
+    return out, reused
 
 
 # ======================================================================

@@ -24,6 +24,8 @@ __all__ = [
     "powerlaw",
     "star",
     "residue_cliques",
+    "random_edge_flips",
+    "flip_edges",
     "named_graph",
     "graph_from_spec",
     "GRAPH500_PARAMS",
@@ -147,6 +149,67 @@ def residue_cliques(k: int, size: int, name=None) -> Graph:
     )
 
 
+def random_edge_flips(graph: Graph, k: int, seed: int):
+    """Sample ``k`` deterministic random edge flips of ``graph``.
+
+    A sampled vertex pair that is already an edge becomes a removal,
+    an absent pair an addition — the mutation model behind the
+    ``delta:`` graph spec and ``EdgeDelta.random_flips``.  Pairs are
+    distinct (no pair is flipped twice) and self loops are never drawn.
+    Returns ``(add, remove)`` as ``(ka, 2)`` / ``(kr, 2)`` int64 arrays
+    with ``ka + kr == k``.
+    """
+    n = graph.n
+    assert n >= 2, "random_edge_flips needs at least two vertices"
+    k = int(k)
+    assert 0 <= k <= (n * (n - 1)) // 2, "more flips than vertex pairs"
+    rng = np.random.default_rng(seed)
+    chosen: list = []
+    seen = set()
+    while len(chosen) < k:
+        want = k - len(chosen)
+        u = rng.integers(0, n, size=2 * want + 8)
+        v = rng.integers(0, n, size=2 * want + 8)
+        ok = u != v
+        lo = np.minimum(u[ok], v[ok])
+        hi = np.maximum(u[ok], v[ok])
+        for key in (lo * np.int64(n) + hi).tolist():
+            if key not in seen:
+                seen.add(key)
+                chosen.append(key)
+                if len(chosen) == k:
+                    break
+    keys = np.asarray(chosen, dtype=np.int64)
+    base = graph.edges[:, 0] * np.int64(n) + graph.edges[:, 1]
+    present = np.isin(keys, base)
+    rem, add = keys[present], keys[~present]
+    return (
+        np.stack([add // n, add % n], axis=1),
+        np.stack([rem // n, rem % n], axis=1),
+    )
+
+
+def flip_edges(graph: Graph, k: int, seed: int) -> Graph:
+    """``graph`` with ``k`` deterministic random edge flips applied."""
+    add, rem = random_edge_flips(graph, k, seed)
+    n = np.int64(graph.n)
+    base = graph.edges[:, 0] * n + graph.edges[:, 1]
+    if base.size and not np.all(base[1:] > base[:-1]):
+        base = np.sort(base)
+    rem_k = rem[:, 0] * n + rem[:, 1]
+    kept = base[~np.isin(base, rem_k)] if rem_k.size else base
+    add_k = np.sort(add[:, 0] * n + add[:, 1])
+    merged = (
+        np.insert(kept, np.searchsorted(kept, add_k), add_k)
+        if add_k.size
+        else kept
+    )
+    edges = np.stack([merged // n, merged % n], axis=1)
+    return Graph(
+        n=graph.n, edges=edges, name=f"{graph.name}+flip{k}s{seed}"
+    )
+
+
 def named_graph(which: str) -> Graph:
     """Small graphs with known triangle counts for unit tests."""
     if which == "triangle":
@@ -182,9 +245,18 @@ def graph_from_spec(spec: str) -> Graph:
     ``powerlaw:<n>,<alpha>[,<seed>]`` (skewed-degree rebalance fixture) |
     ``star:<n>`` |
     ``cliques:<k>,<size>`` (block-diagonal skip-mask fixture) |
+    ``delta:<k>,<seed>,<base-spec>`` (base spec + ``k`` deterministic
+    random edge flips — present pairs removed, absent pairs added; the
+    streaming-fixture mutation model) |
     ``named:<id>`` | ``<id>`` (a bare named-graph id such as ``karate``).
     """
     kind, _, rest = spec.partition(":")
+    if kind == "delta":
+        parts = rest.split(",", 2)  # base spec may itself contain commas
+        if len(parts) != 3:
+            raise ValueError(f"malformed delta spec {spec!r}")
+        return flip_edges(graph_from_spec(parts[2]), int(parts[0]),
+                          int(parts[1]))
     if kind == "star":
         return star(int(rest))
     if kind == "cliques":
@@ -224,6 +296,17 @@ _NAMED_IDS = ("triangle", "k4", "k10", "path", "star", "karate", "bull")
 def _spec_is_wellformed(spec: str) -> bool:
     """Cheap format check of one spec — no graph is built."""
     kind, _, rest = spec.partition(":")
+    if kind == "delta":
+        parts = rest.split(",", 2)
+        try:
+            return (
+                len(parts) == 3
+                and int(parts[0]) >= 0
+                and int(parts[1]) >= 0
+                and _spec_is_wellformed(parts[2])
+            )
+        except ValueError:
+            return False
     parts = rest.split(",")
     try:
         if kind == "rmat":

@@ -243,6 +243,11 @@ class PlanStats:
     intersection_tasks_total: int  # paper Table 4 metric
     padding_fraction_indices: float
     padding_fraction_tasks: float
+    # per-(device, shift) intersection-task counts (the summands of
+    # ``intersection_tasks_total``).  Staged so the delta path
+    # (DESIGN.md §4.7) can update the total exactly from dirty cells
+    # alone; None on plans packed by the loop reference.
+    itasks_per_cell: Optional[np.ndarray] = None  # (q, q, q) int64
 
 
 @dataclasses.dataclass

@@ -12,6 +12,14 @@ round 0 is the cold plan+compile, later rounds are pure dispatch):
 
     PYTHONPATH=src python -m repro.launch.serve \
         "--tc-graphs" "rmat:10;rmat:10,8,1;karate" --grid 1 --rounds 5
+
+Triangle-count *streaming* mode — one live graph mutated by a random
+edge delta per round, served through the incremental re-plan path
+(DESIGN.md §4.7; round 0 is the cold plan, later rounds splice dirty
+blocks and reuse the compiled engine):
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --tc-stream er:500,8,3 --grid 1 --rounds 5 --delta-edges 4
 """
 import argparse
 import time
@@ -48,7 +56,7 @@ def _serve_tc(args):
                 raise SystemExit(
                     f"count mismatch: {res.triangles} != {expected}"
                 )
-    stats = default_cache().stats
+    stats = default_cache().stats()
     print(
         f"plan cache: {stats['hits']} hits / {stats['misses']} misses"
         + (
@@ -57,6 +65,60 @@ def _serve_tc(args):
             else ""
         )
     )
+
+
+def _serve_tc_stream(args):
+    """Streaming TC serving: a live graph takes one edge delta per round.
+
+    Round 0 plans cold; every later round draws a deterministic random
+    flip delta, applies it through :func:`repro.pipeline.apply_delta`
+    (splice / repack / rebase ladder) and re-counts from the derived
+    artifact — the serving analogue of ``tc_run --stream``."""
+    from ..core import count_triangles, count_triangles_delta
+    from ..pipeline import EdgeDelta, default_cache
+
+    g = _spec_graph(args.tc_stream)
+    kwargs = dict(q=args.grid, schedule=args.schedule, method=args.method)
+    t0 = time.perf_counter()
+    res = count_triangles(g, **kwargs)
+    print(
+        f"round 0: triangles={res.triangles} in "
+        f"{(time.perf_counter() - t0) * 1e3:.1f}ms (cold plan)"
+    )
+    _maybe_verify(args, g, res.triangles)
+    art = res.artifact
+    for rnd in range(1, args.rounds):
+        delta = EdgeDelta.random_flips(g, args.delta_edges, seed=rnd)
+        t0 = time.perf_counter()
+        res = count_triangles_delta(g, delta, artifact=art, **kwargs)
+        dt = time.perf_counter() - t0
+        art, rep = res.artifact, res.delta
+        g = delta.apply_to(g)
+        print(
+            f"round {rnd}: triangles={res.triangles} in {dt*1e3:.1f}ms "
+            f"({rep['level']}, {rep['dirty_blocks']} dirty blocks, "
+            f"+{rep['edges_added']}/-{rep['edges_removed']} edges"
+            f"{', rebased' if rep['rebased'] else ''})"
+        )
+        _maybe_verify(args, g, res.triangles)
+    stats = default_cache().stats()
+    print(f"plan cache: {stats['hits']} hits / {stats['misses']} misses")
+
+
+def _spec_graph(spec):
+    from ..core.generators import graph_from_spec
+
+    return graph_from_spec(spec)
+
+
+def _maybe_verify(args, g, got):
+    if not args.verify:
+        return
+    from ..core import triangle_count_oracle
+
+    exp = triangle_count_oracle(g)
+    if got != exp:
+        raise SystemExit(f"count mismatch: {got} != {exp}")
 
 
 def main():
@@ -68,6 +130,12 @@ def main():
     ap.add_argument("--tc-graphs", default=None,
                     help="';'-separated graph specs: serve repeated "
                          "batched triangle counts instead of an LM")
+    ap.add_argument("--tc-stream", default=None,
+                    help="single graph spec: serve streaming counts — "
+                         "one random edge delta per round through the "
+                         "incremental re-plan path")
+    ap.add_argument("--delta-edges", type=int, default=4,
+                    help="streaming: edge flips per round")
     ap.add_argument("--grid", type=int, default=1)
     ap.add_argument("--schedule", default="cannon")
     ap.add_argument("--method", default="search")
@@ -79,8 +147,12 @@ def main():
 
     if args.tc_graphs:
         return _serve_tc(args)
+    if args.tc_stream:
+        return _serve_tc_stream(args)
     if not args.arch:
-        raise SystemExit("pass --arch (LM serving) or --tc-graphs")
+        raise SystemExit(
+            "pass --arch (LM serving), --tc-graphs, or --tc-stream"
+        )
 
     import jax
     import jax.numpy as jnp

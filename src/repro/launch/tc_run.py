@@ -100,6 +100,17 @@ def main():
                     help="skip-aware rebalance trials: search this many "
                          "relabeling seeds for the lowest masked critical "
                          "path (straggler mitigation, any schedule)")
+    ap.add_argument("--stream", default=None, metavar="DELTA_FILE",
+                    help="streaming mode: count --graph once, then apply "
+                         "each JSONL line ({\"add\": [[u,v],...], "
+                         "\"remove\": [...]}, original vertex ids) as an "
+                         "edge delta via the incremental re-plan path "
+                         "(DESIGN.md §4.7) and re-count; the report "
+                         "carries per-round dirty-block / replanned-stage "
+                         "accounting")
+    ap.add_argument("--rebase-every", type=int, default=8,
+                    help="streaming: cold re-plan (rebase the delta "
+                         "lineage) after this many chained deltas")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -129,10 +140,21 @@ def main():
             "rebalance single full-engine runs"
         )
 
+    if args.stream and (args.graphs or args.ckpt_dir or args.opt
+                        or args.time_split or args.autotune == "measured"):
+        raise SystemExit(
+            "--stream composes with single-graph pipeline runs only: "
+            "drop --graphs/--ckpt-dir/--opt/--time-split/"
+            "--autotune measured"
+        )
+
     if args.graphs:
         return _run_batched(args)
 
     g = graph_from_spec(args.graph)
+
+    if args.stream:
+        return _run_stream(g, args)
 
     report = {"graph": args.graph, "n": g.n, "m": g.m}
 
@@ -244,6 +266,10 @@ def main():
         if args.time_split:
             report.update(_time_split(g, args))
         total = res.triangles
+
+    from ..pipeline import default_cache
+
+    report["plan_cache"] = default_cache().stats()
 
     if args.verify:
         expected = triangle_count_oracle(g)
@@ -540,6 +566,97 @@ def _run_batched(args):
         report["expected"] = expected
         report["correct"] = bool(res.triangles == expected)
         assert res.triangles == expected, (res.triangles, expected)
+    if args.json:
+        print(json.dumps(report))
+    else:
+        for k, v in report.items():
+            print(f"{k}: {v}")
+
+
+def _run_stream(g, args):
+    """Streaming mode: one base count, then one incremental re-count per
+    delta line.
+
+    Each JSONL line of ``--stream`` is an :class:`repro.pipeline.EdgeDelta`
+    in **original** vertex ids (the lineage's composed relabeling is
+    applied internally).  The derived artifact is threaded round to
+    round, so unchanged device buffers and compiled engines carry over;
+    after ``--rebase-every`` chained deltas the lineage rebases onto a
+    cold re-plan.  ``--verify`` checks every round against the host
+    oracle of the mutated graph.
+    """
+    from ..core import count_triangles, count_triangles_delta
+    from ..core.graph import triangle_count_oracle
+    from ..pipeline import EdgeDelta, default_cache
+
+    kwargs = dict(
+        q=args.grid,
+        npods=args.pods,
+        schedule=args.schedule,
+        method=args.method,
+        chunk=args.chunk,
+        probe_shorter=not args.no_probe_shorter,
+        use_step_mask=False if args.no_skip_mask else None,
+        double_buffer=not args.no_double_buffer,
+        compact=False if args.no_compact else None,
+        reduce_strategy=args.reduce_strategy,
+        broadcast=args.broadcast,
+    )
+    t0 = time.perf_counter()
+    base = count_triangles(g, rebalance_trials=args.rebalance, **kwargs)
+    report = {
+        "graph": args.graph, "n": g.n, "m": g.m, "stream": args.stream,
+        "triangles_base": base.triangles,
+        "base_seconds": round(time.perf_counter() - t0, 4),
+        "grid": base.grid, "method": base.method,
+    }
+    if args.verify:
+        exp = triangle_count_oracle(g)
+        assert base.triangles == exp, (base.triangles, exp)
+
+    art, g_cur, rounds = base.artifact, g, []
+    with open(args.stream) as fh:
+        lines = [ln for ln in (s.strip() for s in fh) if ln]
+    for i, line in enumerate(lines):
+        spec = json.loads(line)
+        delta = EdgeDelta(
+            add=spec.get("add") or None, remove=spec.get("remove") or None
+        )
+        t1 = time.perf_counter()
+        res = count_triangles_delta(
+            g_cur, delta, artifact=art,
+            rebase_every=args.rebase_every, **kwargs,
+        )
+        dt = time.perf_counter() - t1
+        art, rep = res.artifact, res.delta
+        g_cur = delta.apply_to(g_cur)
+        entry = dict(
+            round=i,
+            triangles=res.triangles,
+            edges_added=rep["edges_added"],
+            edges_removed=rep["edges_removed"],
+            level=rep["level"],
+            dirty_blocks=rep["dirty_blocks"],
+            replanned_stages=rep["replanned_stages"],
+            rebased=rep["rebased"],
+            round_seconds=round(dt, 4),
+        )
+        if args.verify:
+            exp = triangle_count_oracle(g_cur)
+            entry["correct"] = bool(res.triangles == exp)
+            assert res.triangles == exp, (i, res.triangles, exp)
+        rounds.append(entry)
+
+    last = rounds[-1] if rounds else {}
+    report.update(
+        rounds=rounds,
+        deltas_applied=len(rounds),
+        triangles=last.get("triangles", base.triangles),
+        dirty_blocks=last.get("dirty_blocks", 0),
+        replanned_stages=last.get("replanned_stages", []),
+        rebased=last.get("rebased", False),
+        plan_cache=default_cache().stats(),
+    )
     if args.json:
         print(json.dumps(report))
     else:

@@ -20,6 +20,7 @@ from .cache import (  # noqa: F401
     graph_digest,
     set_default_cache,
 )
+from .delta import EdgeDelta, apply_delta  # noqa: F401
 from .planner import plan_cannon, plan_oned, plan_summa  # noqa: F401
 from .rebalance import (  # noqa: F401
     masked_critical_path,
@@ -29,6 +30,8 @@ from .rebalance import (  # noqa: F401
 from .stages import relabel_stage  # noqa: F401
 
 __all__ = [
+    "EdgeDelta",
+    "apply_delta",
     "relabel_stage",
     "rebalance_stage",
     "rebalance_trial_perm",

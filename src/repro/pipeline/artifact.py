@@ -47,6 +47,22 @@ class PlanArtifact:
     # None when the plan was not rebalanced.  The trials knob is part of
     # ``key``, so rebalanced and plain artifacts never collide.
     rebalance: Optional[dict] = None
+    # planner knobs this artifact was built with, recorded so the delta
+    # path (DESIGN.md §4.7) can re-pack stages or rebase with identical
+    # flags; None on artifacts from pre-delta code paths.
+    config: Optional[dict] = None
+    # delta lineage: dict(root_digest, chain, depth) joining the cache
+    # key for incrementally-derived artifacts; None for cold plans.
+    lineage: Optional[dict] = None
+    # per-delta report (dirty blocks/cells, replanned stages, rebased,
+    # level) attached by ``apply_delta``; None for cold plans.
+    delta_report: Optional[dict] = None
+    # re-stage handoff: (prev host arrays, prev staged jnp arrays) from
+    # the parent artifact, consumed lazily by ``staged()`` so clean
+    # device buffers are reused instead of re-uploaded.
+    restage_from: Optional[Tuple[Dict, Dict]] = dataclasses.field(
+        default=None, repr=False
+    )
     _memo: Dict = dataclasses.field(default_factory=dict, repr=False)
     _memo_lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False
@@ -85,15 +101,41 @@ class PlanArtifact:
 
     def staged(self) -> Dict:
         """Device-staged (``jnp``) plan arrays, memoized (the pipeline's
-        ``stage`` step); records its first-call wall time."""
+        ``stage`` step); records its first-call wall time.
+
+        Delta-derived artifacts carry ``restage_from`` — the parent's
+        host/staged array pairs — and go through the engine re-stage
+        path, which keeps the parent's device buffer for every array the
+        splice left unchanged (DESIGN.md §4.7)."""
         import time
 
         import jax.numpy as jnp
 
         def build():
             t0 = time.perf_counter()
-            out = {k: jnp.asarray(v) for k, v in self.device_arrays().items()}
+            handoff = self.restage_from
+            if handoff is not None:
+                from ..core.engine import restage_device_arrays
+
+                out, reused = restage_device_arrays(
+                    handoff[0], handoff[1], self.device_arrays()
+                )
+                self.stage_seconds["stage_reused_buffers"] = float(reused)
+            else:
+                out = {
+                    k: jnp.asarray(v) for k, v in self.device_arrays().items()
+                }
             self.stage_seconds["stage"] = time.perf_counter() - t0
             return out
 
         return self.memo("staged_arrays", build)
+
+    def release(self) -> None:
+        """Drop memoized device state (staged buffers, compiled fns, tile
+        plans) and the re-stage handoff.  Called by ``PlanCache`` on LRU
+        eviction so pinned device memory does not outlive the cache entry
+        while serving threads still hold the artifact; the next use
+        simply rebuilds the memo entries."""
+        with self._memo_lock:
+            self._memo.clear()
+            self.restage_from = None

@@ -60,22 +60,33 @@ class PlanCache:
     ``maxsize=0`` disables caching (every ``get`` misses, ``put`` is a
     no-op) — useful for benchmarking the cold path.
 
-    Eviction is entry-count-based, not byte-based, and cached artifacts
-    pin whatever they have memoized — including staged *device* arrays
-    and compiled executables — until evicted.  Size ``maxsize`` to the
-    working set of distinct (graph, config) pairs the process actually
-    serves (the default stays small for exactly that reason — a process
-    looping over many huge graphs would otherwise silently retain them
-    all); for one-shot batch jobs prefer ``maxsize=0``.
+    Eviction is entry-count-based, not byte-based.  Cached artifacts pin
+    whatever they have memoized — staged *device* arrays and compiled
+    executables — so LRU eviction calls ``value.release()`` (or the
+    supplied ``on_evict`` hook) *outside the lock*: the pinned device
+    memory is dropped immediately even while serving threads still hold
+    Python references to the artifact; they simply re-stage on next use.
+    Size ``maxsize`` to the working set of distinct (graph, config)
+    pairs the process actually serves; for one-shot batch jobs prefer
+    ``maxsize=0``.
     """
 
-    def __init__(self, maxsize: int = 8):
+    def __init__(self, maxsize: int = 8, on_evict=None):
         self.maxsize = int(maxsize)
+        self._on_evict = on_evict
         self._entries: OrderedDict[Hashable, Any] = OrderedDict()
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+
+    def _release(self, value: Any) -> None:
+        if self._on_evict is not None:
+            self._on_evict(value)
+            return
+        release = getattr(value, "release", None)
+        if callable(release):
+            release()
 
     def get(self, key: Hashable) -> Optional[Any]:
         with self._lock:
@@ -89,12 +100,17 @@ class PlanCache:
     def put(self, key: Hashable, value: Any) -> None:
         if self.maxsize <= 0:
             return
+        evicted = []
         with self._lock:
             self._entries[key] = value
             self._entries.move_to_end(key)
             while len(self._entries) > self.maxsize:
-                self._entries.popitem(last=False)
+                _, old = self._entries.popitem(last=False)
                 self.evictions += 1
+                evicted.append(old)
+        for old in evicted:
+            if old is not value:  # self-eviction of a fresh put keeps it usable
+                self._release(old)
 
     def memo(self, key: Hashable, build) -> Any:
         """Get-or-build: return the cached value, building (outside the
@@ -110,12 +126,14 @@ class PlanCache:
 
     def clear(self) -> None:
         with self._lock:
+            dropped = list(self._entries.values())
             self._entries.clear()
+        for old in dropped:
+            self._release(old)
 
     def __len__(self) -> int:
         return len(self._entries)
 
-    @property
     def stats(self) -> dict:
         return dict(
             size=len(self._entries),

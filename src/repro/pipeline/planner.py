@@ -174,9 +174,16 @@ def plan_cannon(
         seconds["decompose+pack"] = time.perf_counter() - t1
         return PlanArtifact(
             kind="cannon", digest=digest, key=key, graph=g2, perm=perm,
-            plan=plan, rebalance=rb,
+            plan=plan, rebalance=rb, config=config,
         )
 
+    config = dict(
+        q=q, skew=skew, chunk=chunk, reorder=reorder, cyclic_p=cyclic_p,
+        with_stats=with_stats, keep_blocks=keep_blocks, bucketize=bucketize,
+        d_small=d_small, step_masks=step_masks,
+        rebalance_trials=rebalance_trials, compact=compact,
+        autotune=autotune, aug_keys=aug_keys,
+    )
     tail = (
         q, skew, chunk, reorder, cyclic_p, with_stats, keep_blocks,
         bucketize, d_small if bucketize else None, step_masks,
@@ -239,9 +246,14 @@ def plan_summa(
         seconds["decompose+pack"] = time.perf_counter() - t1
         return PlanArtifact(
             kind="summa", digest=digest, key=key, graph=g2, perm=perm,
-            plan=plan, rebalance=rb,
+            plan=plan, rebalance=rb, config=config,
         )
 
+    config = dict(
+        r=r, c=c, chunk=chunk, reorder=reorder, cyclic_p=cyclic_p,
+        step_masks=step_masks, rebalance_trials=rebalance_trials,
+        compact=compact, autotune=autotune, broadcast=broadcast,
+    )
     tail = (
         r, c, chunk, reorder, cyclic_p, step_masks, rebalance_trials,
         compact, autotune, broadcast,
@@ -296,9 +308,14 @@ def plan_oned(
         seconds["decompose+pack"] = time.perf_counter() - t1
         return PlanArtifact(
             kind="oned", digest=digest, key=key, graph=g2, perm=perm,
-            plan=plan, rebalance=rb,
+            plan=plan, rebalance=rb, config=config,
         )
 
+    config = dict(
+        p=p, chunk=chunk, reorder=reorder, cyclic_p=cyclic_p,
+        step_masks=step_masks, rebalance_trials=rebalance_trials,
+        compact=compact, autotune=autotune,
+    )
     tail = (
         p, chunk, reorder, cyclic_p, step_masks, rebalance_trials,
         compact, autotune,

@@ -144,7 +144,7 @@ def _tc_plan_stats(
         if skew_perm is not None
         else np.arange(q, dtype=np.int64)
     )
-    itasks = 0
+    it_cell = np.zeros((q, q, q), dtype=np.int64)
     for x in range(q):
         for y in range(q):
             b = x * q + y
@@ -156,7 +156,7 @@ def _tc_plan_stats(
                 la = rowcnt3[x, z][rows]
                 lb = rowcnt3[y, z][cols]
                 both = (la > 0) & (lb > 0)
-                itasks += int(both.sum())
+                it_cell[x, y, s] = int(both.sum())
                 probe[x, y, s] = int(np.minimum(la, lb)[both].sum())
     tot_idx = q * q * nnz_pad
     return PlanStats(
@@ -167,9 +167,10 @@ def _tc_plan_stats(
         probe_imbalance=float(
             probe.sum(axis=2).max() / max(1.0, probe.sum(axis=2).mean())
         ),
-        intersection_tasks_total=itasks,
+        intersection_tasks_total=int(it_cell.sum()),
         padding_fraction_indices=float(1.0 - m / max(1, tot_idx)),
         padding_fraction_tasks=float(1.0 - m / max(1, q * q * tmax)),
+        itasks_per_cell=it_cell,
     )
 
 

@@ -1,0 +1,469 @@
+"""Delta-aware planning (DESIGN.md §4.7): EdgeDelta semantics, the
+splice / repack / rebase ladder, cache lineage, and exact streaming
+counts.
+
+The load-bearing invariant everywhere: counting an incrementally
+re-planned artifact equals a cold count of the mutated graph — and on
+the splice path the plan *arrays* are byte-identical to a cold re-pack
+under the same kept σ, so count parity follows structurally.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    count_triangles,
+    count_triangles_delta,
+    graph_from_spec,
+    residue_cliques,
+    triangle_count_oracle,
+)
+from repro.core.generators import flip_edges, random_edge_flips, split_specs
+from repro.core.graph import Graph
+from repro.pipeline import EdgeDelta, PlanCache, apply_delta, plan_cannon
+from repro.pipeline.stages import (
+    autotune_tc_plan,
+    pack_tc_plan,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ----------------------------------------------------------------------
+# EdgeDelta semantics
+# ----------------------------------------------------------------------
+def test_edge_delta_canonicalizes():
+    d = EdgeDelta(add=[(5, 2), (2, 5), (3, 3), (1, 4)])
+    # dedup + (min, max) orientation + self-loop drop, sorted
+    assert d.add.tolist() == [[1, 4], [2, 5]]
+    assert d.remove.shape == (0, 2)
+    assert d.k == 2
+
+
+def test_edge_delta_rejects_overlap():
+    with pytest.raises(ValueError):
+        EdgeDelta(add=[(1, 2)], remove=[(2, 1)])
+
+
+def test_edge_delta_digest_is_content_addressed():
+    a = EdgeDelta(add=[(1, 2)], remove=[(3, 4)])
+    b = EdgeDelta(add=[(2, 1)], remove=[(4, 3)])
+    c = EdgeDelta(add=[(3, 4)], remove=[(1, 2)])
+    assert a.digest() == b.digest()  # canonical form decides
+    assert a.digest() != c.digest()  # add/remove sides are distinct
+
+
+def test_edge_delta_apply_to_matches_manual_merge():
+    g = graph_from_spec("er:60,5,1")
+    d = EdgeDelta.random_flips(g, 9, seed=3)
+    g2 = d.apply_to(g)
+    base = {tuple(e) for e in np.sort(g.edges, axis=1).tolist()}
+    want = (base - {tuple(e) for e in d.remove.tolist()}) | {
+        tuple(e) for e in d.add.tolist()
+    }
+    got = {tuple(e) for e in np.sort(g2.edges, axis=1).tolist()}
+    assert got == want
+    assert g2.n == g.n
+
+
+def test_random_flips_deterministic_and_disjoint():
+    g = graph_from_spec("er:80,6,2")
+    add1, rem1 = random_edge_flips(g, 11, seed=5)
+    add2, rem2 = random_edge_flips(g, 11, seed=5)
+    assert np.array_equal(add1, add2) and np.array_equal(rem1, rem2)
+    assert len(add1) + len(rem1) == 11
+    base = {tuple(e) for e in np.sort(g.edges, axis=1).tolist()}
+    assert all(tuple(e) not in base for e in add1.tolist())
+    assert all(tuple(e) in base for e in rem1.tolist())
+    add3, _ = random_edge_flips(g, 11, seed=6)
+    assert not np.array_equal(add1, add3)  # seed matters
+
+
+def test_delta_graph_spec():
+    g = graph_from_spec("delta:7,4,er:100,6,1")
+    assert np.array_equal(
+        g.edges, flip_edges(graph_from_spec("er:100,6,1"), 7, 4).edges
+    )
+    # base specs containing commas survive the 2-split
+    g2 = graph_from_spec("delta:3,0,rmat:8,4,2")
+    assert g2.n == graph_from_spec("rmat:8,4,2").n
+    with pytest.raises(ValueError):
+        graph_from_spec("delta:5,er:10,3")  # missing a field
+    # well-formedness: one spec, not split at its interior commas
+    assert split_specs("delta:5,0,karate") == ["delta:5,0,karate"]
+
+
+# ----------------------------------------------------------------------
+# splice byte-parity: the incremental pack equals the cold re-pack
+# ----------------------------------------------------------------------
+_ARRAYS = (
+    "a_indptr", "a_indices", "b_indptr", "b_indices",
+    "m_ti", "m_tj", "m_cnt",
+)
+
+
+def _assert_plan_parity(got, ref):
+    for name in _ARRAYS:
+        a, b = getattr(got, name), getattr(ref, name)
+        assert a.shape == b.shape and np.array_equal(a, b), name
+    if ref.step_keep is not None:
+        assert np.array_equal(got.step_keep, ref.step_keep)
+    if ref.b_aug is not None:
+        assert np.array_equal(got.b_aug, ref.b_aug)
+    if ref.stats is not None and got.stats is not None:
+        assert (
+            got.stats.intersection_tasks_total
+            == ref.stats.intersection_tasks_total
+        )
+        assert np.array_equal(
+            got.stats.probe_work_per_device_shift,
+            ref.stats.probe_work_per_device_shift,
+        )
+
+
+@pytest.mark.parametrize("q", [2, 3])
+@pytest.mark.parametrize(
+    "flags",
+    [
+        dict(),
+        dict(keep_blocks=True, aug_keys=True),
+        dict(autotune=True),
+    ],
+    ids=["plain", "blocks+aug", "autotune"],
+)
+def test_apply_delta_matches_cold_pack(q, flags):
+    g = graph_from_spec("er:300,9,5")
+    cache = PlanCache(maxsize=4)
+    art = plan_cannon(g, q, reorder=False, cache=cache, **flags)
+    spliced = 0
+    # dirty-block count must stay under the splice ladder's 50% limit
+    # for at least some trials: fewer flips on the smaller grid
+    k = 2 if q == 2 else 5
+    for trial in range(6):
+        d = EdgeDelta.random_flips(g, k, seed=40 + trial)
+        art2 = apply_delta(art, d, cache=PlanCache(maxsize=0))
+        assert art2.graph.m == d.apply_to(g).m
+        ref = pack_tc_plan(
+            d.apply_to(g), q, skew_perm=art.plan.skew_perm,
+            keep_blocks=flags.get("keep_blocks", False) or False,
+            aug_keys=flags.get("aug_keys", False),
+        )
+        if flags.get("autotune"):
+            ref = autotune_tc_plan(ref)
+        _assert_plan_parity(art2.plan, ref)
+        spliced += art2.delta_report["level"] == "splice"
+    assert spliced > 0  # localized flips must exercise the fast path
+
+
+def test_apply_delta_noop_reuses_everything():
+    g = graph_from_spec("er:100,6,1")
+    art = plan_cannon(g, 2, cache=PlanCache(maxsize=2))
+    art2 = apply_delta(art, EdgeDelta(), cache=PlanCache(maxsize=0))
+    assert art2.delta_report["level"] == "noop"
+    assert art2.plan is art.plan
+    # removing an absent edge is also a no-op after effect-filtering
+    art3 = apply_delta(
+        art, EdgeDelta(remove=[(0, 1), (0, 2)]), cache=PlanCache(maxsize=0)
+    ) if not _has_edge(g, 0, 1) and not _has_edge(g, 0, 2) else None
+    if art3 is not None:
+        assert art3.delta_report["level"] == "noop"
+
+
+def _has_edge(g, u, v):
+    key = {tuple(e) for e in np.sort(g.edges, axis=1).tolist()}
+    return (min(u, v), max(u, v)) in key
+
+
+# ----------------------------------------------------------------------
+# counting equivalence (1 device, in-process)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("schedule", ["cannon", "summa", "oned"])
+def test_count_triangles_delta_exact(schedule):
+    g = graph_from_spec("er:150,7,2")
+    cache = PlanCache(maxsize=8)
+    d = EdgeDelta.random_flips(g, 10, seed=1)
+    res = count_triangles_delta(g, d, q=1, schedule=schedule, cache=cache)
+    assert res.triangles == triangle_count_oracle(d.apply_to(g))
+    assert res.delta is not None and res.delta["level"] in (
+        "splice", "repack", "rebase"
+    )
+    assert res.artifact is not None and res.artifact.lineage is not None
+
+
+def test_count_triangles_delta_chained_with_rebase():
+    g = graph_from_spec("er:120,6,4")
+    cache = PlanCache(maxsize=8)
+    art = None
+    for i in range(4):
+        d = EdgeDelta.random_flips(g, 4, seed=50 + i)
+        res = count_triangles_delta(
+            g, d, q=1, artifact=art, cache=cache, rebase_every=2
+        )
+        g = d.apply_to(g)
+        assert res.triangles == triangle_count_oracle(g), i
+        art = res.artifact
+        if res.delta["rebased"]:
+            assert res.delta["depth"] == 0
+    # depth 1, 2, rebase (depth>2 would-be 3), depth 1: at least one
+    assert art.lineage["depth"] <= 2
+
+
+def test_delta_count_equals_fresh_plan_count():
+    g = graph_from_spec("er:200,8,7")
+    d = EdgeDelta.random_flips(g, 8, seed=2)
+    cache = PlanCache(maxsize=8)
+    inc = count_triangles_delta(g, d, q=1, cache=cache)
+    fresh = count_triangles(d.apply_to(g), q=1, cache=PlanCache(maxsize=2))
+    assert inc.triangles == fresh.triangles
+
+
+# ----------------------------------------------------------------------
+# edge cases: emptied blocks, revived steps, edgeless base
+# ----------------------------------------------------------------------
+def test_delta_emptying_a_block_flips_skip_mask():
+    # residue cliques mod 3: each clique's triangles live in one
+    # diagonal block — deleting clique 0's edges empties block (0, 0)
+    # and must flip its live steps back to skipped
+    q = 3
+    g = residue_cliques(3, 5)
+    art = plan_cannon(g, q, reorder=False, cache=PlanCache(maxsize=2))
+    live0 = int(art.plan.step_keep.sum())
+    assert live0 > 0
+    clique0 = [
+        tuple(e) for e in np.sort(g.edges, axis=1).tolist()
+        if e[0] % 3 == 0
+    ]
+    d = EdgeDelta(remove=clique0)
+    art2 = apply_delta(art, d, cache=PlanCache(maxsize=0))
+    g2 = d.apply_to(g)
+    ref = pack_tc_plan(g2, q, skew_perm=art2.plan.skew_perm)
+    _assert_plan_parity(art2.plan, ref)
+    assert int(art2.plan.step_keep.sum()) < live0
+    res = count_triangles(g2, q=1, cache=PlanCache(maxsize=2))
+    assert res.triangles == triangle_count_oracle(g2)
+
+
+def test_delta_reviving_elided_step_recomputes_schedule():
+    # residue cliques: only diagonal blocks are non-empty, so the
+    # compaction stage elides shifts; cross-class edges land work in an
+    # off-diagonal block — the splice must grow the live-step set (and
+    # drop inherited engines), not silently keep the stale schedule
+    g = residue_cliques(3, 5)
+    art = plan_cannon(g, 3, reorder=False, compact=True,
+                      cache=PlanCache(maxsize=2))
+    n_live0 = art.plan.compact.n_live
+    assert n_live0 < art.plan.compact.n_total  # fixture elides steps
+    add = [(0, 1), (3, 4), (6, 7)]  # residues (0, 1): block (0, 1)
+    d = EdgeDelta(add=add)
+    art2 = apply_delta(art, d, cache=PlanCache(maxsize=0))
+    g2 = d.apply_to(g)
+    ref = pack_tc_plan(g2, 3, skew_perm=art2.plan.skew_perm)
+    for name in _ARRAYS:
+        assert np.array_equal(getattr(art2.plan, name), getattr(ref, name))
+    assert np.array_equal(
+        art2.plan.step_keep,
+        pack_tc_plan(g2, 3, skew_perm=art2.plan.skew_perm).step_keep,
+    )
+    if art2.delta_report["level"] == "splice":
+        live0 = set(art.plan.compact.live_steps)
+        live2 = set(art2.plan.compact.live_steps)
+        assert live2 >= live0
+        if live2 - live0:  # a dead step revived: engines must not carry
+            assert not art2.delta_report["fn_inherited"]
+    res = count_triangles(g2, q=1, cache=PlanCache(maxsize=2))
+    assert res.triangles == triangle_count_oracle(g2)
+
+
+def test_delta_from_edgeless_graph():
+    g = Graph(n=24, edges=np.zeros((0, 2), np.int64), name="empty")
+    cache = PlanCache(maxsize=4)
+    base = count_triangles(g, q=1, cache=cache)
+    assert base.triangles == 0
+    tri = [(0, 1), (1, 2), (0, 2), (3, 4)]
+    res = count_triangles_delta(
+        g, EdgeDelta(add=tri), q=1, artifact=base.artifact, cache=cache
+    )
+    assert res.triangles == 1
+
+
+# ----------------------------------------------------------------------
+# cache lineage + eviction hooks
+# ----------------------------------------------------------------------
+def test_delta_lineage_cache_hit():
+    g = graph_from_spec("er:90,5,3")
+    cache = PlanCache(maxsize=8)
+    art = plan_cannon(g, 2, cache=cache)
+    d = EdgeDelta.random_flips(g, 3, seed=9)
+    a1 = apply_delta(art, d, cache=cache)
+    assert not a1.cache_hit
+    a2 = apply_delta(art, d, cache=cache)
+    assert a2.cache_hit and a2.key == a1.key
+    # a different delta is a different lineage entry
+    a3 = apply_delta(art, EdgeDelta.random_flips(g, 3, seed=10), cache=cache)
+    assert not a3.cache_hit and a3.key != a1.key
+
+
+def test_eviction_releases_artifact_buffers():
+    g1, g2 = graph_from_spec("er:60,4,1"), graph_from_spec("er:70,4,2")
+    tiny = PlanCache(maxsize=1)
+    a1 = plan_cannon(g1, 2, cache=tiny)
+    a1.staged()  # pin device buffers in the artifact memo
+    assert a1._memo
+    plan_cannon(g2, 2, cache=tiny)  # evicts a1 (and relabel entries)
+    assert tiny.stats()["evictions"] >= 1
+    assert not a1._memo  # release() dropped staged buffers + engines
+    assert a1.restage_from is None
+
+
+def test_eviction_custom_hook():
+    seen = []
+    tiny = PlanCache(maxsize=1, on_evict=lambda v: seen.append(v))
+    tiny.put(("k", 1), "a")
+    tiny.put(("k", 2), "b")
+    assert seen == ["a"]
+    tiny.clear()
+    assert seen == ["a", "b"]
+
+
+def test_splice_restages_only_dirty_buffers():
+    g = graph_from_spec("er:300,9,5")
+    cache = PlanCache(maxsize=4)
+    art = plan_cannon(g, 3, reorder=False, cache=cache)
+    art.staged()
+    for trial in range(6):
+        d = EdgeDelta.random_flips(g, 4, seed=70 + trial)
+        art2 = apply_delta(art, d, cache=PlanCache(maxsize=0))
+        if art2.delta_report["level"] != "splice":
+            continue
+        art2.staged()
+        assert art2.stage_seconds.get("stage_reused_buffers", 0) >= 1
+        return
+    pytest.skip("no trial took the splice path")
+
+
+# ----------------------------------------------------------------------
+# property suite (hypothesis; defined only when available — CI installs
+# it, so the full schedule × method × compact cross runs there, while
+# the deterministic tests above always run)
+# ----------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in minimal envs
+    HAS_HYPOTHESIS = False
+
+if HAS_HYPOTHESIS:
+
+    @st.composite
+    def graph_and_delta(draw):
+        n = draw(st.integers(min_value=4, max_value=32))
+        m = draw(st.integers(min_value=0, max_value=3 * n))
+        src = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+        dst = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+        g = Graph.from_edges(n, src, dst)
+        k = draw(
+            st.integers(min_value=0, max_value=min(6, n * (n - 1) // 2))
+        )
+        seed = draw(st.integers(min_value=0, max_value=2**16))
+        return g, EdgeDelta.random_flips(g, k, seed=seed)
+
+    @pytest.mark.parametrize("schedule", ["cannon", "summa", "oned"])
+    @pytest.mark.parametrize("method", ["search2", "fused"])
+    @pytest.mark.parametrize("compact", [True, False])
+    @given(gd=graph_and_delta())
+    @settings(max_examples=4, deadline=None)
+    def test_property_delta_count_equivalence(schedule, method, compact, gd):
+        g, d = gd
+        # explicit search2 is wired at the api level on Cannon only
+        # (the two-level split needs the bucketized plan); the other
+        # schedules run their incumbent kernel for that slot
+        m = method if schedule == "cannon" or method == "fused" else "search"
+        kwargs = dict(q=1, schedule=schedule, method=m, compact=compact)
+        inc = count_triangles_delta(g, d, **kwargs)
+        g2 = d.apply_to(g)
+        fresh = count_triangles(g2, cache=PlanCache(maxsize=2), **kwargs)
+        assert (
+            inc.triangles == fresh.triangles == triangle_count_oracle(g2)
+        )
+
+    @given(gd=graph_and_delta())
+    @settings(max_examples=15, deadline=None)
+    def test_property_splice_matches_cold_pack(gd):
+        g, d = gd
+        if g.m == 0 and d.k == 0:
+            return
+        for q in (2, 3):
+            art = plan_cannon(
+                g, q, reorder=False, cache=PlanCache(maxsize=2)
+            )
+            art2 = apply_delta(art, d, cache=PlanCache(maxsize=0))
+            ref = pack_tc_plan(
+                d.apply_to(g), q, skew_perm=art2.plan.skew_perm
+            )
+            _assert_plan_parity(art2.plan, ref)
+
+
+# ----------------------------------------------------------------------
+# distributed e2e (subprocess, 4 host devices)
+# ----------------------------------------------------------------------
+def test_delta_counts_distributed(distributed_runner):
+    code = """
+    import numpy as np
+    from repro.core import (count_triangles, count_triangles_delta,
+                            graph_from_spec, triangle_count_oracle)
+    from repro.pipeline import EdgeDelta, PlanCache
+
+    g = graph_from_spec("er:160,7,3")
+    d = EdgeDelta.random_flips(g, 8, seed=4)
+    g2 = d.apply_to(g)
+    exp = triangle_count_oracle(g2)
+    for schedule, method in (("cannon", "search2"), ("cannon", "fused"),
+                             ("summa", "search"), ("summa", "fused"),
+                             ("oned", "search")):
+        for compact in (True, False):
+            cache = PlanCache(maxsize=8)
+            res = count_triangles_delta(
+                g, d, q=2, schedule=schedule, method=method,
+                compact=compact, cache=cache,
+            )
+            assert res.triangles == exp, (
+                schedule, method, compact, res.triangles, exp)
+            assert res.delta["level"] in ("splice", "repack", "rebase")
+    print("OK", exp)
+    """
+    out = distributed_runner(code, ndev=4, timeout=1200)
+    assert "OK" in out
+
+
+def test_tc_run_stream_e2e(tmp_path):
+    g = graph_from_spec("er:140,6,2")
+    deltas, cur = [], g
+    rng_seed = 11
+    for i in range(3):
+        add, rem = random_edge_flips(cur, 5, seed=rng_seed + i)
+        deltas.append({"add": add.tolist(), "remove": rem.tolist()})
+        cur = EdgeDelta(add=add, remove=rem).apply_to(cur)
+    stream = tmp_path / "deltas.jsonl"
+    stream.write_text("\n".join(json.dumps(d) for d in deltas) + "\n")
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.tc_run",
+         "--graph", "er:140,6,2", "--grid", "2",
+         "--stream", str(stream), "--verify", "--json"],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr
+    report = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert report["deltas_applied"] == 3
+    assert {"dirty_blocks", "replanned_stages", "rebased"} <= set(report)
+    assert all(r["correct"] for r in report["rounds"])
+    assert report["triangles"] == triangle_count_oracle(cur)
+    assert report["plan_cache"]["size"] >= 1

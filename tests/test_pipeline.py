@@ -102,9 +102,9 @@ def test_plan_cache_hit_and_miss_semantics():
     cache = PlanCache()
     g = rmat(8, 8, seed=1)
     a1 = plan_cannon(g, 2, cache=cache)
-    assert not a1.cache_hit and cache.stats["hits"] == 0
+    assert not a1.cache_hit and cache.stats()["hits"] == 0
     a2 = plan_cannon(g, 2, cache=cache)
-    assert a2 is a1 and a2.cache_hit and cache.stats["hits"] == 1
+    assert a2 is a1 and a2.cache_hit and cache.stats()["hits"] == 1
 
     # different planning params -> miss (relabel is still shared)
     a3 = plan_cannon(g, 3, cache=cache)
@@ -136,7 +136,7 @@ def test_plan_cache_disabled_and_lru():
     tiny = PlanCache(maxsize=2)
     plan_cannon(g, 2, cache=tiny)  # relabel + plan entries
     plan_cannon(g, 3, cache=tiny)
-    assert tiny.stats["evictions"] > 0
+    assert tiny.stats()["evictions"] > 0
 
 
 def test_cache_hit_skips_planning_and_staging():
