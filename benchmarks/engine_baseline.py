@@ -24,6 +24,11 @@ isolation:
 * ``fused``   — fused-vs-search2-vs-tile count-kernel comparison on the
   block fixture with the fused tile shape picked by the measured
   autotune table (:func:`benchmarks.kernels.fused_fixture`);
+* ``hubsplit`` — hub-split planning vs rebalance-only on the
+  heavy-tailed powerlaw fixtures (DESIGN.md §4.8): masked critical
+  path (the rebalancer's own objective) and wall-time per variant,
+  counts byte-identical; the smoke guard requires the hub residual's
+  masked critical path to beat rebalance-only by ≥1.5×;
 * ``collectives`` — the communication-avoiding collectives A/B
   (DESIGN.md §4.5): 2.5D tree vs flat reduction on a 2-pod mesh and
   ppermute-chain vs one-hot SUMMA broadcasts, each cell annotated with
@@ -50,7 +55,12 @@ SCALES_QUICK = [12, 13]
 SCHEDULES = ["cannon", "summa", "oned"]
 BLOCK_SPARSE_GRAPH = "cliques:3,60"
 POWERLAW_GRAPH = "powerlaw:600,2.2"
+HUB_GRAPHS = ["powerlaw:600,2.2", "powerlaw:600,1.8"]
 COLLECTIVES_GRAPH = "er:400,16,3"
+# the hub residual's masked critical path must beat rebalance-only by
+# at least this factor on the heavy-tailed fixtures (DESIGN.md §4.8
+# records ~9.5-10x; 1.5x is the don't-regress floor)
+HUB_MCP_GAIN = 1.5
 # compacted tct must not exceed cond-only tct by more than this (both
 # are warm dispatch times; small slack absorbs host-device timer noise)
 COMPACT_REGRESSION_SLACK = 1.05
@@ -121,6 +131,53 @@ def block_sparse_fixture(graph: str = BLOCK_SPARSE_GRAPH, grid: int = GRID):
             "payload"
         ),
     )
+    return out
+
+
+def hubsplit_fixture(graphs=tuple(HUB_GRAPHS), grid: int = GRID):
+    """Hub-split vs rebalance-only on the heavy-tailed fixtures
+    (DESIGN.md §4.8), counts verified against the oracle per
+    subprocess and cross-variant here.
+
+    Both variants run the same 3-seed rebalance; the hub-split cell
+    additionally takes the hub rows off the 2D path, so its
+    ``residual_mcp`` (the masked critical path the residual actually
+    schedules) is directly comparable to the rebalance-only
+    ``rebalance_masked_critical_path``.
+    """
+    out = {"grid": grid, "graphs": {}}
+    for graph in graphs:
+        cell = {}
+        r = run_tc_subprocess(
+            graph, grid,
+            extra=("--verify", "--repeat", "5", "--rebalance", "3"),
+        )
+        cell["rebalance_only"] = _cell(r)
+        cell["rebalance_only"]["masked_critical_path"] = (
+            r["rebalance_masked_critical_path"]
+        )
+        print(csv_row(f"engine/hubsplit/{graph}/rebalance_only",
+                      r["tct_seconds"] * 1e6,
+                      f"mcp={r['rebalance_masked_critical_path']}"))
+        r = run_tc_subprocess(
+            graph, grid,
+            extra=("--verify", "--repeat", "5", "--rebalance", "3",
+                   "--hub-split"),
+        )
+        cell["hub_split"] = _cell(r)
+        cell["hub_split"].update(
+            masked_critical_path=r["residual_mcp"],
+            hub_rows=r["hub_rows"],
+            hub_nnz_frac=r["hub_nnz_frac"],
+        )
+        print(csv_row(f"engine/hubsplit/{graph}/hub_split",
+                      r["tct_seconds"] * 1e6,
+                      f"mcp={r['residual_mcp']} hub_rows={r['hub_rows']}"))
+        assert (
+            cell["rebalance_only"]["triangles"]
+            == cell["hub_split"]["triangles"]
+        ), f"hub-split miscounts on {graph}: {cell}"
+        out["graphs"][graph] = cell
     return out
 
 
@@ -264,6 +321,22 @@ def smoke() -> dict:
         f"bytes ({tree_t:.4f}s vs {flat_t:.4f}s), chain broadcast "
         f"{chain_b} <= one-hot {one_b} bytes"
     )
+    hs = hubsplit_fixture()
+    for graph, cell in hs["graphs"].items():
+        rb_mcp = cell["rebalance_only"]["masked_critical_path"]
+        hub_mcp = cell["hub_split"]["masked_critical_path"]
+        if hub_mcp * HUB_MCP_GAIN > rb_mcp:
+            raise SystemExit(
+                f"engine smoke FAILED: hub-split residual masked "
+                f"critical path {hub_mcp} on {graph} does not beat "
+                f"rebalance-only {rb_mcp} by {HUB_MCP_GAIN}x — the hub "
+                "stage is no longer pulling the tail off the 2D path"
+            )
+        print(
+            f"# hubsplit smoke ok: {graph} mcp {rb_mcp} -> {hub_mcp} "
+            f"({rb_mcp / max(1.0, hub_mcp):.1f}x, "
+            f"{cell['hub_split']['hub_rows']} hub rows), counts agree"
+        )
     return bs
 
 
@@ -295,6 +368,7 @@ def run(quick: bool = False, out: str = "BENCH_engine.json") -> dict:
         assert len(counts) == 1, f"schedules disagree at scale {scale}: {counts}"
     report["block_sparse"] = block_sparse_fixture()
     report["autotune"] = autotune_fixture()
+    report["hubsplit"] = hubsplit_fixture()
     report["collectives"] = collectives_fixture()
     from .kernels import fused_fixture
 

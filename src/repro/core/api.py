@@ -58,6 +58,10 @@ class TCResult:
     # and the schedule plans through the pipeline): best seed, baseline/
     # best masked critical path, improvement, skipped steps
     rebalance: Optional[dict] = None
+    # hub-split report (DESIGN.md §4.8) when the plan carries a hub
+    # side: hub_rows / hub_nnz_frac / hub_tasks plus residual_mcp (the
+    # masked critical path of the residual the 2D path actually runs)
+    hub: Optional[dict] = None
     # which autotune flavor governed kernel-shape selection for this run
     # ("percentile" | "measured"; None when the method was explicit and
     # no autotune stage ran — DESIGN.md §4.6)
@@ -141,6 +145,9 @@ class RunContext:
     # skip-aware rebalance (DESIGN.md §4.3): search this many relabeling
     # seeds for the lowest masked critical path (0 = off)
     rebalance_trials: int = 0
+    # hub-split stage (DESIGN.md §4.8): False = off, True = default
+    # threshold, a number = the threshold multiplier c
+    hub_split: object = False
     cache: Optional[object] = None  # PlanCache; None -> default_cache()
     # autotune flavor for method 'auto'/'fused' (DESIGN.md §4.6):
     # "percentile" = the analytic PR 5 stage; "measured" = consult (and
@@ -265,6 +272,7 @@ def _run_cannon(graph: Graph, mesh, ctx: RunContext):
                 compact=ctx.compact is not False,
                 autotune="fused" if fused_split else (method == "auto"),
                 aug_keys=aug,
+                hub_split=ctx.hub_split,
                 cache=ctx.cache,
             )
 
@@ -415,6 +423,7 @@ def _run_summa(graph: Graph, mesh, ctx: RunContext):
             compact=ctx.compact is not False,
             autotune="fused" if fused_split else (ctx.method == "auto"),
             broadcast=ctx.broadcast or "auto",
+            hub_split=ctx.hub_split,
             cache=ctx.cache,
         )
         splan = ctx.artifact.plan
@@ -480,6 +489,7 @@ def _run_oned(graph: Graph, mesh, ctx: RunContext):
             cyclic_p=ctx.cyclic_p, rebalance_trials=ctx.rebalance_trials,
             compact=ctx.compact is not False,
             autotune="fused" if fused_split else (ctx.method == "auto"),
+            hub_split=ctx.hub_split,
             cache=ctx.cache,
         )
         oplan = ctx.artifact.plan
@@ -576,6 +586,7 @@ def count_triangles(
     reduce_strategy: str = "auto",
     broadcast: Optional[str] = None,
     rebalance_trials: int = 0,
+    hub_split: object = False,
     cache=None,
     autotune: str = "percentile",
     measured_dir: Optional[str] = None,
@@ -607,7 +618,13 @@ def count_triangles(
     the skip-aware rebalance stage (DESIGN.md §4.3) during planning —
     it needs a pipeline-backed schedule and a pipeline-made plan, so it
     is rejected alongside a caller-supplied ``plan`` or a schedule
-    registered without ``plans_itself``.  Planning goes
+    registered without ``plans_itself``.  ``hub_split`` turns on the
+    hub-split stage (DESIGN.md §4.8) for heavy-tailed graphs: hub rows
+    above ``c ×`` the average degree (``True`` = the default ``c``, a
+    number = an explicit ``c``) are counted as replicated column-strided
+    fragments outside the 2D schedule and the residual flows through the
+    normal path — same pipeline requirement as the rebalancer, so it too
+    needs ``plans_itself`` and no caller plan.  Planning goes
     through the content-addressed plan cache (``cache=None`` uses the
     process-wide default — pass a ``repro.pipeline.PlanCache`` to
     isolate, or one with ``maxsize=0`` to disable): repeated counts of
@@ -662,6 +679,17 @@ def count_triangles(
             "drop the caller-supplied plan and use a schedule registered "
             "with plans_itself=True"
         )
+    from ..pipeline.hubsplit import normalize_hub_split
+
+    if normalize_hub_split(hub_split) is not None and (
+        plan is not None or not spec.plans_itself
+    ):
+        raise ValueError(
+            "hub_split requires planning through the pipeline: drop the "
+            "caller-supplied plan (it already carries — or lacks — its "
+            "hub side) and use a schedule registered with "
+            "plans_itself=True"
+        )
     if not spec.plans_itself and (reorder or cyclic_p is not None):
         # pre-pipeline runner contract: hand it the relabeled graph
         from ..pipeline import relabel_stage
@@ -684,6 +712,7 @@ def count_triangles(
         reorder=reorder,
         cyclic_p=cyclic_p,
         rebalance_trials=rebalance_trials,
+        hub_split=hub_split,
         cache=cache,
         autotune=autotune,
         measured_dir=measured_dir,
@@ -698,6 +727,24 @@ def count_triangles(
     # like the pre-engine code; counting starts at the runner's mark
     t1 = ctx.counting_started_at or t0
 
+    hub_side = getattr(out_plan, "hub", None)
+    hub_rep = None
+    if hub_side is not None:
+        hub_rep = hub_side.report()
+        rb = getattr(ctx.artifact, "rebalance", None)
+        stats = getattr(out_plan, "stats", None)
+        if rb is not None:
+            hub_rep["residual_mcp"] = rb.get("best_masked_critical_path")
+        elif stats is not None:
+            from ..pipeline.rebalance import masked_critical_path
+
+            hub_rep["residual_mcp"] = masked_critical_path(
+                stats.probe_work_per_device_shift,
+                getattr(out_plan, "step_keep", None),
+            )
+        else:
+            hub_rep["residual_mcp"] = None
+
     return TCResult(
         triangles=total,
         plan=out_plan,
@@ -707,6 +754,7 @@ def count_triangles(
         schedule=schedule,
         grid=(npods, q, q) if npods > 1 else (q, q),
         rebalance=getattr(ctx.artifact, "rebalance", None),
+        hub=hub_rep,
         autotune_mode=ctx.autotune_mode,
         measured_table_hit=ctx.measured_table_hit,
         artifact=ctx.artifact,
@@ -756,7 +804,11 @@ def count_triangles_delta(
     art2 = apply_delta(
         artifact, delta, cache=cache, rebase_every=rebase_every
     )
-    for drop in ("reorder", "cyclic_p", "rebalance_trials"):
+    # the derived artifact already fixed its relabeling, rebalance seed
+    # and hub cut at plan time — re-count kwargs that would re-plan are
+    # dropped (hub_split included: the derived plan either carries its
+    # repacked hub side or was rebased with the cfg's knob)
+    for drop in ("reorder", "cyclic_p", "rebalance_trials", "hub_split"):
         kwargs.pop(drop, None)
     res = count_triangles(
         art2.graph, mesh, plan=art2, reorder=False, rebalance_trials=0,

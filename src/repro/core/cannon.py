@@ -202,6 +202,7 @@ def build_cannon_fn(
         ),
         batched=batched,
         use_step_mask=use_step_mask,
+        hub=engine.HubCount.from_plan(plan, probe_shorter=probe_shorter),
     )
 
 
@@ -240,6 +241,12 @@ def build_cannon_stepper(
     plan = _coerce(plan)
     from .plan import resolve_compact_steps, resolve_step_mask
 
+    if getattr(plan, "hub", None) is not None:
+        raise ValueError(
+            "the checkpointed stepper counts one schedule shift at a "
+            "time and has no slot for the hub-split partial; plan with "
+            "hub_split=False for fault-tolerant runs"
+        )
     use_step_mask = resolve_step_mask(plan, use_step_mask)
     live = resolve_compact_steps(plan, compact)
     axes, schedule = _cannon_parts(
@@ -293,6 +300,12 @@ def build_cannon_tile_fn(
     plan = _coerce(plan)
     from .plan import resolve_compact_steps, resolve_step_mask
 
+    if getattr(plan, "hub", None) is not None:
+        raise ValueError(
+            "the bit-tile path stages its own arrays and would drop the "
+            "hub-split partial; plan with hub_split=False for method "
+            "'tile'"
+        )
     use_step_mask = resolve_step_mask(plan, use_step_mask)
     live = resolve_compact_steps(plan, compact)
     axes, schedule = _cannon_parts(
@@ -328,6 +341,12 @@ def build_cannon_dense_fn(
     plan = _coerce(plan)
     from .plan import resolve_compact_steps, resolve_step_mask
 
+    if getattr(plan, "hub", None) is not None:
+        raise ValueError(
+            "the dense oracle path stages its own blocks and would drop "
+            "the hub-split partial; plan with hub_split=False for "
+            "method 'dense'"
+        )
     use_step_mask = resolve_step_mask(plan, use_step_mask)
     npods = mesh.shape[pod_axis] if pod_axis else 1
     live = resolve_compact_steps(plan, compact, npods=npods)

@@ -58,6 +58,7 @@ __all__ = [
     "SummaSchedule",
     "RingSchedule",
     "Reduction",
+    "HubCount",
     "CSR_KERNELS",
     "MASK_NAME",
     "register_csr_kernel",
@@ -1165,6 +1166,68 @@ class Reduction:
 
 
 # ======================================================================
+# hub-split partial count (DESIGN.md §4.8)
+# ======================================================================
+class HubCount:
+    """The replicated hub-fragment partial sum of a hub-split plan.
+
+    Runs *outside* the schedule loop: the planner's hub-split stage
+    (:mod:`repro.pipeline.hubsplit`) stages column-strided fragment
+    CSRs + task lists per device, each device counts its slice with the
+    plain pair-search kernel once, and the partial folds into the same
+    :class:`Reduction` as the schedule total — so flat and tree
+    reductions, skip masks, and schedule compaction all compose
+    untouched (hub work can never revive an elided step).
+
+    Hub arrays ride the *static* partition specs — ``P(row, col)`` on
+    grids, ``P(axis)`` on rings — so multi-pod meshes replicate them
+    across the pod axis; :meth:`count` zeroes the partial on every pod
+    but pod 0 to keep the global sum exact.
+    """
+
+    names = ("hub_indptr", "hub_indices", "hub_ti", "hub_tj", "hub_cnt")
+
+    def __init__(self, *, dpad: int, chunk: int, sentinel: int,
+                 probe_shorter: bool = True):
+        self.dpad = int(dpad)
+        self.chunk = int(chunk)
+        self.sentinel = int(sentinel)
+        self.probe_shorter = probe_shorter
+
+    @classmethod
+    def from_plan(cls, plan, *, probe_shorter: bool = True):
+        h = getattr(plan, "hub", None)
+        if h is None:
+            return None
+        return cls(
+            dpad=h.dpad, chunk=h.chunk, sentinel=h.sentinel,
+            probe_shorter=probe_shorter,
+        )
+
+    def in_specs(self, axes):
+        if getattr(axes, "axis", None) is not None:  # ring
+            spec = P(axes.axis)
+        else:
+            spec = P(axes.row, axes.col)
+        return {k: spec for k in self.names}
+
+    def count(self, local, ctx, count_dtype):
+        with jax.named_scope("tc_hub"):
+            c = count_mod.count_pair_search(
+                local["hub_indptr"], local["hub_indices"],
+                local["hub_indptr"], local["hub_indices"],
+                local["hub_ti"], local["hub_tj"], local["hub_cnt"],
+                dpad=self.dpad, chunk=self.chunk,
+                probe_shorter=self.probe_shorter,
+                count_dtype=count_dtype, sentinel=self.sentinel,
+            )
+            pod = getattr(ctx.axes, "pod", None)
+            if pod is not None:
+                c = c * (jax.lax.axis_index(pod) == 0).astype(c.dtype)
+            return c
+
+
+# ======================================================================
 # engine builders
 # ======================================================================
 def _make_call(fn, ordered, in_specs):
@@ -1196,6 +1259,7 @@ def build_engine_fn(
     reduction: Optional[Reduction] = None,
     batched: bool = False,
     use_step_mask: bool = False,
+    hub: Optional[HubCount] = None,
 ):
     """Generate the jitted SPMD counting function for one composition.
 
@@ -1218,9 +1282,15 @@ def build_engine_fn(
     """
     reduction = (reduction or Reduction()).resolve(mesh, axes)
     count_dtype = compat.canonical_count_dtype(count_dtype)
-    ordered = list(store.names) + ([MASK_NAME] if use_step_mask else [])
+    ordered = list(store.names)
+    if hub is not None:
+        ordered += list(hub.names)
+    if use_step_mask:
+        ordered.append(MASK_NAME)
     specs = store.in_specs(axes)
     mask_lead = len(axes.all)
+    if hub is not None:
+        specs = dict(specs, **hub.in_specs(axes))
     if use_step_mask:
         specs = dict(specs, **{MASK_NAME: P(*axes.all)})
     ctx = _Ctx(axes)
@@ -1228,12 +1298,21 @@ def build_engine_fn(
     def core(local):
         local = dict(local)
         keep = local.pop(MASK_NAME, None)
+        hub_local = (
+            {k: local.pop(k) for k in hub.names} if hub is not None else None
+        )
         total = schedule.run(
             store, local, ctx, step_keep=keep, count_dtype=count_dtype
         )
+        if hub is not None:
+            total = total + hub.count(hub_local, ctx, count_dtype)
         return reduction.apply(total, axes)
 
     if batched:
+        assert hub is None, (
+            "batched engines do not take hub-split plans (per-graph hub "
+            "sides differ; plan with hub_split=False)"
+        )
         assert reduction.global_sum, (
             "batched engine returns per-graph global counts"
         )

@@ -340,14 +340,31 @@ def split_specs(specs: str) -> list:
     comma parameters: ``rmat:10,8,1;karate``).  Without a ``;`` the
     whole string is tried as a single spec first — so ``rmat:10,8,1``
     stays one graph — and only if it is not well-formed is it
-    comma-split (``rmat:10,karate`` works; mixing comma parameters and
-    comma separators needs ``;``).
+    comma-split by greedy longest-match: each element claims as many
+    comma fragments as still parse as ONE well-formed spec, so
+    ``karate,powerlaw:600,2.2`` is two specs, not three, and nested
+    parameterized specs like ``delta:5,0,powerlaw:600,2.2`` survive in
+    a list.  A fragment run that never parses passes through as-is, so
+    :func:`graph_from_spec` rejects it loudly instead of this splitter
+    silently shredding it.
     """
     if ";" in specs:
         return [s for s in specs.split(";") if s]
     if _spec_is_wellformed(specs):
         return [specs]
-    return [s for s in specs.split(",") if s]
+    parts = [s for s in specs.split(",") if s]
+    out, i = [], 0
+    while i < len(parts):
+        for j in range(len(parts), i, -1):
+            cand = ",".join(parts[i:j])
+            if _spec_is_wellformed(cand):
+                out.append(cand)
+                i = j
+                break
+        else:
+            out.append(parts[i])
+            i += 1
+    return out
 
 
 def graphs_from_specs(specs: str) -> list:

@@ -58,6 +58,8 @@ class OneDPlan:
     # tasks per device need dmax probes, the rest fit in ``d_small``)
     n_long: "int | None" = None
     d_small: "int | None" = None
+    # hub-split side (repro.pipeline.hubsplit.HubSide, DESIGN.md §4.8)
+    hub: "object | None" = None
 
     def device_arrays(self) -> Dict[str, np.ndarray]:
         out = dict(
@@ -69,6 +71,8 @@ class OneDPlan:
         )
         if self.step_keep is not None:
             out["step_keep"] = self.step_keep
+        if self.hub is not None:
+            out.update(self.hub.device_arrays())
         return out
 
     def shape_structs(self):
@@ -173,4 +177,5 @@ def build_oned_fn(
         mesh, axes, store, schedule, count_dtype=count_dtype,
         reduction=Reduction(strategy=reduce_strategy),
         batched=batched, use_step_mask=use_step_mask,
+        hub=engine.HubCount.from_plan(plan, probe_shorter=probe_shorter),
     )

@@ -314,6 +314,12 @@ class TCPlan:
     d_small: Optional[int] = None
     # padded-probe waste accounting from bucketize_plan
     bucket_stats: Optional[dict] = None
+    # hub-split side (repro.pipeline.hubsplit.HubSide) when the planner
+    # split the heavy-tailed suffix off the 2D path (DESIGN.md §4.8);
+    # its arrays join device_arrays() and the engine folds its partial
+    # into the reduction.  The plan's own arrays then cover only the
+    # residual graph.
+    hub: Optional[object] = None
 
     # ------------------------------------------------------------------
     def device_arrays(self) -> Dict[str, np.ndarray]:
@@ -330,6 +336,8 @@ class TCPlan:
             out["step_keep"] = self.step_keep
         if self.b_aug is not None:
             out["b_aug"] = self.b_aug
+        if self.hub is not None:
+            out.update(self.hub.device_arrays())
         return out
 
     def shape_structs(self):

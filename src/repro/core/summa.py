@@ -75,6 +75,8 @@ class SummaPlan:
     # "chain") — a planner cache-key component, resolved by the engine
     # via repro.core.plan.resolve_broadcast
     broadcast: str = "auto"
+    # hub-split side (repro.pipeline.hubsplit.HubSide, DESIGN.md §4.8)
+    hub: "object | None" = None
 
     def device_arrays(self) -> Dict[str, np.ndarray]:
         out = dict(
@@ -88,6 +90,8 @@ class SummaPlan:
         )
         if self.step_keep is not None:
             out["step_keep"] = self.step_keep
+        if self.hub is not None:
+            out.update(self.hub.device_arrays())
         return out
 
     def shape_structs(self):
@@ -195,4 +199,5 @@ def build_summa_fn(
         reduction=Reduction(global_sum=reduce_global),
         batched=batched,
         use_step_mask=use_step_mask,
+        hub=engine.HubCount.from_plan(plan, probe_shorter=probe_shorter),
     )

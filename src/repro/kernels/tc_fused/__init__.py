@@ -14,7 +14,9 @@ ceilings, and persist the verdict so ``method="auto"`` can resolve to
 the fused kernel only where measurement says it wins.
 """
 from .ops import (  # noqa: F401
+    VMEM_BUDGET_BYTES,
     count_pair_fused,
+    fused_gate,
     fused_panel_bytes,
     fused_tile_for,
     fused_vmem_bytes,

@@ -11,12 +11,17 @@ chunk, no aug-key traffic on panel-only steps.
 VMEM budget (DESIGN.md §5.1): the Pallas kernel stages both CSR index
 arrays whole plus two ``(tile, d)`` panels and a ``(tile, d, d)``
 equality intermediate.  ``fused_vmem_bytes`` accounts for all of it;
-when the total exceeds ``VMEM_BUDGET_BYTES`` an ``impl="auto"`` call
-quietly falls back to the lax reference while an explicit
-``impl="pallas"`` fails loudly.
+``fused_gate`` is the one decision point: when the total exceeds
+``VMEM_BUDGET_BYTES`` an ``impl="auto"`` call falls back to the lax
+reference **with a warning** while an explicit ``impl="pallas"`` fails
+loudly — and both diagnose a *hub-driven* overflow (``dmax`` dwarfing
+``d_small``, the heavy-tail signature that ``hub_split=True`` planning
+removes) so the report no longer blames the panel for a handful of hub
+rows.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax
@@ -33,6 +38,7 @@ from .tc_fused import fused_short_counts
 __all__ = [
     "VMEM_BUDGET_BYTES",
     "count_pair_fused",
+    "fused_gate",
     "fused_panel_bytes",
     "fused_tile_for",
     "fused_vmem_bytes",
@@ -64,6 +70,44 @@ def fused_panel_bytes(tile: int, d: int) -> int:
 def fused_vmem_bytes(npad_a: int, npad_b: int, tile: int, d: int) -> int:
     """Whole-kernel VMEM estimate: staged CSR index arrays + panels."""
     return 4 * (npad_a + npad_b) + fused_panel_bytes(tile, d)
+
+
+# a long-bucket dmax this far past the panel depth is the heavy-tail
+# signature: a handful of hub rows, not a uniformly deep plan
+_HUB_DMAX_RATIO = 4
+
+
+def fused_gate(
+    npad_a: int,
+    npad_b: int,
+    tile: int,
+    d: int,
+    *,
+    dmax: Optional[int] = None,
+    d_small: Optional[int] = None,
+) -> dict:
+    """The fused kernel's VMEM admission decision, as data.
+
+    Returns ``need_bytes`` / ``budget_bytes`` / ``fits`` plus
+    ``hub_driven``: True when the plan's long-bucket ``dmax`` exceeds
+    ``d_small`` by the heavy-tail ratio, i.e. the padded shapes (and any
+    overflow) are driven by a few hub rows that hub-split planning
+    (``hub_split=True``, DESIGN.md §4.8) would take off the panel's
+    plate — rather than by a uniformly deep graph where only a smaller
+    ``d_small``/``tile`` helps.
+    """
+    need = fused_vmem_bytes(npad_a, npad_b, tile, d)
+    hub_driven = (
+        dmax is not None
+        and d_small is not None
+        and int(dmax) > _HUB_DMAX_RATIO * max(1, int(d_small))
+    )
+    return dict(
+        need_bytes=int(need),
+        budget_bytes=int(VMEM_BUDGET_BYTES),
+        fits=bool(need <= VMEM_BUDGET_BYTES),
+        hub_driven=bool(hub_driven),
+    )
 
 
 def resolve_fused_impl(impl: str) -> str:
@@ -127,17 +171,39 @@ def count_pair_fused(
 
     resolved = resolve_fused_impl(impl)
     if resolved == "pallas":
-        need = fused_vmem_bytes(a_indices.shape[0], b_indices.shape[0], tile, d)
-        if need > VMEM_BUDGET_BYTES:
+        gate = fused_gate(
+            a_indices.shape[0], b_indices.shape[0], tile, d,
+            dmax=dpad_long, d_small=d_small,
+        )
+        if not gate["fits"]:
+            hint = (
+                "the overflow is hub-driven (dmax "
+                f"{dpad_long} >> d_small {d_small}): plan with "
+                "hub_split=True to count the hub rows off-panel"
+                if gate["hub_driven"]
+                else "shrink the plan's d_small/tile"
+            )
             if impl == "auto":
+                # the old gate demoted silently and the report then
+                # blamed the panel for a handful of hub rows — say what
+                # happened and why
+                warnings.warn(
+                    "fused panel kernel demoted to the lax reference: "
+                    f"needs ~{gate['need_bytes'] / 2**20:.1f} MiB VMEM > "
+                    f"budget {gate['budget_bytes'] / 2**20:.0f} MiB; "
+                    + hint,
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
                 resolved = "lax"
             else:
                 raise ValueError(
-                    f"fused panel kernel needs ~{need / 2**20:.1f} MiB VMEM "
+                    "fused panel kernel needs "
+                    f"~{gate['need_bytes'] / 2**20:.1f} MiB VMEM "
                     f"(npad_a={a_indices.shape[0]}, "
                     f"npad_b={b_indices.shape[0]}, tile={tile}, d={d}) "
-                    f"> budget {VMEM_BUDGET_BYTES / 2**20:.0f} MiB; use "
-                    "impl='lax' or shrink the plan's d_small/tile"
+                    f"> budget {gate['budget_bytes'] / 2**20:.0f} MiB; "
+                    "use impl='lax' or " + hint
                 )
 
     acc = jnp.zeros((), dtype=count_dtype)

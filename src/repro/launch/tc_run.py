@@ -100,6 +100,14 @@ def main():
                     help="skip-aware rebalance trials: search this many "
                          "relabeling seeds for the lowest masked critical "
                          "path (straggler mitigation, any schedule)")
+    ap.add_argument("--hub-split", nargs="?", const=True, default=None,
+                    type=float, metavar="C", dest="hub_split",
+                    help="hub-split planning (DESIGN.md §4.8): count rows "
+                         "with degree > C x the average degree (bare flag "
+                         "= the default C) as replicated column-strided "
+                         "fragments outside the 2D schedule; the residual "
+                         "takes the normal path with a far smaller "
+                         "critical path on heavy-tailed graphs")
     ap.add_argument("--stream", default=None, metavar="DELTA_FILE",
                     help="streaming mode: count --graph once, then apply "
                          "each JSONL line ({\"add\": [[u,v],...], "
@@ -147,6 +155,32 @@ def main():
             "drop --graphs/--ckpt-dir/--opt/--time-split/"
             "--autotune measured"
         )
+
+    if args.hub_split is not None:
+        if args.graphs:
+            raise SystemExit(
+                "--hub-split is a single-graph pipeline stage; the "
+                "batched engine shares one set of statics across graphs "
+                "and takes no hub side — drop --graphs"
+            )
+        if args.ckpt_dir:
+            raise SystemExit(
+                "--hub-split is not supported with --ckpt-dir: the "
+                "checkpointed stepper counts one shift at a time and "
+                "has no slot for the hub-split partial"
+            )
+        if args.opt:
+            raise SystemExit(
+                "--hub-split is not wired through the --opt bucketized "
+                "path; use the default path (the hub side composes with "
+                "--rebalance, --no-compact and every schedule there)"
+            )
+        if args.method in ("dense", "tile"):
+            raise SystemExit(
+                f"--hub-split is not supported with --method "
+                f"{args.method}: the {args.method} operand store stages "
+                "its own blocks and would drop the hub-split partial"
+            )
 
     if args.graphs:
         return _run_batched(args)
@@ -240,6 +274,9 @@ def main():
                 double_buffer=not args.no_double_buffer,
                 compact=False if args.no_compact else None,
                 rebalance_trials=args.rebalance,
+                hub_split=(
+                    args.hub_split if args.hub_split is not None else False
+                ),
                 reduce_strategy=args.reduce_strategy,
                 broadcast=args.broadcast,
                 autotune=args.autotune,
@@ -248,6 +285,8 @@ def main():
             times.append(res.count_seconds)
         if res.rebalance is not None:
             report.update(_rebalance_fields(res.rebalance))
+        if args.hub_split is not None:
+            report.update(_hub_fields(res.hub))
         report.update(
             triangles=res.triangles,
             ppt_seconds=round(res.preprocess_seconds, 4),
@@ -476,6 +515,24 @@ def _time_split(g, args) -> dict:
     return out
 
 
+def _hub_fields(hub: "dict | None") -> dict:
+    """Flatten a TCResult.hub report into tc_run report fields.
+
+    ``hub is None`` with the flag on means no row crossed the threshold
+    (the stage no-opped) — reported as ``hub_rows=0`` rather than
+    omitted, so scripted consumers can tell "off" from "found nothing".
+    """
+    if hub is None:
+        return dict(hub_rows=0, hub_nnz_frac=0.0)
+    out = dict(
+        hub_rows=int(hub["hub_rows"]),
+        hub_nnz_frac=round(float(hub["hub_nnz_frac"]), 4),
+    )
+    if hub.get("residual_mcp") is not None:
+        out["residual_mcp"] = hub["residual_mcp"]
+    return out
+
+
 def _rebalance_fields(rb: dict) -> dict:
     """Flatten a pipeline rebalance report into tc_run report fields:
     masked-critical-path improvement and the skipped-step delta vs the
@@ -603,13 +660,19 @@ def _run_stream(g, args):
         broadcast=args.broadcast,
     )
     t0 = time.perf_counter()
-    base = count_triangles(g, rebalance_trials=args.rebalance, **kwargs)
+    base = count_triangles(
+        g, rebalance_trials=args.rebalance,
+        hub_split=args.hub_split if args.hub_split is not None else False,
+        **kwargs,
+    )
     report = {
         "graph": args.graph, "n": g.n, "m": g.m, "stream": args.stream,
         "triangles_base": base.triangles,
         "base_seconds": round(time.perf_counter() - t0, 4),
         "grid": base.grid, "method": base.method,
     }
+    if args.hub_split is not None:
+        report.update(_hub_fields(base.hub))
     if args.verify:
         exp = triangle_count_oracle(g)
         assert base.triangles == exp, (base.triangles, exp)

@@ -85,6 +85,14 @@ class PlanArtifact:
         ``d_small``/``n_long`` split, ``tail_heavy``), or ``None``."""
         return getattr(self.plan, "autotune", None)
 
+    @property
+    def hubsplit(self) -> Optional[dict]:
+        """The hub-split stage report (``h0``, ``hub_rows``,
+        ``hub_nnz_frac``, … — DESIGN.md §4.8), or ``None`` when the
+        stage was off or no row crossed the threshold."""
+        hub = getattr(self.plan, "hub", None)
+        return None if hub is None else hub.report()
+
     def memo(self, key, build: Callable):
         """Build-once storage for derived per-artifact state.
 

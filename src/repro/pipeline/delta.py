@@ -55,6 +55,7 @@ from ..core.plan import (
 )
 from .artifact import PlanArtifact
 from .cache import PlanCache, default_cache
+from .hubsplit import hubsplit_stage
 from .stages import (
     autotune_oned_plan,
     autotune_summa_plan,
@@ -272,20 +273,38 @@ def apply_delta(
         return art
 
     depth = int(lineage["depth"]) + 1
+    hub_side = getattr(artifact.plan, "hub", None)
     if depth > int(rebase_every):
         art = _rebase(artifact, g2, cfg, cache, key, eff, eff_add, eff_rem)
+    elif hub_side is not None and not getattr(hub_side, "aligned", True):
+        # the rebalance stage relabeled the residual *after* the split,
+        # so the hub side's internal ids no longer match the artifact's
+        # id space and the parent cut cannot be reused positionally —
+        # rebase (cold re-plan, fresh cut) and say so in the report
+        art = _rebase(artifact, g2, cfg, cache, key, eff, eff_add, eff_rem)
+        art.delta_report["reason"] = "hub_split_misaligned"
     else:
         art = None
+        splice_refused = None
         if artifact.kind == "cannon" and cfg.get("skew", True):
-            art = _splice_cannon(
-                artifact, g2, eff, eff_add, eff_rem, depth, chain,
-                dirty_limit, lineage,
-            )
+            if hub_side is not None:
+                # the splice edits packed residual blocks in place; a
+                # delta edge landing on a split hub row would silently
+                # corrupt the residual/hub partition (the hub arrays
+                # have no splice path) — refuse loudly, repack instead
+                splice_refused = "hub_split"
+            else:
+                art = _splice_cannon(
+                    artifact, g2, eff, eff_add, eff_rem, depth, chain,
+                    dirty_limit, lineage,
+                )
         if art is None:
             art = _repack(
                 artifact, g2, cfg, eff, eff_add, eff_rem, depth, chain,
                 lineage,
             )
+            if splice_refused is not None:
+                art.delta_report["reason"] = splice_refused
     art.key = key
     art.stage_seconds["apply_delta"] = time.perf_counter() - t0
     cache.put(key, art)
@@ -642,11 +661,28 @@ def _repack(artifact, g2, cfg, eff, eff_add, eff_rem, depth, chain, lineage):
     kind = artifact.kind
     plan = artifact.plan
     replanned = ["decompose+pack"]
+    hub_side = getattr(plan, "hub", None)
+    g_pack = g2
+    hub2 = None
+    if hub_side is not None:
+        # re-split the merged graph at the *parent* cut (positional — a
+        # suffix cut is exact for any h0, so no re-detection drift) and
+        # pack the new residual; the ladder routed misaligned hub sides
+        # to _rebase, so the parent id space is the artifact's own
+        grid = (
+            (cfg["q"], cfg["q"]) if kind == "cannon"
+            else (cfg["r"], cfg["c"]) if kind == "summa"
+            else (cfg["p"],)
+        )
+        g_pack, hub2 = hubsplit_stage(
+            g2, grid, chunk=cfg["chunk"], h0=hub_side.h0
+        )
+        replanned.insert(0, "hubsplit")
     if kind == "cannon":
         dirty = _dirty_grid(eff, cfg["q"], cfg["q"])
         sp = plan.skew_perm
         plan2 = pack_tc_plan(
-            g2,
+            g_pack,
             cfg["q"],
             skew=cfg["skew"],
             chunk=cfg["chunk"],
@@ -670,7 +706,7 @@ def _repack(artifact, g2, cfg, eff, eff_add, eff_rem, depth, chain, lineage):
     elif kind == "summa":
         dirty = _dirty_grid(eff, cfg["r"], cfg["c"])
         plan2 = pack_summa_plan(
-            g2, cfg["r"], cfg["c"], chunk=cfg["chunk"],
+            g_pack, cfg["r"], cfg["c"], chunk=cfg["chunk"],
             step_masks=cfg["step_masks"],
             with_stats=bool(cfg["rebalance_trials"]),
         )
@@ -686,7 +722,8 @@ def _repack(artifact, g2, cfg, eff, eff_add, eff_rem, depth, chain, lineage):
     elif kind == "oned":
         dirty = _dirty_grid(eff, cfg["p"], cfg["p"])
         plan2 = pack_oned_plan(
-            g2, cfg["p"], chunk=cfg["chunk"], step_masks=cfg["step_masks"],
+            g_pack, cfg["p"], chunk=cfg["chunk"],
+            step_masks=cfg["step_masks"],
             with_stats=bool(cfg["rebalance_trials"]),
         )
         if cfg["compact"]:
@@ -699,6 +736,8 @@ def _repack(artifact, g2, cfg, eff, eff_add, eff_rem, depth, chain, lineage):
             replanned.append("autotune")
     else:
         raise ValueError(f"unknown plan kind {kind!r}")
+    if hub_side is not None:
+        plan2.hub = hub2  # may be None: the delta drained the hub side
 
     report = _report(
         "repack", int(dirty.sum()), float(dirty.mean()), None, None,
@@ -732,7 +771,8 @@ def _rebase(artifact, g2, cfg, cache, key, eff, eff_add, eff_rem):
             step_masks=cfg["step_masks"],
             rebalance_trials=cfg["rebalance_trials"],
             compact=cfg["compact"], autotune=cfg["autotune"],
-            aug_keys=cfg["aug_keys"], cache=cache,
+            aug_keys=cfg["aug_keys"],
+            hub_split=cfg.get("hub_split", False), cache=cache,
         )
     elif kind == "summa":
         dirty = _dirty_grid(eff, cfg["r"], cfg["c"])
@@ -742,7 +782,8 @@ def _rebase(artifact, g2, cfg, cache, key, eff, eff_add, eff_rem):
             step_masks=cfg["step_masks"],
             rebalance_trials=cfg["rebalance_trials"],
             compact=cfg["compact"], autotune=cfg["autotune"],
-            broadcast=cfg["broadcast"], cache=cache,
+            broadcast=cfg["broadcast"],
+            hub_split=cfg.get("hub_split", False), cache=cache,
         )
     elif kind == "oned":
         dirty = _dirty_grid(eff, cfg["p"], cfg["p"])
@@ -750,7 +791,8 @@ def _rebase(artifact, g2, cfg, cache, key, eff, eff_add, eff_rem):
             g2, cfg["p"], chunk=cfg["chunk"], reorder=cfg["reorder"],
             cyclic_p=cfg["cyclic_p"], step_masks=cfg["step_masks"],
             rebalance_trials=cfg["rebalance_trials"],
-            compact=cfg["compact"], autotune=cfg["autotune"], cache=cache,
+            compact=cfg["compact"], autotune=cfg["autotune"],
+            hub_split=cfg.get("hub_split", False), cache=cache,
         )
     else:
         raise ValueError(f"unknown plan kind {kind!r}")

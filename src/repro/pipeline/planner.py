@@ -17,6 +17,7 @@ from ..core.graph import Graph
 from ..core.plan import bucketize_plan
 from .artifact import PlanArtifact
 from .cache import PlanCache, default_cache, graph_digest
+from .hubsplit import hubsplit_stage, normalize_hub_split
 from .rebalance import rebalance_stage
 from .stages import (
     autotune_oned_plan,
@@ -68,6 +69,40 @@ def _rebalanced(g2, perm, trials, reorder, pack_trial, seconds):
     return g2, perm, best_plan, report
 
 
+def _hub_knob(hub_split, reorder, cyclic_p):
+    """Validate + canonicalize the hub-split knob (None | threshold c).
+
+    The suffix-cut decomposition needs the degree ordering: hub
+    detection is a ``searchsorted`` on the sorted degrees, and the cut
+    ``[h0, n)`` is only the hub set because hubs get the highest ids.
+    """
+    hub_c = normalize_hub_split(hub_split)
+    if hub_c is None:
+        return None
+    if not reorder:
+        raise ValueError(
+            "hub_split requires reorder=True: the hub cut is a suffix "
+            "of the degree ordering"
+        )
+    if cyclic_p is not None:
+        raise ValueError(
+            "hub_split composes with the degree ordering only; the "
+            "cyclic redistribution (cyclic_p) breaks the degree-suffix "
+            "property the cut relies on"
+        )
+    return hub_c
+
+
+def _hub_stage(g2, grid, hub_c, chunk, seconds):
+    """Run the hub-split stage (no-op when off / nothing crosses)."""
+    if hub_c is None:
+        return g2, None
+    t0 = time.perf_counter()
+    g2, hub = hubsplit_stage(g2, grid, c=hub_c, chunk=chunk)
+    seconds["hubsplit"] = time.perf_counter() - t0
+    return g2, hub
+
+
 def _drive(kind, graph, key_tail, cache, pack):
     """Shared driver: ingest (digest + cache probe) then relabel + pack."""
     cache = cache if cache is not None else default_cache()
@@ -105,6 +140,7 @@ def plan_cannon(
     compact: bool = True,
     autotune: bool = False,
     aug_keys: bool = False,
+    hub_split=False,
     cache: Optional[PlanCache] = None,
 ) -> PlanArtifact:
     """Plan the 2D-cyclic (Cannon family) execution of ``graph`` on a
@@ -128,7 +164,13 @@ def plan_cannon(
     fused panel kernel requires (DESIGN.md §5.1); ``aug_keys`` stages
     the row-encoded B intersection keys for the ``global``/``search2``
     kernels.  All three are cache-key components.
+    ``hub_split`` (False | True | threshold multiplier c) runs the
+    hub-split stage (DESIGN.md §4.8) between relabel and rebalance: the
+    heavy-tailed id suffix is cut off into replicated column-strided
+    fragments and every later stage — rebalance, σ-search, pack,
+    autotune — sees only the residual graph.
     """
+    hub_c = _hub_knob(hub_split, reorder, cyclic_p)
 
     def pack(digest, key, seconds, cache_):
         t0 = time.perf_counter()
@@ -136,6 +178,7 @@ def plan_cannon(
             graph, digest, reorder=reorder, cyclic_p=cyclic_p, cache=cache_
         )
         seconds["relabel"] = time.perf_counter() - t0
+        g2, hub = _hub_stage(g2, (q, q), hub_c, chunk, seconds)
         g2, perm, best_plan, rb = _rebalanced(
             g2, perm, rebalance_trials, reorder,
             lambda gt: pack_tc_plan(
@@ -171,10 +214,19 @@ def plan_cannon(
             plan = bucketize_plan(plan, d_small=d_small)
         if autotune:
             plan = autotune_tc_plan(plan, two_sided=(autotune == "fused"))
+        plan.hub = hub
         seconds["decompose+pack"] = time.perf_counter() - t1
+        art_graph = g2
+        if hub is not None:
+            # the plan arrays cover only the residual; the artifact must
+            # carry the *full* relabeled graph so the delta path merges
+            # edits against reality.  aligned records whether the hub
+            # side's id space survived rebalance (trial seed 0 = yes).
+            hub.aligned = rb is None or int(rb.get("best_seed", 0)) == 0
+            art_graph = graph.relabel(perm)
         return PlanArtifact(
-            kind="cannon", digest=digest, key=key, graph=g2, perm=perm,
-            plan=plan, rebalance=rb, config=config,
+            kind="cannon", digest=digest, key=key, graph=art_graph,
+            perm=perm, plan=plan, rebalance=rb, config=config,
         )
 
     config = dict(
@@ -182,12 +234,12 @@ def plan_cannon(
         with_stats=with_stats, keep_blocks=keep_blocks, bucketize=bucketize,
         d_small=d_small, step_masks=step_masks,
         rebalance_trials=rebalance_trials, compact=compact,
-        autotune=autotune, aug_keys=aug_keys,
+        autotune=autotune, aug_keys=aug_keys, hub_split=hub_c,
     )
     tail = (
         q, skew, chunk, reorder, cyclic_p, with_stats, keep_blocks,
         bucketize, d_small if bucketize else None, step_masks,
-        rebalance_trials, compact, autotune, aug_keys,
+        rebalance_trials, compact, autotune, aug_keys, hub_c,
     )
     return _drive("cannon", graph, tail, cache, pack)
 
@@ -205,6 +257,7 @@ def plan_summa(
     compact: bool = True,
     autotune: bool = False,
     broadcast: str = "auto",
+    hub_split=False,
     cache: Optional[PlanCache] = None,
 ) -> PlanArtifact:
     """Plan the SUMMA execution on an ``r x c`` grid, through the cache.
@@ -215,7 +268,10 @@ def plan_summa(
     ``broadcast`` records the panel-broadcast strategy the plan is
     staged for (``"auto"``/``"onehot"``/``"chain"`` — DESIGN.md §4.5,
     resolved by the engine builder) — like every planner knob it is a
-    cache-key component, so strategy A/B runs never share artifacts."""
+    cache-key component, so strategy A/B runs never share artifacts.
+    ``hub_split`` cuts the heavy-tailed suffix off the 2D path
+    (DESIGN.md §4.8) before rebalance/pack."""
+    hub_c = _hub_knob(hub_split, reorder, cyclic_p)
 
     def pack(digest, key, seconds, cache_):
         t0 = time.perf_counter()
@@ -223,6 +279,7 @@ def plan_summa(
             graph, digest, reorder=reorder, cyclic_p=cyclic_p, cache=cache_
         )
         seconds["relabel"] = time.perf_counter() - t0
+        g2, hub = _hub_stage(g2, (r, c), hub_c, chunk, seconds)
         g2, perm, best_plan, rb = _rebalanced(
             g2, perm, rebalance_trials, reorder,
             lambda gt: pack_summa_plan(
@@ -243,20 +300,26 @@ def plan_summa(
         if autotune:
             plan = autotune_summa_plan(plan, two_sided=(autotune == "fused"))
         plan.broadcast = broadcast
+        plan.hub = hub
         seconds["decompose+pack"] = time.perf_counter() - t1
+        art_graph = g2
+        if hub is not None:
+            hub.aligned = rb is None or int(rb.get("best_seed", 0)) == 0
+            art_graph = graph.relabel(perm)
         return PlanArtifact(
-            kind="summa", digest=digest, key=key, graph=g2, perm=perm,
-            plan=plan, rebalance=rb, config=config,
+            kind="summa", digest=digest, key=key, graph=art_graph,
+            perm=perm, plan=plan, rebalance=rb, config=config,
         )
 
     config = dict(
         r=r, c=c, chunk=chunk, reorder=reorder, cyclic_p=cyclic_p,
         step_masks=step_masks, rebalance_trials=rebalance_trials,
         compact=compact, autotune=autotune, broadcast=broadcast,
+        hub_split=hub_c,
     )
     tail = (
         r, c, chunk, reorder, cyclic_p, step_masks, rebalance_trials,
-        compact, autotune, broadcast,
+        compact, autotune, broadcast, hub_c,
     )
     return _drive("summa", graph, tail, cache, pack)
 
@@ -272,13 +335,17 @@ def plan_oned(
     rebalance_trials: int = 0,
     compact: bool = True,
     autotune: bool = False,
+    hub_split=False,
     cache: Optional[PlanCache] = None,
 ) -> PlanArtifact:
     """Plan the 1D-ring baseline over ``p`` devices, through the cache.
 
     ``compact`` stages the globally-live ring steps (dead steps become
     fused multi-hop rotations, DESIGN.md §4.4); ``autotune`` tunes the
-    chunk (the ring's global-id columns rule out the two-level split)."""
+    chunk (the ring's global-id columns rule out the two-level split);
+    ``hub_split`` cuts the heavy-tailed suffix off the ring path
+    (DESIGN.md §4.8 — tasks round-robin over the ring, full fragments)."""
+    hub_c = _hub_knob(hub_split, reorder, cyclic_p)
 
     def pack(digest, key, seconds, cache_):
         t0 = time.perf_counter()
@@ -286,6 +353,7 @@ def plan_oned(
             graph, digest, reorder=reorder, cyclic_p=cyclic_p, cache=cache_
         )
         seconds["relabel"] = time.perf_counter() - t0
+        g2, hub = _hub_stage(g2, (p,), hub_c, chunk, seconds)
         g2, perm, best_plan, rb = _rebalanced(
             g2, perm, rebalance_trials, reorder,
             lambda gt: pack_oned_plan(
@@ -305,19 +373,24 @@ def plan_oned(
             plan = compact_stage(plan)  # ring steps have no free order
         if autotune:
             plan = autotune_oned_plan(plan, two_sided=(autotune == "fused"))
+        plan.hub = hub
         seconds["decompose+pack"] = time.perf_counter() - t1
+        art_graph = g2
+        if hub is not None:
+            hub.aligned = rb is None or int(rb.get("best_seed", 0)) == 0
+            art_graph = graph.relabel(perm)
         return PlanArtifact(
-            kind="oned", digest=digest, key=key, graph=g2, perm=perm,
-            plan=plan, rebalance=rb, config=config,
+            kind="oned", digest=digest, key=key, graph=art_graph,
+            perm=perm, plan=plan, rebalance=rb, config=config,
         )
 
     config = dict(
         p=p, chunk=chunk, reorder=reorder, cyclic_p=cyclic_p,
         step_masks=step_masks, rebalance_trials=rebalance_trials,
-        compact=compact, autotune=autotune,
+        compact=compact, autotune=autotune, hub_split=hub_c,
     )
     tail = (
         p, chunk, reorder, cyclic_p, step_masks, rebalance_trials,
-        compact, autotune,
+        compact, autotune, hub_c,
     )
     return _drive("oned", graph, tail, cache, pack)

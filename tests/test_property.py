@@ -192,3 +192,50 @@ def test_rebalance_plan_cache_keying(g, trials):
     assert a2.cache_hit and a2 is a1
     a3 = plan_cannon(g, 2, rebalance_trials=trials + 1, cache=cache)
     assert not a3.cache_hit and a3.key != a1.key
+
+
+@given(small_graphs(),
+       st.sampled_from(["cannon", "summa", "oned"]),
+       st.sampled_from([True, 0.0, 2.0]),
+       st.sampled_from([None, False]))
+@settings(max_examples=20, deadline=None)
+def test_hub_split_count_parity_property(g, schedule, hub_split, compact):
+    """Counts are byte-identical with the hub-split stage on and off,
+    for arbitrary small graphs (edgeless and all-hub degenerates
+    included via c=0) across schedules and compaction — DESIGN.md §4.8."""
+    base = count_triangles(g, q=1, schedule=schedule, compact=compact)
+    split = count_triangles(
+        g, q=1, schedule=schedule, compact=compact, hub_split=hub_split
+    )
+    assert split.triangles == base.triangles
+
+
+@given(small_graphs())
+@settings(max_examples=15, deadline=None)
+def test_hub_split_residual_partitions_edges(g):
+    """residual nnz + hub nnz == m, the residual holds every U edge
+    below the cut, and the suffix cut is exact at ANY h0 (not just the
+    detected one): T(residual) + hub partial == T(G)."""
+    from repro.core.preprocess import degree_order
+    from repro.pipeline.hubsplit import hubsplit_stage
+
+    g2 = g.relabel(degree_order(g))
+    exp = triangle_count_oracle(g2)
+    for h0 in {0, g2.n // 2, max(0, g2.n - 3)}:
+        res, hub = hubsplit_stage(g2, (2, 2), h0=h0)
+        if hub is None:
+            assert triangle_count_oracle(res) == exp
+            continue
+        assert res.edges.shape[0] + hub.hub_nnz == g2.m
+        assert (res.edges[:, 1] < h0).all()
+        # host-side oracle of the decomposition: residual triangles plus
+        # per-task high-fragment intersections
+        hi = g2.edges[g2.edges[:, 1] >= h0]
+        frag = {}
+        for v, k in hi:
+            frag.setdefault(int(v), set()).add(int(k))
+        partial = sum(
+            len(frag.get(int(i), set()) & frag.get(int(j), set()))
+            for i, j in g2.edges
+        )
+        assert triangle_count_oracle(res) + partial == exp
