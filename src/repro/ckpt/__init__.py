@@ -14,5 +14,6 @@ from .checkpoint import (  # noqa: F401
     load_checkpoint,
     save_checkpoint,
     latest_step,
+    quarantine_step,
 )
 from .manager import CheckpointManager  # noqa: F401

@@ -10,7 +10,12 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = [
+    "save_checkpoint",
+    "load_checkpoint",
+    "latest_step",
+    "quarantine_step",
+]
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -63,6 +68,20 @@ def latest_step(directory: str) -> Optional[int]:
         if f.startswith("step_") and f.endswith(".json")
     ]
     return max(steps) if steps else None
+
+
+def quarantine_step(directory: str, step: int) -> list:
+    """Rename a damaged step's files to ``*.corrupt`` so it stops being
+    the latest checkpoint (``latest_step`` matches the ``.json`` suffix)
+    while keeping the bytes on disk for post-mortems.  Returns the
+    quarantined paths."""
+    moved = []
+    for suffix in (".json", ".npz"):
+        p = os.path.join(directory, f"step_{step:010d}{suffix}")
+        if os.path.exists(p):
+            os.replace(p, p + ".corrupt")
+            moved.append(p + ".corrupt")
+    return moved
 
 
 def load_checkpoint(

@@ -1,14 +1,34 @@
-"""Checkpoint manager: rotation + async writer thread."""
+"""Checkpoint manager: rotation + async writer thread + quarantine."""
 from __future__ import annotations
 
+import logging
 import os
 import queue
 import threading
+import zipfile
 from typing import Optional
 
-from .checkpoint import latest_step, load_checkpoint, save_checkpoint
+from .checkpoint import (
+    latest_step,
+    load_checkpoint,
+    quarantine_step,
+    save_checkpoint,
+)
+
+log = logging.getLogger(__name__)
 
 __all__ = ["CheckpointManager"]
+
+# restore failures that mean "this checkpoint is damaged" (sha mismatch,
+# truncated/unreadable payload, mangled manifest) — NOT structural
+# mismatches like KeyError, which callers use to detect cross-mode
+# resumes and must keep seeing
+_CORRUPTION_ERRORS = (
+    OSError,  # includes the IOError sha-mismatch raise
+    ValueError,  # np.load on a mangled zip / json decode errors
+    EOFError,
+    zipfile.BadZipFile,
+)
 
 
 class CheckpointManager:
@@ -16,7 +36,9 @@ class CheckpointManager:
 
     The async path snapshots device arrays to host (blocking only on the
     transfer), then serializes + fsyncs on a worker thread so the train
-    loop overlaps the write with the next steps.
+    loop overlaps the write with the next steps.  Writer errors surface
+    on the *next* ``save()`` (and on ``wait()``/``close()``) — a dying
+    writer must not silently drop every subsequent checkpoint.
     """
 
     def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
@@ -30,6 +52,21 @@ class CheckpointManager:
             self._worker = threading.Thread(target=self._run, daemon=True)
             self._worker.start()
 
+    def _save_now(self, step: int, tree, extra):
+        from ..runtime import faultinject
+
+        # raising faults fire before the write; a CkptCorrupt site fires
+        # on the post-write call (passing the payload path) and flips a
+        # byte so restore exercises verify + quarantine
+        faultinject.fire("ckpt_save", step=step)
+        save_checkpoint(self.directory, step, tree, extra=extra)
+        self._rotate()
+        faultinject.fire(
+            "ckpt_save",
+            step=step,
+            path=os.path.join(self.directory, f"step_{step:010d}.npz"),
+        )
+
     def _run(self):
         while True:
             item = self._q.get()
@@ -37,14 +74,23 @@ class CheckpointManager:
                 return
             step, tree, extra = item
             try:
-                save_checkpoint(self.directory, step, tree, extra=extra)
-                self._rotate()
+                self._save_now(step, tree, extra)
             except Exception as e:  # noqa: BLE001
                 self._errors.append(e)
             finally:
                 self._q.task_done()
 
+    def _raise_pending(self):
+        if self._errors:
+            err = self._errors[0]
+            self._errors = []
+            raise RuntimeError(
+                "checkpoint writer failed on an earlier save; later "
+                "checkpoints would be silently dropped"
+            ) from err
+
     def save(self, step: int, tree, *, extra=None):
+        self._raise_pending()
         if self.async_save:
             import jax
             import numpy as np
@@ -52,14 +98,12 @@ class CheckpointManager:
             host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
             self._q.put((step, host_tree, extra))
         else:
-            save_checkpoint(self.directory, step, tree, extra=extra)
-            self._rotate()
+            self._save_now(step, tree, extra)
 
     def wait(self):
         if self.async_save:
             self._q.join()
-        if self._errors:
-            raise self._errors[0]
+        self._raise_pending()
 
     def _rotate(self):
         steps = sorted(
@@ -73,16 +117,37 @@ class CheckpointManager:
                 if os.path.exists(p):
                     os.remove(p)
 
-    def restore_latest(self, like, *, mesh=None, specs=None):
-        step = latest_step(self.directory)
-        if step is None:
-            return None, None, None
-        tree, extra = load_checkpoint(
-            self.directory, step, like, mesh=mesh, specs=specs
-        )
-        return step, tree, extra
+    def restore_latest(self, like, *, mesh=None, specs=None,
+                       quarantine: bool = True):
+        """Restore the newest *intact* checkpoint.
+
+        A step whose payload fails digest verification (or is
+        unreadable) is quarantined — renamed to ``*.corrupt`` so it
+        stops being the latest — and the previous step is tried, until
+        one restores or none remain.  ``quarantine=False`` restores the
+        pre-PR-10 crash-on-corruption behavior.
+        """
+        while True:
+            step = latest_step(self.directory)
+            if step is None:
+                return None, None, None
+            try:
+                tree, extra = load_checkpoint(
+                    self.directory, step, like, mesh=mesh, specs=specs
+                )
+                return step, tree, extra
+            except _CORRUPTION_ERRORS as e:
+                if not quarantine:
+                    raise
+                quarantine_step(self.directory, step)
+                log.warning(
+                    "checkpoint step %d is corrupt (%s); quarantined, "
+                    "falling back to the previous step",
+                    step, e,
+                )
 
     def close(self):
         if self.async_save and self._worker is not None:
             self._q.put(None)
             self._worker.join(timeout=10)
+        self._raise_pending()

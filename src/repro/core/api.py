@@ -75,6 +75,10 @@ class TCResult:
     # apply_delta report (level, dirty blocks/cells, replanned stages,
     # rebased) when the count came through count_triangles_delta
     delta: Optional[dict] = None
+    # structured attempt/demotion/regrid record attached by
+    # repro.runtime.supervisor.supervised_count; None on unsupervised
+    # runs (DESIGN.md §8)
+    supervision: Optional[dict] = None
 
 
 def make_grid_mesh(q: int, row_axis="data", col_axis="model", npods=1, pod_axis="pod"):
@@ -167,7 +171,20 @@ class RunContext:
     # point is reported as preprocess time, not count time
     counting_started_at: Optional[float] = None
 
-    def mark_counting(self) -> None:
+    def mark_counting(self, plan=None) -> None:
+        """Host planning/staging is done; counting starts now.  Also the
+        fault-injection window for this count: ``device_stage`` fires
+        here, and with a ``plan`` each live original step index fires a
+        ``step`` point before dispatch — so a fault armed at an elided
+        step never fires, composing with schedule compaction."""
+        from ..runtime import faultinject
+
+        if faultinject.is_armed():
+            faultinject.fire("device_stage")
+            if plan is not None:
+                compacted = self.compact is not False
+                for s in faultinject.live_step_indices(plan, compacted):
+                    faultinject.fire("step", step=s)
         self.counting_started_at = time.perf_counter()
 
     def memo(self, key, build: Callable):
@@ -321,7 +338,7 @@ def _run_cannon(graph: Graph, mesh, ctx: RunContext):
             "dense_staged",
             lambda: {k: jnp.asarray(v) for k, v in dense.items()},
         )
-        ctx.mark_counting()
+        ctx.mark_counting(plan)
         fn = ctx.memo(
             ("dense_fn", mesh, ctx.use_step_mask, ctx.double_buffer,
              ctx.compact, ctx.reduce_strategy),
@@ -348,7 +365,7 @@ def _run_cannon(graph: Graph, mesh, ctx: RunContext):
         # interpret mode only off-TPU: Mosaic lowering needs real hardware,
         # and silently interpreting on TPU would be orders of magnitude slow
         interpret = jax.default_backend() != "tpu"
-        ctx.mark_counting()
+        ctx.mark_counting(plan)
         fn = ctx.memo(
             ("tile_fn", mesh, interpret, str(ctx.count_dtype),
              ctx.use_step_mask, ctx.double_buffer, ctx.compact),
@@ -383,7 +400,7 @@ def _run_cannon(graph: Graph, mesh, ctx: RunContext):
         staged = ctx.artifact.staged()
     else:
         staged = {k: jnp.asarray(v) for k, v in plan.device_arrays().items()}
-    ctx.mark_counting()
+    ctx.mark_counting(plan)
     fn = ctx.memo(
         ("fn", mesh, ctx.method, ctx.probe_shorter, str(ctx.count_dtype),
          pod_axis, ctx.use_step_mask, ctx.double_buffer, ctx.compact,
@@ -452,7 +469,7 @@ def _run_summa(graph: Graph, mesh, ctx: RunContext):
         staged = {
             k: jnp.asarray(v) for k, v in splan.device_arrays().items()
         }
-    ctx.mark_counting()
+    ctx.mark_counting(splan)
     fn = ctx.memo(
         ("fn", mesh, ctx.method, ctx.probe_shorter, str(ctx.count_dtype),
          ctx.use_step_mask, ctx.compact, ctx.broadcast,
@@ -523,7 +540,7 @@ def _run_oned(graph: Graph, mesh, ctx: RunContext):
         staged = {
             k: jnp.asarray(v) for k, v in oplan.device_arrays().items()
         }
-    ctx.mark_counting()
+    ctx.mark_counting(oplan)
     fn = ctx.memo(
         ("fn", flat_mesh, ctx.method, ctx.probe_shorter,
          str(ctx.count_dtype), ctx.use_step_mask, ctx.compact,
@@ -591,6 +608,7 @@ def count_triangles(
     autotune: str = "percentile",
     measured_dir: Optional[str] = None,
     fused_impl: str = "auto",
+    fault_plan=None,
 ) -> TCResult:
     """Count triangles with the paper's 2D algorithm.
 
@@ -641,6 +659,13 @@ def count_triangles(
     table of DESIGN.md §4.6, under which ``method="auto"`` resolves to
     ``fused`` exactly where measurement says it beats the incumbent;
     ``measured_dir`` overrides the table directory).
+
+    ``fault_plan`` arms a :class:`repro.runtime.FaultPlan` of
+    deterministic typed faults for the duration of this call (testing
+    the recovery paths without real hardware faults — DESIGN.md §8);
+    recovery itself lives in
+    :func:`repro.runtime.supervisor.supervised_count`, which retries,
+    demotes and regrids around this function.
     """
     if autotune not in ("percentile", "measured"):
         raise ValueError(
@@ -720,7 +745,10 @@ def count_triangles(
     )
     if artifact is not None:
         ctx.artifact = artifact
-    total, out_plan = spec.runner(graph, mesh, ctx)
+    from ..runtime import faultinject
+
+    with faultinject.armed(fault_plan):
+        total, out_plan = spec.runner(graph, mesh, ctx)
     total = compat.check_count_overflow(total, count_dtype)
     t2 = time.perf_counter()
     # host-side planning/staging counts as preprocessing (paper's ppt),

@@ -248,6 +248,9 @@ def _fused_factory(*, dpad, chunk, probe_shorter, count_dtype, sentinel,
             "autotune='fused' providing n_long/d_small"
         )
     from ..kernels.tc_fused import count_pair_fused
+    from ..runtime import faultinject
+
+    faultinject.fire("fused")
 
     tile = extra.get("fused_tile")
     impl = extra.get("fused_impl", "auto")

@@ -186,15 +186,18 @@ def count_pair_fused(
             if impl == "auto":
                 # the old gate demoted silently and the report then
                 # blamed the panel for a handful of hub rows — say what
-                # happened and why
-                warnings.warn(
+                # happened and why; supervised runs additionally audit
+                # the demotion on TCResult.supervision (DESIGN.md §8)
+                reason = (
                     "fused panel kernel demoted to the lax reference: "
                     f"needs ~{gate['need_bytes'] / 2**20:.1f} MiB VMEM > "
                     f"budget {gate['budget_bytes'] / 2**20:.0f} MiB; "
-                    + hint,
-                    RuntimeWarning,
-                    stacklevel=2,
+                    + hint
                 )
+                warnings.warn(reason, RuntimeWarning, stacklevel=2)
+                from ...runtime.supervisor import note_demotion
+
+                note_demotion("fused_impl", "pallas", "lax", reason=reason)
                 resolved = "lax"
             else:
                 raise ValueError(

@@ -25,37 +25,112 @@ import argparse
 import time
 
 
+def _serve_fault_plan(args):
+    if not getattr(args, "inject_faults", None):
+        return None
+    from ..runtime import FaultPlan
+
+    return FaultPlan.parse(args.inject_faults)
+
+
+def _new_request_stats():
+    return {"ok": 0, "failed": 0, "restarts": 0}
+
+
+def _serve_request(args, stats, label, fn):
+    """One serving request under per-request supervision: bounded
+    retries with backoff and an optional cooperative deadline.
+
+    Returns the result, or ``None`` when the request exhausted its retry
+    budget — the failure is recorded and the serving loop moves on,
+    until the session-wide ``--failure-budget`` trips (``SystemExit``).
+    A ``--verify`` mismatch is a ``SystemExit``, never retried: a wrong
+    count is a correctness bug, not a transient fault.
+    """
+    from ..runtime import BackoffPolicy, Supervisor
+
+    sup = Supervisor(
+        max_restarts=args.request_retries,
+        attempt_deadline=args.request_deadline,
+        backoff=BackoffPolicy(base=0.05, max_delay=0.5),
+        retry_on=(Exception,),
+    )
+
+    def attempt(i, guard):
+        guard()
+        out = fn()
+        guard()  # cooperative: a slow dispatch is recorded post hoc
+        return out
+
+    try:
+        res = sup.run(attempt)
+    except Exception as e:
+        stats["failed"] += 1
+        stats["restarts"] += sup.report.restarts
+        print(
+            f"{label} FAILED after {sup.report.restarts - 1} retries: "
+            f"{type(e).__name__}: {e}"
+        )
+        if stats["failed"] > args.failure_budget:
+            raise SystemExit(
+                f"failure budget exhausted: {stats['failed']} failed "
+                f"requests > budget {args.failure_budget}"
+            ) from e
+        return None
+    stats["ok"] += 1
+    stats["restarts"] += sup.report.restarts
+    return res
+
+
+def _print_request_stats(args, stats):
+    print(
+        f"supervision: {stats['ok']} ok, {stats['failed']} failed, "
+        f"{stats['restarts']} restarts "
+        f"(retries/request {args.request_retries}, "
+        f"failure budget {args.failure_budget})"
+    )
+
+
 def _serve_tc(args):
-    from ..core.generators import graphs_from_specs
     from ..pipeline import count_triangles_many, default_cache
+    from ..core.generators import graphs_from_specs
+    from ..runtime import faultinject
 
     graphs = graphs_from_specs(args.tc_graphs)
     expected = None
     res = None
-    for rnd in range(args.rounds):
-        t0 = time.perf_counter()
-        res = count_triangles_many(
-            graphs,
-            q=args.grid,
-            schedule=args.schedule,
-            method=args.method,
-        )
-        dt = time.perf_counter() - t0
-        print(
-            f"round {rnd}: triangles={res.triangles} in {dt*1e3:.1f}ms "
-            f"({len(graphs)/dt:.1f} graphs/s, "
-            f"{'warm' if res.cache_hit else 'cold'})"
-        )
-        if args.verify:
-            # exact host oracle — O(m·d) sequential, small graphs only
-            if expected is None:
-                from ..core import triangle_count_oracle
+    req = _new_request_stats()
+    with faultinject.armed(_serve_fault_plan(args)):
+        for rnd in range(args.rounds):
+            t0 = time.perf_counter()
+            got = _serve_request(
+                args, req, f"round {rnd}",
+                lambda: count_triangles_many(
+                    graphs,
+                    q=args.grid,
+                    schedule=args.schedule,
+                    method=args.method,
+                ),
+            )
+            if got is None:
+                continue
+            res = got
+            dt = time.perf_counter() - t0
+            print(
+                f"round {rnd}: triangles={res.triangles} in {dt*1e3:.1f}ms "
+                f"({len(graphs)/dt:.1f} graphs/s, "
+                f"{'warm' if res.cache_hit else 'cold'})"
+            )
+            if args.verify:
+                # exact host oracle — O(m·d) sequential, small graphs only
+                if expected is None:
+                    from ..core import triangle_count_oracle
 
-                expected = [triangle_count_oracle(g) for g in graphs]
-            if res.triangles != expected:
-                raise SystemExit(
-                    f"count mismatch: {res.triangles} != {expected}"
-                )
+                    expected = [triangle_count_oracle(g) for g in graphs]
+                if res.triangles != expected:
+                    raise SystemExit(
+                        f"count mismatch: {res.triangles} != {expected}"
+                    )
     stats = default_cache().stats()
     print(
         f"plan cache: {stats['hits']} hits / {stats['misses']} misses"
@@ -65,6 +140,7 @@ def _serve_tc(args):
             else ""
         )
     )
+    _print_request_stats(args, req)
 
 
 def _serve_tc_stream(args):
@@ -73,36 +149,60 @@ def _serve_tc_stream(args):
     Round 0 plans cold; every later round draws a deterministic random
     flip delta, applies it through :func:`repro.pipeline.apply_delta`
     (splice / repack / rebase ladder) and re-counts from the derived
-    artifact — the serving analogue of ``tc_run --stream``."""
+    artifact — the serving analogue of ``tc_run --stream``.
+
+    Each round runs as a supervised request: a failed round (retry
+    budget exhausted) does **not** advance the live graph or the derived
+    artifact — completed rounds are the only portable boundary for the
+    delta lineage (DESIGN.md §8), so the next round re-derives its delta
+    from the last good state."""
     from ..core import count_triangles, count_triangles_delta
     from ..pipeline import EdgeDelta, default_cache
+    from ..runtime import faultinject
 
     g = _spec_graph(args.tc_stream)
     kwargs = dict(q=args.grid, schedule=args.schedule, method=args.method)
-    t0 = time.perf_counter()
-    res = count_triangles(g, **kwargs)
-    print(
-        f"round 0: triangles={res.triangles} in "
-        f"{(time.perf_counter() - t0) * 1e3:.1f}ms (cold plan)"
-    )
-    _maybe_verify(args, g, res.triangles)
-    art = res.artifact
-    for rnd in range(1, args.rounds):
-        delta = EdgeDelta.random_flips(g, args.delta_edges, seed=rnd)
+    req = _new_request_stats()
+    with faultinject.armed(_serve_fault_plan(args)):
         t0 = time.perf_counter()
-        res = count_triangles_delta(g, delta, artifact=art, **kwargs)
-        dt = time.perf_counter() - t0
-        art, rep = res.artifact, res.delta
-        g = delta.apply_to(g)
+        res = _serve_request(
+            args, req, "round 0", lambda: count_triangles(g, **kwargs)
+        )
+        if res is None:
+            raise SystemExit(
+                "round 0 (the cold base count) failed: no artifact to "
+                "stream deltas against"
+            )
         print(
-            f"round {rnd}: triangles={res.triangles} in {dt*1e3:.1f}ms "
-            f"({rep['level']}, {rep['dirty_blocks']} dirty blocks, "
-            f"+{rep['edges_added']}/-{rep['edges_removed']} edges"
-            f"{', rebased' if rep['rebased'] else ''})"
+            f"round 0: triangles={res.triangles} in "
+            f"{(time.perf_counter() - t0) * 1e3:.1f}ms (cold plan)"
         )
         _maybe_verify(args, g, res.triangles)
+        art = res.artifact
+        for rnd in range(1, args.rounds):
+            delta = EdgeDelta.random_flips(g, args.delta_edges, seed=rnd)
+            t0 = time.perf_counter()
+            res = _serve_request(
+                args, req, f"round {rnd}",
+                lambda: count_triangles_delta(
+                    g, delta, artifact=art, **kwargs
+                ),
+            )
+            if res is None:
+                continue  # failed round: g/art unchanged (last good state)
+            dt = time.perf_counter() - t0
+            art, rep = res.artifact, res.delta
+            g = delta.apply_to(g)
+            print(
+                f"round {rnd}: triangles={res.triangles} in {dt*1e3:.1f}ms "
+                f"({rep['level']}, {rep['dirty_blocks']} dirty blocks, "
+                f"+{rep['edges_added']}/-{rep['edges_removed']} edges"
+                f"{', rebased' if rep['rebased'] else ''})"
+            )
+            _maybe_verify(args, g, res.triangles)
     stats = default_cache().stats()
     print(f"plan cache: {stats['hits']} hits / {stats['misses']} misses")
+    _print_request_stats(args, req)
 
 
 def _spec_graph(spec):
@@ -143,6 +243,21 @@ def main():
     ap.add_argument("--verify", action="store_true",
                     help="check every round against the exact host "
                          "oracle (small graphs only)")
+    ap.add_argument("--request-retries", type=int, default=2,
+                    help="TC serving: max retries per round before the "
+                         "round is recorded as failed")
+    ap.add_argument("--request-deadline", type=float, default=None,
+                    help="TC serving: cooperative per-round deadline in "
+                         "seconds (a round past it is retried, then "
+                         "failed)")
+    ap.add_argument("--failure-budget", type=int, default=3,
+                    help="TC serving: failed rounds tolerated per "
+                         "session before the server exits")
+    ap.add_argument("--inject-faults", default=None, metavar="SPEC",
+                    help="deterministic typed fault injection across "
+                         "the serving session (same grammar as tc_run; "
+                         "DESIGN.md §8) — exercises the per-request "
+                         "retry/failure-budget path")
     args = ap.parse_args()
 
     if args.tc_graphs:

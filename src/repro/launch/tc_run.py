@@ -96,6 +96,26 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--fail-at-shift", type=int, default=None,
                     help="inject one failure at this shift (FT demo)")
+    ap.add_argument("--inject-faults", default=None, metavar="SPEC",
+                    help="deterministic typed fault injection (DESIGN.md "
+                         "§8): ';'-separated sites "
+                         "point[@STEP][=FAULT[:LOST]][*TIMES] over points "
+                         "plan_stage|device_stage|step|fused|delta_splice|"
+                         "ckpt_save, e.g. 'step@1' or "
+                         "'step@0=devicelost:5;ckpt_save=ckptcorrupt'; "
+                         "implies supervised execution — the run must "
+                         "still produce the exact count")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run under the restart supervisor (backoff + "
+                         "jitter, restart budget, degradation ladder, "
+                         "DeviceLost regrid) even without injected "
+                         "faults; the report gains supervision_* fields")
+    ap.add_argument("--restart-budget", type=int, default=5,
+                    help="supervised runs: max restarts before giving up")
+    ap.add_argument("--attempt-deadline", type=float, default=None,
+                    help="supervised runs: cooperative per-attempt "
+                         "deadline in seconds (checked at step/attempt "
+                         "boundaries)")
     ap.add_argument("--rebalance", type=int, default=0,
                     help="skip-aware rebalance trials: search this many "
                          "relabeling seeds for the lowest masked critical "
@@ -182,6 +202,21 @@ def main():
                 "its own blocks and would drop the hub-split partial"
             )
 
+    supervised = bool(args.inject_faults or args.supervise)
+    if supervised and (args.graphs or args.opt or args.time_split
+                       or args.stream):
+        raise SystemExit(
+            "--inject-faults/--supervise cover single-graph engine runs "
+            "and --ckpt-dir stepper runs; drop --graphs/--opt/"
+            "--time-split/--stream (the serve front-end has its own "
+            "per-request supervision)"
+        )
+    fault_plan = None
+    if args.inject_faults:
+        from ..runtime import FaultPlan
+
+        fault_plan = FaultPlan.parse(args.inject_faults)
+
     if args.graphs:
         return _run_batched(args)
 
@@ -193,7 +228,7 @@ def main():
     report = {"graph": args.graph, "n": g.n, "m": g.m}
 
     if args.ckpt_dir:
-        total, timings = _run_checkpointed(g, args)
+        total, timings = _run_checkpointed(g, args, fault_plan=fault_plan)
         report.update(timings)
     else:
         t0 = time.perf_counter()
@@ -260,29 +295,43 @@ def main():
             print(_json.dumps(report) if args.json else
                   "\n".join(f"{k}: {v}" for k, v in report.items()))
             return
+        count_kwargs = dict(
+            q=args.grid,
+            npods=args.pods,
+            schedule=args.schedule,
+            method=args.method,
+            chunk=args.chunk,
+            probe_shorter=not args.no_probe_shorter,
+            use_step_mask=False if args.no_skip_mask else None,
+            double_buffer=not args.no_double_buffer,
+            compact=False if args.no_compact else None,
+            rebalance_trials=args.rebalance,
+            hub_split=(
+                args.hub_split if args.hub_split is not None else False
+            ),
+            reduce_strategy=args.reduce_strategy,
+            broadcast=args.broadcast,
+            autotune=args.autotune,
+            measured_dir=args.measured_dir,
+        )
         times = []
-        for _ in range(max(1, args.repeat)):
-            res = count_triangles(
-                g,
-                q=args.grid,
-                npods=args.pods,
-                schedule=args.schedule,
-                method=args.method,
-                chunk=args.chunk,
-                probe_shorter=not args.no_probe_shorter,
-                use_step_mask=False if args.no_skip_mask else None,
-                double_buffer=not args.no_double_buffer,
-                compact=False if args.no_compact else None,
-                rebalance_trials=args.rebalance,
-                hub_split=(
-                    args.hub_split if args.hub_split is not None else False
-                ),
-                reduce_strategy=args.reduce_strategy,
-                broadcast=args.broadcast,
-                autotune=args.autotune,
-                measured_dir=args.measured_dir,
+        if supervised:
+            from ..runtime import BackoffPolicy, Supervisor, supervised_count
+
+            sup = Supervisor(
+                max_restarts=args.restart_budget,
+                attempt_deadline=args.attempt_deadline,
+                backoff=BackoffPolicy(base=0.02, max_delay=0.5),
+            )
+            res = supervised_count(
+                g, supervisor=sup, fault_plan=fault_plan, **count_kwargs
             )
             times.append(res.count_seconds)
+            report.update(_supervision_fields(res.supervision))
+        else:
+            for _ in range(max(1, args.repeat)):
+                res = count_triangles(g, **count_kwargs)
+                times.append(res.count_seconds)
         if res.rebalance is not None:
             report.update(_rebalance_fields(res.rebalance))
         if args.hub_split is not None:
@@ -553,6 +602,29 @@ def _rebalance_fields(rb: dict) -> dict:
     )
 
 
+def _supervision_fields(sup: "dict | None") -> dict:
+    """Flatten a TCResult.supervision record (or a SupervisionReport
+    dict) into tc_run report fields.  Attempt-by-attempt detail stays
+    nested under ``supervision_attempts``; demotions/regrids are emitted
+    only when non-empty so fault-free supervised runs stay compact."""
+    if not sup:
+        return {}
+    out = dict(
+        supervision_attempts=sup.get("attempts", []),
+        supervision_restarts=sup.get("restarts", 0),
+        supervision_backoff_seconds=sup.get("total_backoff_seconds", 0.0),
+    )
+    if sup.get("demotions"):
+        out["supervision_demotions"] = sup["demotions"]
+    if sup.get("regrids"):
+        out["supervision_regrids"] = sup["regrids"]
+    if sup.get("fault_log"):
+        out["supervision_fault_log"] = sup["fault_log"]
+    if sup.get("gave_up"):
+        out["supervision_gave_up"] = True
+    return out
+
+
 def _run_batched(args):
     """Batched mode: count every spec in --graphs with one engine call."""
     from ..core import count_triangles_many, triangle_count_oracle
@@ -727,7 +799,7 @@ def _run_stream(g, args):
             print(f"{k}: {v}")
 
 
-def _run_checkpointed(g, args):
+def _run_checkpointed(g, args, fault_plan=None):
     """Shift-at-a-time execution with mid-loop checkpoint/restart.
 
     The checkpointed state is the engine's *scan carry* (with the
@@ -745,7 +817,19 @@ def _run_checkpointed(g, args):
     vice versa) is refused loudly — the carry's position and arity
     (one generation vs two) do not transfer between step sequences, so
     a silent resume would count misaligned panels.
+
+    Supervised runs (``--inject-faults``/``--supervise``) drive the same
+    loop under :class:`repro.runtime.Supervisor`: each restart restores
+    the latest intact checkpoint (the manager quarantines corrupt steps)
+    and a ``DeviceLost`` re-factorizes the surviving devices via
+    :func:`repro.runtime.best_grid`, re-plans through the pipeline, and
+    restarts the count on the smaller grid — mid-schedule per-device
+    partials are **refused** across grids (DESIGN.md §8), so the regrid
+    counts from shift 0 into a fresh ``regrid_{q}x{q}`` subdirectory.
     """
+    import os
+
+    import jax
     import jax.numpy as jnp
     import numpy as np
 
@@ -754,46 +838,9 @@ def _run_checkpointed(g, args):
     from ..core.api import make_grid_mesh
     from ..core.cannon import build_cannon_stepper
     from ..pipeline import plan_cannon
+    from ..runtime import faultinject
 
     t0 = time.perf_counter()
-    q = args.grid
-    art = plan_cannon(
-        g, q, chunk=args.chunk, compact=not args.no_compact,
-    )
-    plan = art.plan
-    mesh = make_grid_mesh(q)
-    stepper = build_cannon_stepper(
-        plan, mesh,
-        use_step_mask=False if args.no_skip_mask else None,
-        double_buffer=not args.no_double_buffer,
-        compact=False if args.no_compact else None,
-    )
-    arrays = {k: jnp.asarray(v) for k, v in plan.device_arrays().items()}
-    statics = {
-        k: arrays[k]
-        for k in ("m_ti", "m_tj", "m_cnt", "step_keep")
-        if k in arrays
-    }
-    steps = (
-        list(stepper.live_steps)
-        if stepper.live_steps is not None
-        else list(range(q))
-    )
-    t1 = time.perf_counter()
-
-    mgr = CheckpointManager(args.ckpt_dir, keep=2, async_save=False)
-    n_carry = stepper.n_carry
-    # shape/dtype template for restore: carry leaves are operand-shaped
-    # (two payload generations when double-buffered) — no need to run
-    # the prime dispatch just to describe the checkpoint structure
-    ops = [arrays[k] for k in ("a_indptr", "a_indices", "b_indptr",
-                               "b_indices")]
-    state_like = {f"carry{i}": ops[i % len(ops)] for i in range(n_carry)}
-    state_like["acc"] = jnp.zeros((q, q), compat.default_count_dtype())
-    step_sig = ",".join(map(str, steps))
-    coll_sig = (
-        f"reduce={args.reduce_strategy},broadcast={args.broadcast or 'auto'}"
-    )
     cross_mode = (
         "checkpoint in {d} was written by a run with a different "
         "schedule shape ({why}) — the saved carry's position and arity "
@@ -803,78 +850,211 @@ def _run_checkpointed(g, args):
         "under another: resume with the original flags or start from a "
         "fresh --ckpt-dir"
     )
-    try:
-        step0, restored, extra = mgr.restore_latest(state_like)
-    except KeyError as e:  # carry arity mismatch: fewer/more leaves saved
-        raise SystemExit(
-            cross_mode.format(d=args.ckpt_dir, why=f"missing {e}")
-        ) from e
-    if restored is not None:
-        if extra.get("steps", step_sig) != step_sig:
+    coll_sig = (
+        f"reduce={args.reduce_strategy},broadcast={args.broadcast or 'auto'}"
+    )
+
+    def setup(q, ckpt_dir):
+        """Plan + stepper + checkpoint manager for one grid size.  Runs
+        once up front and again per DeviceLost regrid."""
+        art = plan_cannon(
+            g, q, chunk=args.chunk, compact=not args.no_compact,
+        )
+        plan = art.plan
+        mesh = make_grid_mesh(q)
+        stepper = build_cannon_stepper(
+            plan, mesh,
+            use_step_mask=False if args.no_skip_mask else None,
+            double_buffer=not args.no_double_buffer,
+            compact=False if args.no_compact else None,
+        )
+        arrays = {k: jnp.asarray(v) for k, v in plan.device_arrays().items()}
+        statics = {
+            k: arrays[k]
+            for k in ("m_ti", "m_tj", "m_cnt", "step_keep")
+            if k in arrays
+        }
+        steps = (
+            list(stepper.live_steps)
+            if stepper.live_steps is not None
+            else list(range(q))
+        )
+        mgr = CheckpointManager(ckpt_dir, keep=2, async_save=False)
+        n_carry = stepper.n_carry
+        # shape/dtype template for restore: carry leaves are
+        # operand-shaped (two payload generations when double-buffered)
+        # — no need to run the prime dispatch just to describe the
+        # checkpoint structure
+        ops = [arrays[k] for k in ("a_indptr", "a_indices", "b_indptr",
+                                   "b_indices")]
+        state_like = {f"carry{i}": ops[i % len(ops)] for i in range(n_carry)}
+        state_like["acc"] = jnp.zeros((q, q), compat.default_count_dtype())
+        return dict(
+            q=q, ckpt_dir=ckpt_dir, stepper=stepper, arrays=arrays,
+            statics=statics, steps=steps, mgr=mgr, n_carry=n_carry,
+            state_like=state_like, step_sig=",".join(map(str, steps)),
+            grid_sig=f"{q}x{q}",
+        )
+
+    env = setup(args.grid, args.ckpt_dir)
+    t1 = time.perf_counter()
+
+    def restore_or_prime(env):
+        from ..runtime.supervisor import check_partials_portable
+
+        try:
+            _, restored, extra = env["mgr"].restore_latest(env["state_like"])
+        except KeyError as e:  # carry arity mismatch: fewer/more leaves
+            raise SystemExit(
+                cross_mode.format(d=env["ckpt_dir"], why=f"missing {e}")
+            ) from e
+        if restored is None:
+            carry0 = env["stepper"].prime(env["arrays"])
+            st = {f"carry{i}": c for i, c in enumerate(carry0)}
+            st["acc"] = env["state_like"]["acc"]
+            return st, 0
+        check_partials_portable(extra, env["grid_sig"])
+        if extra.get("steps", env["step_sig"]) != env["step_sig"]:
             raise SystemExit(
                 cross_mode.format(
-                    d=args.ckpt_dir,
-                    why=f"steps [{extra['steps']}] vs [{step_sig}]",
+                    d=env["ckpt_dir"],
+                    why=f"steps [{extra['steps']}] vs [{env['step_sig']}]",
                 )
             )
         if extra.get("collectives", coll_sig) != coll_sig:
             raise SystemExit(
                 cross_mode.format(
-                    d=args.ckpt_dir,
+                    d=env["ckpt_dir"],
                     why=(
                         f"collectives [{extra['collectives']}] vs "
                         f"[{coll_sig}]"
                     ),
                 )
             )
-        st = restored
         start = int(extra["shift"])
         print(f"resumed at shift {start}")
-    else:
-        carry0 = stepper.prime(arrays)
-        st = {f"carry{i}": c for i, c in enumerate(carry0)}
-        st["acc"] = state_like["acc"]
-        start = 0
+        return restored, start
+
     failed = {"done": False}
-    todo = [s for s in steps if s >= start]
-    while todo:
-        s = todo.pop(0)
-        if (
-            args.fail_at_shift is not None
-            and s == args.fail_at_shift
-            and not failed["done"]
-        ):
-            failed["done"] = True
-            print(f"(injected failure at shift {s}; restarting from ckpt)")
-            step0, restored, extra = mgr.restore_latest(state_like)
-            if restored is not None:
-                st = restored
-                saved = int(extra["shift"])  # next shift to execute
-                todo = [t for t in steps if t >= saved]
-                s = todo.pop(0)  # noqa: PLW2901
-        out = stepper(
-            tuple(st[f"carry{i}"] for i in range(n_carry)) + (st["acc"],),
-            statics,
-            step=s,
+
+    def attempt(attempt_index, guard):
+        st, start = restore_or_prime(env)
+        stepper, statics = env["stepper"], env["statics"]
+        n_carry, mgr, steps = env["n_carry"], env["mgr"], env["steps"]
+        todo = [s for s in steps if s >= start]
+        while todo:
+            guard()
+            s = todo.pop(0)
+            if (
+                args.fail_at_shift is not None
+                and s == args.fail_at_shift
+                and not failed["done"]
+            ):
+                failed["done"] = True
+                print(
+                    f"(injected failure at shift {s}; restarting from ckpt)"
+                )
+                _, restored, extra = mgr.restore_latest(env["state_like"])
+                if restored is not None:
+                    st = restored  # noqa: PLW2901
+                    saved = int(extra["shift"])  # next shift to execute
+                    todo = [t for t in steps if t >= saved]
+                    s = todo.pop(0)  # noqa: PLW2901
+            faultinject.fire("step", step=s)
+            out = stepper(
+                tuple(st[f"carry{i}"] for i in range(n_carry))
+                + (st["acc"],),
+                statics,
+                step=s,
+            )
+            st = {f"carry{i}": out[i] for i in range(n_carry)}
+            st["acc"] = out[n_carry]
+            mgr.save(
+                s + 1, st,
+                extra={"shift": s + 1, "steps": env["step_sig"],
+                       "collectives": coll_sig,
+                       "grid": env["grid_sig"]},
+            )
+        return st
+
+    if fault_plan is not None or args.supervise:
+        from ..runtime import (
+            BackoffPolicy,
+            DeviceLost,
+            Supervisor,
+            best_grid,
         )
-        st = {f"carry{i}": out[i] for i in range(n_carry)}
-        st["acc"] = out[n_carry]
-        mgr.save(
-            s + 1, st,
-            extra={"shift": s + 1, "steps": step_sig,
-                   "collectives": coll_sig},
+        from ..runtime.supervisor import (
+            GridTransferRefused,
+            check_partials_portable,
         )
+
+        sup = Supervisor(
+            max_restarts=args.restart_budget,
+            attempt_deadline=args.attempt_deadline,
+            backoff=BackoffPolicy(base=0.02, max_delay=0.5),
+        )
+
+        def on_fault(e, rec):
+            if fault_plan is not None and fault_plan.log:
+                last = fault_plan.log[-1]
+                rec.point, rec.step = last.get("point"), last.get("step")
+            if not isinstance(e, DeviceLost):
+                return None
+            remaining = len(jax.devices()) - e.lost
+            # the stepper substrate is Cannon-only: square survivors
+            r, _ = best_grid(remaining, require_square=True)
+            if r < 1:
+                raise RuntimeError(
+                    f"cannot regrid: {e.lost} devices lost, "
+                    f"{remaining} remaining"
+                )
+            # surface the refusal loudly: probe the old grid's latest
+            # checkpoint against the new signature, then drop it
+            try:
+                _, restored, extra = env["mgr"].restore_latest(
+                    env["state_like"]
+                )
+                if restored is not None:
+                    check_partials_portable(extra, f"{r}x{r}")
+            except GridTransferRefused as refuse:
+                print(f"(device lost: {refuse})")
+            except Exception:  # old-grid dir unreadable: nothing to move
+                pass
+            env["mgr"].close()
+            new_dir = os.path.join(args.ckpt_dir, f"regrid_{r}x{r}")
+            env.clear()
+            env.update(setup(r, new_dir))
+            sup.report.regrids.append(
+                dict(lost=e.lost, grid=[r, r], ckpt_dir=new_dir)
+            )
+            return f"regrid to {r}x{r}"
+
+        with faultinject.armed(fault_plan):
+            st = sup.run(attempt, on_fault=on_fault)
+        sup_dict = sup.report.to_dict()
+        if fault_plan is not None:
+            sup_dict["fault_log"] = list(fault_plan.log)
+    else:
+        st = attempt(0, lambda: None)
+        sup_dict = None
+
     total = int(np.asarray(st["acc"]).sum())
     t2 = time.perf_counter()
-    mgr.close()
-    return total, dict(
+    env["mgr"].close()
+    out = dict(
         triangles=total,
         ppt_seconds=round(t1 - t0, 4),
         tct_seconds=round(t2 - t1, 4),
         checkpointed=True,
-        live_steps=len(steps),
-        schedule_shifts=q,
+        live_steps=len(env["steps"]),
+        schedule_shifts=env["q"],
     )
+    if sup_dict is not None:
+        if sup_dict.get("regrids"):
+            out["final_grid"] = [env["q"], env["q"]]
+        out.update(_supervision_fields(sup_dict))
+    return total, out
 
 
 if __name__ == "__main__":

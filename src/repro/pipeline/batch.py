@@ -273,6 +273,9 @@ def count_triangles_many(
     if method == "search2" and schedule != "cannon":
         raise ValueError("method 'search2' is a cannon-schedule path")
 
+    from ..runtime import faultinject
+
+    faultinject.fire("plan_stage", kind="many")
     t0 = time.perf_counter()
     if mesh is None:
         from ..core.api import make_grid_mesh
@@ -304,6 +307,7 @@ def count_triangles_many(
         cache.put(key, prog)
     t1 = time.perf_counter()
 
+    faultinject.fire("device_stage")
     totals = np.asarray(prog.fn(**prog.staged))
     counts = [
         compat.check_count_overflow(int(t), count_dtype) for t in totals

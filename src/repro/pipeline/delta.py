@@ -294,6 +294,9 @@ def apply_delta(
                 # have no splice path) — refuse loudly, repack instead
                 splice_refused = "hub_split"
             else:
+                from ..runtime import faultinject
+
+                faultinject.fire("delta_splice")
                 art = _splice_cannon(
                     artifact, g2, eff, eff_add, eff_rem, depth, chain,
                     dirty_limit, lineage,

@@ -105,6 +105,9 @@ def _hub_stage(g2, grid, hub_c, chunk, seconds):
 
 def _drive(kind, graph, key_tail, cache, pack):
     """Shared driver: ingest (digest + cache probe) then relabel + pack."""
+    from ..runtime import faultinject
+
+    faultinject.fire("plan_stage", kind=kind)
     cache = cache if cache is not None else default_cache()
     seconds = {}
     t0 = time.perf_counter()

@@ -2,13 +2,18 @@
 
 Cannon needs a square grid; after losing devices the framework falls back
 to the best rectangular factorization under the SUMMA schedule (the
-paper's own §8 suggestion) and replans.  Checkpointed TC state (shift
-index + partial counts) or training state (global arrays) restores onto
-the new mesh via :mod:`repro.ckpt`.
+paper's own §8 suggestion) and replans.  Since PR 10, ``replan_elastic``
+plans through :mod:`repro.pipeline` — the content-addressed plan cache,
+skip masks, schedule compaction, rebalance and hub-split all survive an
+elastic re-plan, where the legacy path silently dropped every one of
+them.  Checkpointed mid-schedule partials do **not** transfer across
+grids (see :func:`repro.runtime.supervisor.check_partials_portable`);
+only completed-graph / stream-round boundaries are portable.
 """
 from __future__ import annotations
 
 import math
+import warnings
 from typing import Optional, Tuple
 
 __all__ = ["best_grid", "replan_elastic"]
@@ -37,12 +42,69 @@ def best_grid(n_devices: int, *, require_square: bool = False) -> Tuple[int, int
     return best
 
 
-def replan_elastic(graph, n_devices: int, *, chunk: int = 512):
-    """Re-plan for a new device count: square -> Cannon, else SUMMA."""
-    from ..core.plan import build_plan
-    from ..core.summa import build_summa_plan
+def replan_elastic(
+    graph,
+    n_devices: int,
+    *,
+    schedule: Optional[str] = None,
+    chunk: int = 512,
+    reorder: bool = True,
+    cyclic_p: Optional[int] = None,
+    compact: bool = True,
+    rebalance_trials: int = 0,
+    hub_split=False,
+    cache=None,
+    legacy: bool = False,
+):
+    """Re-plan for a new device count through the pipeline planner.
 
-    r, c = best_grid(n_devices)
-    if r == c:
-        return "cannon", build_plan(graph, r, chunk=chunk), (r, c)
-    return "summa", build_summa_plan(graph, r, c, chunk=chunk), (r, c)
+    Returns ``(schedule_name, artifact, (r, c))`` where ``artifact`` is a
+    :class:`repro.pipeline.PlanArtifact` — plan features (skip masks,
+    compaction, rebalance seed, hub cut) and cache behavior are
+    identical to a cold pipeline plan at the new grid, so nothing is
+    lost to elasticity.  ``schedule="cannon"`` forces the square
+    factorization; the default picks Cannon when the best factorization
+    is square and SUMMA otherwise.
+
+    ``legacy=True`` (deprecated) reproduces the pre-PR-10 raw-plan
+    return built by the legacy planners — no cache, no masks, no
+    compaction; it exists only for old callers and will be removed.
+    """
+    if legacy:
+        warnings.warn(
+            "replan_elastic(legacy=True) bypasses the pipeline (no plan "
+            "cache, skip masks, compaction, rebalance or hub-split) and "
+            "will be removed; drop legacy= to plan through the pipeline",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from ..core.plan import build_plan
+        from ..core.summa import build_summa_plan
+
+        r, c = best_grid(n_devices)
+        if r == c:
+            return "cannon", build_plan(graph, r, chunk=chunk), (r, c)
+        return "summa", build_summa_plan(graph, r, c, chunk=chunk), (r, c)
+
+    from ..pipeline import plan_cannon, plan_summa
+
+    if schedule == "cannon":
+        r, c = best_grid(n_devices, require_square=True)
+    elif schedule == "summa":
+        r, c = best_grid(n_devices)
+    else:
+        r, c = best_grid(n_devices)
+    common = dict(
+        chunk=chunk,
+        reorder=reorder,
+        cyclic_p=cyclic_p,
+        compact=compact,
+        rebalance_trials=rebalance_trials,
+        hub_split=hub_split,
+        cache=cache,
+    )
+    if r == c and schedule != "summa":
+        art = plan_cannon(graph, r, **common)
+        return "cannon", art, (r, c)
+    art = plan_summa(graph, r, c, **common)
+    return "summa", art, (r, c)

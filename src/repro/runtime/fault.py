@@ -1,18 +1,15 @@
 """Fault-tolerant execution wrapper: checkpoint/restart with retries.
 
-``run_with_restarts`` drives a step function with periodic checkpoints;
-on failure (device loss / preemption / injected fault) it restores the
-latest checkpoint — optionally onto a smaller elastic grid — and
-continues.  The TC driver uses shift-level state (shift index + partial
-counts); training uses (step, params, opt, rng).
+``run_with_restarts`` is the seed-era front door, kept for its callers;
+since PR 10 it delegates to :func:`repro.runtime.supervisor.supervise_loop`
+— the same supervised driver the TC stepper uses — so restarts get
+exponential backoff + jitter, a structured attempt record, and corrupt
+checkpoints are quarantined instead of crashing the restore.
 """
 from __future__ import annotations
 
 import logging
-import time
 from typing import Callable, Optional
-
-from ..ckpt import CheckpointManager
 
 log = logging.getLogger(__name__)
 
@@ -33,40 +30,24 @@ def run_with_restarts(
     """Run ``step_fn`` n_steps times with checkpoint/restart semantics.
 
     ``fault_injector(step)`` may raise to simulate failures (used by tests
-    and the fault-tolerance example).  Returns the final state dict.
+    and the fault-tolerance example).  Any exception is restartable, as
+    before.  Returns the final state dict.
     """
-    mgr = CheckpointManager(ckpt_dir, keep=2, async_save=False)
-    restarts = 0
-    state = None
-    start = 0
+    from .supervisor import BackoffPolicy, Supervisor, supervise_loop
 
-    like = state_like or init_state()
-    got_step, restored, extra = mgr.restore_latest(like)
-    if restored is not None:
-        state, start = restored, int(extra["next_step"])
-        log.info("resumed from step %d", start)
-    else:
-        state = init_state()
-
-    step = start
-    while step < n_steps:
-        try:
-            if fault_injector is not None:
-                fault_injector(step)
-            state = step_fn(state, step)
-            step += 1
-            if step % ckpt_every == 0 or step == n_steps:
-                mgr.save(step, state, extra={"next_step": step})
-        except Exception as e:  # noqa: BLE001
-            restarts += 1
-            if restarts > max_restarts:
-                raise
-            log.warning("step %d failed (%s); restarting", step, e)
-            got_step, restored, extra = mgr.restore_latest(like)
-            if restored is None:
-                state, step = init_state(), 0
-            else:
-                state, step = restored, int(extra["next_step"])
-            time.sleep(0.01)
-    mgr.close()
+    sup = Supervisor(
+        max_restarts=max_restarts,
+        backoff=BackoffPolicy(base=0.01, max_delay=0.05),
+        retry_on=(Exception,),
+    )
+    state, _report = supervise_loop(
+        init_state,
+        step_fn,
+        n_steps=n_steps,
+        ckpt_dir=ckpt_dir,
+        ckpt_every=ckpt_every,
+        supervisor=sup,
+        state_like=state_like,
+        fault_injector=fault_injector,
+    )
     return state
